@@ -1,0 +1,63 @@
+"""Shared benchmark utilities: scaled paper datasets + sampler zoo."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    labor_sampler,
+    ladies_sampler,
+    neighbor_sampler,
+    pad_seeds,
+    pladies_sampler,
+    suggest_caps,
+)
+from repro.graph import paper_dataset
+
+# CPU-budget scales per dataset (keep |E| ~ 10^5 so 1-core runs are quick)
+SCALES = {"reddit": 0.004, "products": 0.003, "yelp": 0.01, "flickr": 0.08}
+
+
+def load(name: str, feature_dim=32):
+    return paper_dataset(name, scale=SCALES[name], seed=0,
+                         feature_dim=feature_dim)
+
+
+def make_caps(ds, batch, fanouts, safety=2.5):
+    g = ds.graph
+    return suggest_caps(batch, fanouts, g.num_edges / g.num_vertices,
+                        ds.max_in_degree, safety=safety,
+                        num_vertices=g.num_vertices, num_edges=g.num_edges)
+
+
+def sampler_zoo(fanouts, caps, layer_sizes=None):
+    zoo = {
+        "NS": neighbor_sampler(fanouts, caps),
+        "LABOR-0": labor_sampler(fanouts, caps, 0),
+        "LABOR-1": labor_sampler(fanouts, caps, 1),
+        "LABOR-*": labor_sampler(fanouts, caps, "*"),
+    }
+    if layer_sizes is not None:
+        zoo["LADIES"] = ladies_sampler(layer_sizes, caps)
+        zoo["PLADIES"] = pladies_sampler(layer_sizes, caps)
+    return zoo
+
+
+def layer_counts(ds, sampler, batch, trials=5, seed=0):
+    """Mean (|V^l|, |E^l|) per layer over trials (paper Table 2 columns)."""
+    g = ds.graph
+    rng = np.random.default_rng(seed)
+    vs, es, times = [], [], []
+    for t in range(trials):
+        seeds_np = rng.choice(ds.train_idx, size=batch, replace=False)
+        seeds = pad_seeds(jnp.asarray(seeds_np), batch)
+        t0 = time.perf_counter()
+        blocks = sampler.sample(g, seeds, jax.random.key(1000 + t))
+        jax.block_until_ready(blocks[-1].next_seeds)
+        times.append(time.perf_counter() - t0)
+        vs.append([int(b.num_next) for b in blocks])
+        es.append([int(b.num_edges) for b in blocks])
+    return (np.mean(vs, 0), np.mean(es, 0), float(np.median(times)))

@@ -1,0 +1,62 @@
+"""Paper Fig 1/3 (same batch size) and Fig 2 (same vertex budget):
+training-convergence comparison across samplers. Reports final loss,
+val accuracy, and cumulative sampled vertices — the x-axis of Fig 1.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import load
+from repro.runtime.trainer import GNNTrainConfig, evaluate_gnn, train_gnn
+
+SAMPLERS = ("ns", "labor-0", "labor-1", "labor-*", "pladies", "ladies")
+
+
+def run(dataset="products", steps=40, batch=256, budget_mode=False,
+        budget_batches=None):
+    ds = load(dataset)
+    rows = []
+    # paper Fig 2 excludes LADIES: its vertex count is not a function of
+    # the batch size, so a vertex budget does not constrain it
+    samplers = (tuple(budget_batches) if budget_mode and budget_batches
+                else SAMPLERS)
+    for sampler in samplers:
+        bs = batch
+        if budget_mode and budget_batches:
+            bs = budget_batches.get(sampler, batch)
+        layer_sizes = None
+        if sampler in ("ladies", "pladies"):
+            layer_sizes = (bs * 4, bs * 8, bs * 12)
+        cfg = GNNTrainConfig(hidden=64, fanouts=(10, 10, 10), sampler=sampler,
+                             layer_sizes=layer_sizes, batch_size=bs,
+                             steps=steps, lr=3e-3, seed=0)
+        out = train_gnn(ds, cfg)
+        h = out["history"]
+        acc = evaluate_gnn(ds, out["params"], cfg, ds.val_idx, batches=2)
+        rows.append(dict(
+            sampler=sampler, batch=bs,
+            final_loss=np.mean([x["loss"] for x in h[-5:]]),
+            val_acc=acc,
+            cum_vertices=int(sum(x["sampled_v"] for x in h)),
+            cum_edges=int(sum(x["sampled_e"] for x in h)),
+            wall_s=out["wall_time"],
+        ))
+    return rows
+
+
+def main(csv=True, budget=False):
+    rows = run(budget_mode=budget)
+    tag = "fig2" if budget else "fig1"
+    if csv:
+        print(f"{tag}.sampler,batch,final_loss,val_acc,cum_vertices,"
+              "cum_edges,wall_s")
+        for r in rows:
+            print(f"{tag}.{r['sampler']},{r['batch']},{r['final_loss']:.4f},"
+                  f"{r['val_acc']:.4f},{r['cum_vertices']},{r['cum_edges']},"
+                  f"{r['wall_s']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(budget="--budget" in sys.argv)

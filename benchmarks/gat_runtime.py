@@ -1,0 +1,70 @@
+"""Paper Table 5 (GATv2 runtime): per-iteration wall time per sampler.
+The paper's point: GATv2 cost tracks |E| — LADIES variants OOM/slow,
+LABOR-0 fastest. On CPU we measure the same ordering at small scale."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import load, make_caps, sampler_zoo
+from repro.models.gnn import gatv2_apply, gatv2_init
+from repro.optim import adam
+from repro.runtime.trainer import gather_feats, make_gnn_train_step
+
+FANOUTS = (10, 10, 10)
+BATCH = 256
+
+
+def run(dataset="yelp", iters=4):
+    ds = load(dataset)
+    caps = make_caps(ds, BATCH, FANOUTS)
+    lab = sampler_zoo(FANOUTS, caps)["LABOR-*"]
+    from benchmarks.common import layer_counts
+    v_star, _, _ = layer_counts(ds, lab, BATCH, trials=2)
+    sizes = tuple(max(int(v) - BATCH, 16) for v in v_star)
+    zoo = sampler_zoo(FANOUTS, caps, layer_sizes=sizes)
+
+    feats = jnp.asarray(ds.features)
+    labels = jnp.asarray(ds.labels)
+    params = gatv2_init(jax.random.key(0), ds.features.shape[1], 64,
+                        int(ds.labels.max()) + 1)
+    opt_cfg = adam.AdamConfig(lr=1e-3)
+    opt = adam.init_state(params, opt_cfg)
+    step = make_gnn_train_step(gatv2_apply, opt_cfg)
+
+    rows = []
+    rng = np.random.default_rng(0)
+    for algo, smp in zoo.items():
+        times, edges = [], []
+        p, o = params, opt
+        for t in range(iters):
+            seeds_np = rng.choice(ds.train_idx, size=BATCH, replace=False)
+            from repro.core import pad_seeds
+            seeds = pad_seeds(jnp.asarray(seeds_np), BATCH)
+            blocks = smp.sample(ds.graph, seeds, jax.random.key(t))
+            bf = gather_feats(feats, blocks[-1])
+            lab_b = labels[jnp.where(seeds >= 0, seeds, 0)]
+            t0 = time.perf_counter()
+            p, o, m = step(p, o, blocks, bf, lab_b)
+            jax.block_until_ready(m["loss"])
+            times.append(time.perf_counter() - t0)
+            edges.append(sum(int(b.num_edges) for b in blocks))
+        rows.append(dict(algo=algo, iter_ms=float(np.median(times[1:])) * 1e3,
+                         edges=int(np.mean(edges))))
+    return rows
+
+
+def main(csv=True):
+    rows = run()
+    if csv:
+        print("table5.algo,iter_ms,total_edges")
+        for r in rows:
+            print(f"table5.{r['algo']},{r['iter_ms']:.1f},{r['edges']}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Kernel micro-benchmarks. On this CPU container the Pallas kernels run
+in interpret mode (correctness only), so wall times here measure the XLA
+reference paths; the kernels' TPU value is argued via the roofline model
+(EXPERIMENTS.md §Perf). We report the reference timings + working-set
+sizes used in those napkin estimates."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.spmm.ref import spmm_block_ref
+
+
+def _time(fn, *args, reps=5):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def run():
+    rows = []
+    rng = np.random.default_rng(0)
+    # spmm: products-like block aggregation
+    E, T, S, F = 20000, 6000, 2000, 128
+    dst = np.sort(rng.integers(0, S, E)).astype(np.int32)
+    src = rng.integers(0, T, E).astype(np.int32)
+    w = rng.normal(size=E).astype(np.float32)
+    mask = np.ones(E, bool)
+    h = jnp.asarray(rng.normal(size=(T, F)), jnp.float32)
+    f = jax.jit(lambda *a: spmm_block_ref(*a, num_rows=S))
+    dt = _time(f, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+               jnp.asarray(mask), h)
+    rows.append(("spmm_ref_e20k_f128", dt * 1e6,
+                 f"bytes={E*F*4 + S*F*4}"))
+    # flash attention ref
+    B, S2, H, hd = 2, 1024, 8, 64
+    q = jnp.asarray(rng.normal(size=(B, S2, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S2, H // 2, hd)), jnp.float32)
+    f2 = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
+    dt = _time(f2, q, k, k)
+    rows.append(("attention_ref_s1024", dt * 1e6,
+                 f"flops={4*B*S2*S2*H*hd}"))
+    return rows
+
+
+def main(csv=True):
+    rows = run()
+    if csv:
+        for name, us, derived in rows:
+            print(f"kernel.{name},{us:.0f},{derived}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

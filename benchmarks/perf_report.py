@@ -1,0 +1,59 @@
+"""Render the §Perf hillclimb log from results/perf/*.json."""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+ORDER = [
+    ("qwen3", ["base", "logits_gather", "seqcarry_mb4", "seqcarry_mb2",
+               "mb8", "mb8_cf105"]),
+    ("gemma2", ["base", "logits_gather", "mb1", "mb1_seqcarry", "seq_attn",
+                "seq_attn_mb8"]),
+    ("gnn", ["ns", "labor0", "labor_star", "labor0_int8",
+             "labor0_tightcaps", "ns_provisioned", "labor0_provisioned",
+             "laborstar_provisioned"]),
+]
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/perf"
+    for cell, variants in ORDER:
+        print(f"\n#### {cell}\n")
+        print("| variant | compute | memory* | collective | dominant | "
+              "peak GiB | roofline | Δ dominant vs base |")
+        print("|---|---|---|---|---|---|---|---|")
+        base_dom = None
+        for v in variants:
+            p = os.path.join(d, f"{cell}__{v}.json")
+            if not os.path.exists(p):
+                print(f"| {v} | (missing) | | | | | | |")
+                continue
+            t = json.load(open(p))
+            dom_val = t[f"t_{t['dominant']}_s"]
+            if base_dom is None:
+                base_dom = max(t["t_compute_s"], t["t_memory_s"],
+                               t["t_collective_s"])
+                delta = "—"
+            else:
+                cur = max(t["t_compute_s"], t["t_memory_s"],
+                          t["t_collective_s"])
+                delta = f"{(1 - cur / base_dom) * 100:+.1f}%"
+            peak = t.get("peak_gib", 0)
+            print(f"| {v} | {fmt_s(t['t_compute_s'])} | "
+                  f"{fmt_s(t['t_memory_s'])} | "
+                  f"{fmt_s(t['t_collective_s'])} | {t['dominant']} | "
+                  f"{peak:.2f} | {t.get('roofline_fraction', 0):.4f} | "
+                  f"{delta} |")
+
+
+if __name__ == "__main__":
+    main()

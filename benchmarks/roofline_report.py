@@ -1,0 +1,106 @@
+"""Aggregate dry-run JSON records into the EXPERIMENTS.md §Dry-run and
+§Roofline markdown tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report results/dryrun
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ARCH_ORDER = [
+    "llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b", "mamba2-370m",
+    "qwen1.5-110b", "stablelm-1.6b", "gemma2-2b", "minitron-4b",
+    "llama-3.2-vision-11b", "whisper-tiny", "zamba2-2.7b", "labor-gcn",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "train_batch"]
+
+
+def load(dirpath):
+    recs = {}
+    for f in glob.glob(os.path.join(dirpath, "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"])] = r
+    return recs
+
+
+def fmt_s(x):
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x*1e3:.1f}ms"
+    return f"{x*1e6:.0f}us"
+
+
+def roofline_table(recs, mesh="pod"):
+    lines = [
+        "| arch | shape | compute | memory* | collective | dominant | "
+        "6ND/HLO | roofline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh))
+            if not r:
+                continue
+            if r["status"] != "ok":
+                lines.append(f"| {arch} | {shape} | FAIL | | | | | |")
+                continue
+            t = r["roofline"]
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(t['t_compute_s'])} | "
+                f"{fmt_s(t['t_memory_s'])} | {fmt_s(t['t_collective_s'])} | "
+                f"{t['dominant']} | {t['useful_flops_ratio']:.2f} | "
+                f"{t['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def dryrun_table(recs):
+    lines = [
+        "| arch | shape | mesh | compile | peak GiB/dev | flops/dev | "
+        "bytes/dev | wire/dev | #colls |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            for mesh in ("pod", "multipod"):
+                r = recs.get((arch, shape, mesh))
+                if not r:
+                    continue
+                if r["status"] != "ok":
+                    lines.append(
+                        f"| {arch} | {shape} | {mesh} | FAIL: "
+                        f"{r['error'][:60]} | | | | | |")
+                    continue
+                t = r["roofline"]
+                mem = r["memory"]["peak_per_device"] / 2**30
+                nc = sum(1 for _ in t.get("collectives_by_kind", {}))
+                lines.append(
+                    f"| {arch} | {shape} | {mesh} | {r['compile_s']}s | "
+                    f"{mem:.2f} | {t['flops_per_device']:.2e} | "
+                    f"{t['bytes_per_device']:.2e} | "
+                    f"{t['wire_bytes_per_device']:.2e} | "
+                    f"{len(t.get('collectives_by_kind', {}))} kinds |")
+    return "\n".join(lines)
+
+
+def summary(recs):
+    ok = sum(1 for r in recs.values() if r["status"] == "ok")
+    return f"{ok}/{len(recs)} cells compiled OK"
+
+
+def main():
+    d = sys.argv[1] if len(sys.argv) > 1 else "results/dryrun"
+    recs = load(d)
+    print("##", summary(recs))
+    print("\n### Roofline (single-pod 16x16 = 256 chips)\n")
+    print(roofline_table(recs, "pod"))
+    print("\n### Dry-run records (both meshes)\n")
+    print(dryrun_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: one module per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run table2     # one table
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+BENCHES = ("table2", "table3", "table4", "fig1", "fig2", "table5", "kernels")
+
+
+def main() -> None:
+    which = set(sys.argv[1:]) or set(BENCHES)
+    t0 = time.time()
+    if "table2" in which:
+        from benchmarks import table2_sampling_efficiency
+        table2_sampling_efficiency.main()
+    if "table3" in which:
+        from benchmarks import table3_budget_batchsize
+        table3_budget_batchsize.main()
+    if "table4" in which:
+        from benchmarks import table4_fixed_point
+        table4_fixed_point.main()
+    if "fig1" in which:
+        from benchmarks import convergence
+        convergence.main(budget=False)
+    if "fig2" in which:
+        # budget-mode batches mirror Table 3's method at our scale
+        from benchmarks import table3_budget_batchsize as t3
+        rows = t3.run(datasets=("products",))
+        m = rows[0]
+        from benchmarks.convergence import run as conv_run
+        out = conv_run(dataset="products", budget_mode=True,
+                       budget_batches={"labor-*": m["LABOR-*"],
+                                       "labor-1": m["LABOR-1"],
+                                       "labor-0": m["LABOR-0"],
+                                       "ns": m["NS"]})
+        print("fig2.sampler,batch,final_loss,val_acc,cum_vertices,"
+              "cum_edges,wall_s")
+        for r in out:
+            print(f"fig2.{r['sampler']},{r['batch']},{r['final_loss']:.4f},"
+                  f"{r['val_acc']:.4f},{r['cum_vertices']},{r['cum_edges']},"
+                  f"{r['wall_s']:.1f}")
+    if "table5" in which:
+        from benchmarks import gat_runtime
+        gat_runtime.main()
+    if "kernels" in which:
+        from benchmarks import kernel_bench
+        kernel_bench.main()
+    print(f"# total bench time {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

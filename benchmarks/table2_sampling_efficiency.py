@@ -1,0 +1,47 @@
+"""Paper Table 2: vertices/edges sampled per layer, per sampler, per
+dataset (scaled), plus sampling wall time. The paper's claims checked:
+  * |V^3|: LABOR-* < LABOR-1 < LABOR-0 < NS (up to 7x on dense graphs)
+  * |E^3|: LADIES variants >> LABOR variants (up to 13x)
+  * gap shrinks as avg_degree -> fanout (flickr).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import layer_counts, load, make_caps, sampler_zoo
+
+FANOUTS = (10, 10, 10)
+BATCH = 256
+
+
+def run(datasets=("reddit", "products", "yelp", "flickr"), trials=5):
+    rows = []
+    for name in datasets:
+        ds = load(name)
+        caps = make_caps(ds, BATCH, FANOUTS)
+        # match LADIES budgets to LABOR-* vertex counts (paper method)
+        lab = sampler_zoo(FANOUTS, caps)["LABOR-*"]
+        v_star, _, _ = layer_counts(ds, lab, BATCH, trials=3)
+        sizes = tuple(max(int(v) - BATCH, 16) for v in v_star)
+        zoo = sampler_zoo(FANOUTS, caps, layer_sizes=sizes)
+        for algo, smp in zoo.items():
+            v, e, t = layer_counts(ds, smp, BATCH, trials=trials)
+            rows.append(dict(dataset=name, algo=algo,
+                             v1=v[0], e1=e[0], v2=v[1], e2=e[1],
+                             v3=v[2], e3=e[2], sample_ms=t * 1e3))
+    return rows
+
+
+def main(csv=True):
+    rows = run()
+    if csv:
+        print("table2.dataset,algo,V1,E1,V2,E2,V3,E3,sample_ms")
+        for r in rows:
+            print(f"table2.{r['dataset']},{r['algo']},{r['v1']:.0f},"
+                  f"{r['e1']:.0f},{r['v2']:.0f},{r['e2']:.0f},{r['v3']:.0f},"
+                  f"{r['e3']:.0f},{r['sample_ms']:.1f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,41 @@
+"""Paper Table 4: |V^3| (thousands in the paper; raw counts here) vs the
+number of importance-sampling fixed-point iterations — monotone
+decreasing, most of the win in iteration 1 (§4.3, §A.5)."""
+from __future__ import annotations
+
+from benchmarks.common import layer_counts, load, make_caps
+from repro.core import labor_sampler, neighbor_sampler
+
+FANOUTS = (10, 10, 10)
+BATCH = 256
+
+
+def run(datasets=("reddit", "products", "yelp", "flickr"), trials=4):
+    rows = []
+    for name in datasets:
+        ds = load(name)
+        caps = make_caps(ds, BATCH, FANOUTS)
+        row = {"dataset": name}
+        v, _, _ = layer_counts(ds, neighbor_sampler(FANOUTS, caps), BATCH,
+                               trials=trials)
+        row["NS"] = v[-1]
+        for it in (0, 1, 2, 3, "*"):
+            smp = labor_sampler(FANOUTS, caps, it)
+            v, _, _ = layer_counts(ds, smp, BATCH, trials=trials)
+            row[str(it)] = v[-1]
+        rows.append(row)
+    return rows
+
+
+def main(csv=True):
+    rows = run()
+    if csv:
+        print("table4.dataset,NS,it0,it1,it2,it3,it_star")
+        for r in rows:
+            print(f"table4.{r['dataset']},{r['NS']:.0f},{r['0']:.0f},"
+                  f"{r['1']:.0f},{r['2']:.0f},{r['3']:.0f},{r['*']:.0f}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

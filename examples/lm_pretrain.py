@@ -1,0 +1,68 @@
+"""LM pretraining driver: a ~20M-parameter gemma2-family model trained a
+few hundred steps on the synthetic bigram stream (loss drops well below
+unigram entropy, proving the full train loop + checkpointing work e2e).
+
+  PYTHONPATH=src python examples/lm_pretrain.py --steps 200
+"""
+import argparse
+import dataclasses
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs as cfgreg
+from repro.data.tokens import BigramStream
+from repro.models.transformer import lm, stack
+from repro.optim import adam
+from repro.runtime import checkpoint as ck
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+
+    base = cfgreg.get_config("gemma2-2b")
+    cfg = dataclasses.replace(
+        base, num_layers=6, d_model=256, n_heads=4, n_kv_heads=2,
+        head_dim=64, d_ff=1024, vocab=2048, window=64,
+        query_scale=64 ** -0.5, dtype="float32", scan_layers=False,
+        remat=False)
+    params = stack.init_params(jax.random.key(0), cfg)
+    n = sum(p.size for p in jax.tree.leaves(params))
+    print(f"model: gemma2-family, {n/1e6:.1f}M params")
+
+    opt_cfg = adam.AdamConfig(lr=3e-3)
+    opt = adam.init_state(params, opt_cfg)
+    sched = adam.cosine_schedule(1.0, warmup=20, total=args.steps)
+    step = jax.jit(lm.make_train_step(cfg, opt_cfg, lr_schedule=sched))
+    stream = BigramStream(cfg.vocab, seed=0, branching=4)
+
+    ckpt_dir = args.ckpt_dir or tempfile.mkdtemp(prefix="lm_ckpt_")
+    saver = ck.AsyncSaver(ckpt_dir, keep=2)
+    t0 = time.time()
+    for i in range(args.steps):
+        toks, labels = stream.batch(args.batch, args.seq)
+        params, opt, m = step(params, opt,
+                              {"tokens": jnp.asarray(toks),
+                               "labels": jnp.asarray(labels)})
+        if (i + 1) % 20 == 0:
+            print(f"step {i+1:4d} loss {float(m['loss']):.4f} "
+                  f"({(i+1)*args.batch*args.seq/(time.time()-t0):.0f} tok/s)")
+        if (i + 1) % 100 == 0:
+            saver.save(i + 1, {"params": params, "opt": opt})
+    saver.wait()
+    # unigram entropy of a branching-4 bigram chain is ~ln(4)=1.386; a
+    # converged model should be well below ln(vocab)=7.6 and near ln(4)
+    print(f"final loss {float(m['loss']):.4f} "
+          f"(ln(vocab)={jnp.log(cfg.vocab):.2f}, ln(branching)=1.39)")
+    print(f"checkpoints in {ckpt_dir}: steps {ck.latest_steps(ckpt_dir)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: train the paper's 3-layer GCN with LABOR sampling on a
+synthetic products-like graph and compare against Neighbor Sampling.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.graph import paper_dataset
+from repro.runtime.trainer import GNNTrainConfig, evaluate_gnn, train_gnn
+
+
+def main():
+    ds = paper_dataset("products", scale=0.005, seed=0, feature_dim=64)
+    g = ds.graph
+    print(f"graph: |V|={g.num_vertices} |E|={g.num_edges} "
+          f"avg_deg={g.num_edges / g.num_vertices:.1f}")
+
+    results = {}
+    for sampler in ("labor-0", "ns"):
+        cfg = GNNTrainConfig(
+            model="gcn", hidden=128, fanouts=(10, 10, 10), sampler=sampler,
+            batch_size=512, steps=60, lr=3e-3, seed=0,
+        )
+        out = train_gnn(ds, cfg)
+        acc = evaluate_gnn(ds, out["params"], cfg, ds.val_idx, batches=2)
+        h = out["history"]
+        results[sampler] = dict(
+            loss=np.mean([x["loss"] for x in h[-10:]]),
+            acc=acc,
+            vertices_per_step=np.mean([x["sampled_v"] for x in h]),
+            edges_per_step=np.mean([x["sampled_e"] for x in h]),
+        )
+
+    print(f"\n{'sampler':<10}{'final loss':>12}{'val acc':>10}"
+          f"{'V/step':>10}{'E/step':>10}")
+    for name, r in results.items():
+        print(f"{name:<10}{r['loss']:>12.4f}{r['acc']:>10.4f}"
+              f"{r['vertices_per_step']:>10.0f}{r['edges_per_step']:>10.0f}")
+    ratio = results["ns"]["vertices_per_step"] / results["labor-0"]["vertices_per_step"]
+    print(f"\nLABOR-0 samples {ratio:.2f}x fewer vertices than NS at "
+          "matched quality — the paper's headline claim.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Batched serving example: prefill a batch of prompts, then decode with
+the KV-cache serve step (the same function the dry-run lowers at 32k/500k
+scale on the production mesh).
+
+  PYTHONPATH=src python examples/serve_decode.py --arch zamba2-2.7b
+"""
+import argparse
+import subprocess
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    args = ap.parse_args()
+    # delegate to the serving launcher with a reduced config
+    cmd = [sys.executable, "-m", "repro.launch.serve", "--arch", args.arch,
+           "--reduce", "--batch", "4", "--prompt-len", "32", "--gen", "16"]
+    raise SystemExit(subprocess.call(cmd))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: LABOR layer-neighbor sampling, production-scale JAX framework."""
+__version__ = "1.0.0"

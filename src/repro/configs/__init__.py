@@ -1,0 +1,71 @@
+"""Architecture registry: ``get_config("<arch-id>")`` for every assigned
+architecture (plus the paper's own labor-gcn workloads).
+
+Shape-cell skips (see DESIGN.md §Arch-applicability):
+  * long_500k requires sub-quadratic attention — only the SSM/hybrid
+    archs run it; pure full-attention archs record a skip.
+"""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs import (
+    gemma2_2b,
+    labor_gcn,
+    llama4_maverick_400b_a17b,
+    llama_3_2_vision_11b,
+    mamba2_370m,
+    minitron_4b,
+    qwen1_5_110b,
+    qwen3_moe_235b_a22b,
+    stablelm_1_6b,
+    whisper_tiny,
+    zamba2_2_7b,
+)
+from repro.models.transformer.config import LM_SHAPES, ShapeSpec, shape_by_name
+
+ARCHS = {
+    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b.config,
+    "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b.config,
+    "mamba2-370m": mamba2_370m.config,
+    "qwen1.5-110b": qwen1_5_110b.config,
+    "stablelm-1.6b": stablelm_1_6b.config,
+    "gemma2-2b": gemma2_2b.config,
+    "minitron-4b": minitron_4b.config,
+    "llama-3.2-vision-11b": llama_3_2_vision_11b.config,
+    "whisper-tiny": whisper_tiny.config,
+    "zamba2-2.7b": zamba2_2_7b.config,
+}
+
+GNN_ARCHS = {name: (labor_gcn.config, kw) for name, kw in labor_gcn.VARIANTS.items()}
+
+# long_500k runs only for SSM/hybrid (sub-quadratic sequence mixing)
+LONG_CONTEXT_OK = {"mamba2-370m", "zamba2-2.7b"}
+
+
+def get_config(arch: str, **kw):
+    if arch in ARCHS:
+        return ARCHS[arch](**kw)
+    if arch in GNN_ARCHS:
+        fn, base = GNN_ARCHS[arch]
+        return fn(**{**base, **kw})
+    raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS) + sorted(GNN_ARCHS)}")
+
+
+def cells_for(arch: str) -> List[dict]:
+    """The dry-run cells of an arch: [{shape, run|skip, reason}]."""
+    out = []
+    for s in LM_SHAPES:
+        if s.name == "long_500k" and arch not in LONG_CONTEXT_OK:
+            out.append({"shape": s.name, "run": False,
+                        "reason": "full attention is quadratic at 500k "
+                                  "(DESIGN.md §Arch-applicability)"})
+        else:
+            out.append({"shape": s.name, "run": True, "reason": ""})
+    return out
+
+
+def all_lm_cells():
+    for arch in ARCHS:
+        for cell in cells_for(arch):
+            yield arch, cell

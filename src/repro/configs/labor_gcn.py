@@ -1,0 +1,48 @@
+"""labor-gcn — the paper's own workload as a production-scale config.
+
+3-layer GCN (hidden 256, residuals; paper §4) trained with LABOR-0
+sampling on a products-scale graph (|V|=2.45M, avg degree 25), vertex-
+partitioned features, shard_map data-parallel sampling + feature
+all-to-all + gradient all-reduce. This arch participates in the dry-run
+and the §Perf hillclimb as the cell most representative of the paper's
+technique.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNWorkloadConfig:
+    name: str = "labor-gcn"
+    num_vertices: int = 2_449_029          # products scale (Table 1)
+    avg_degree: float = 25.26
+    feature_dim: int = 100
+    num_classes: int = 47
+    hidden: int = 256
+    num_layers: int = 3
+    fanouts: Tuple[int, ...] = (10, 10, 10)
+    sampler: str = "labor-0"
+    global_batch: int = 32768              # seeds per step across the mesh
+    # static caps per DEVICE-LOCAL batch, derived in launch/gnn_dryrun
+    cap_safety: float = 1.6
+    feature_peer_cap_safety: float = 2.0
+    grad_compression: str = "none"          # none | bf16 | int8
+    dtype: str = "float32"
+
+
+def config(**kw) -> GNNWorkloadConfig:
+    return GNNWorkloadConfig(**kw)
+
+
+# the paper's four dataset-scale variants for benchmarks
+VARIANTS = {
+    "labor-gcn": dict(),
+    "labor-gcn-reddit": dict(num_vertices=232_965, avg_degree=493.56,
+                             feature_dim=602, num_classes=41),
+    "labor-gcn-yelp": dict(num_vertices=716_847, avg_degree=19.52,
+                           feature_dim=300, num_classes=100),
+    "labor-gcn-flickr": dict(num_vertices=89_250, avg_degree=10.09,
+                             feature_dim=500, num_classes=7),
+}

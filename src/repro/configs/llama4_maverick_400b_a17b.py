@@ -1,0 +1,15 @@
+"""llama4-maverick-400b-a17b [moe] — 48L d5120 40H (GQA kv=8) ff8192
+vocab 202048, MoE 128e top-1, interleaved every other layer + shared
+expert (matches 400B total / ~17B active; Llama 4 interleave_moe_step=2).
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified]"""
+from repro.models.transformer.config import MoEConfig, TransformerConfig
+
+def config(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name="llama4-maverick-400b-a17b",
+        num_layers=48, d_model=5120, n_heads=40, n_kv_heads=8, head_dim=128,
+        d_ff=8192, vocab=202048,
+        layer_pattern=("attn", "attn"), mixers=("mlp", "moe"),
+        moe=MoEConfig(num_experts=128, top_k=1, d_expert=8192,
+                      shared_expert=True),
+        rope_theta=500000.0, activation="silu", tie_embeddings=False, **kw)

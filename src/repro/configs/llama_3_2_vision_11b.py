@@ -1,0 +1,14 @@
+"""llama-3.2-vision-11b [vlm] — 40L d4096 32H (GQA kv=8) ff14336 vocab
+128256; cross-attn image layers every 5th layer. Vision frontend is a
+STUB: input_specs feeds precomputed, projected patch embeddings
+(B, 1601, 4096). [hf:meta-llama/Llama-3.2-11B-Vision; unverified]"""
+from repro.models.transformer.config import TransformerConfig
+
+def config(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name="llama-3.2-vision-11b",
+        num_layers=40, d_model=4096, n_heads=32, n_kv_heads=8, head_dim=128,
+        d_ff=14336, vocab=128256,
+        layer_pattern=("attn", "attn", "attn", "attn", "xattn"),
+        xattn_every=5, xattn_source_len=1601, xattn_source_dim=4096,
+        rope_theta=500000.0, activation="silu", tie_embeddings=False, **kw)

@@ -1,0 +1,10 @@
+"""minitron-4b [dense] — 32L d3072 24H (GQA kv=8) ff9216 vocab 256000,
+pruned nemotron: squared-ReLU ungated MLP. [arXiv:2407.14679; hf]"""
+from repro.models.transformer.config import TransformerConfig
+
+def config(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name="minitron-4b",
+        num_layers=32, d_model=3072, n_heads=24, n_kv_heads=8, head_dim=128,
+        d_ff=9216, vocab=256000, activation="relu2", gated_mlp=False,
+        rope_theta=10000.0, tie_embeddings=False, **kw)

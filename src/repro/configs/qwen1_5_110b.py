@@ -1,0 +1,10 @@
+"""qwen1.5-110b [dense] — 80L d8192 64H (GQA kv=8) ff49152 vocab 152064,
+QKV bias. [hf:Qwen/Qwen1.5-0.5B; hf]"""
+from repro.models.transformer.config import TransformerConfig
+
+def config(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name="qwen1.5-110b",
+        num_layers=80, d_model=8192, n_heads=64, n_kv_heads=8, head_dim=128,
+        d_ff=49152, vocab=152064, qkv_bias=True,
+        rope_theta=1000000.0, activation="silu", tie_embeddings=False, **kw)

@@ -1,0 +1,25 @@
+"""whisper-tiny [audio] — enc-dec 4L+4L d384 6H ff1536 vocab 51865.
+Conv frontend is a STUB: input_specs feeds precomputed frame embeddings
+(B, 1500, 384) to the encoder. Decoder layers = self-attn + cross-attn +
+ungated-GELU MLP. Note: the assigned 32k decode shapes far exceed
+Whisper's 448-token decoder context; we lower them as specified.
+[arXiv:2212.04356; unverified]"""
+from repro.models.transformer.config import TransformerConfig
+
+def _encoder(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name="whisper-tiny-encoder",
+        num_layers=4, d_model=384, n_heads=6, n_kv_heads=6, head_dim=64,
+        d_ff=1536, vocab=8, is_encoder=True, norm="layernorm",
+        activation="gelu", gated_mlp=False, tie_embeddings=True, **kw)
+
+def config(**kw) -> TransformerConfig:
+    return TransformerConfig(
+        name="whisper-tiny",
+        num_layers=8, d_model=384, n_heads=6, n_kv_heads=6, head_dim=64,
+        d_ff=1536, vocab=51865,
+        layer_pattern=("attn", "xattn"), mixers=("none", "mlp"),
+        xattn_source_len=1500, xattn_source_dim=384,
+        encoder=_encoder(**({k: v for k, v in kw.items() if k in ("dtype", "scan_layers", "remat")})),
+        norm="layernorm", activation="gelu", gated_mlp=False,
+        tie_embeddings=True, **kw)

@@ -1,0 +1,32 @@
+"""LABOR — the paper's primary contribution as a composable JAX module.
+
+Public API:
+  LaborSampler / labor_sampler(..)      LABOR-0 / -1 / -i / -*   (paper §3.2)
+  neighbor_sampler(..)                  Neighbor Sampling baseline
+  LadiesSampler / ladies_sampler(..)    LADIES baseline (Zou et al. 2019)
+  pladies_sampler(..)                   PLADIES                  (paper §3.1)
+  SampledLayer, LayerCaps, suggest_caps static-shape block interface
+"""
+from repro.core.interface import LayerCaps, SampledLayer, pad_seeds, suggest_caps
+from repro.core.labor import (
+    CONVERGE,
+    LaborConfig,
+    LaborSampler,
+    labor_sampler,
+    neighbor_sampler,
+    sample_layer,
+)
+from repro.core.ladies import (
+    LadiesConfig,
+    LadiesSampler,
+    ladies_sampler,
+    pladies_sampler,
+    sample_layer_ladies,
+)
+
+__all__ = [
+    "CONVERGE", "LaborConfig", "LaborSampler", "LadiesConfig", "LadiesSampler",
+    "LayerCaps", "SampledLayer", "labor_sampler", "ladies_sampler",
+    "neighbor_sampler", "pad_seeds", "pladies_sampler", "sample_layer",
+    "sample_layer_ladies", "suggest_caps",
+]

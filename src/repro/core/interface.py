@@ -1,0 +1,114 @@
+"""Sampler interfaces and the static-shape sampled-block pytree.
+
+A ``SampledLayer`` is the TPU-friendly analogue of a DGL message-flow
+block: every buffer has a static cap so the whole multi-layer sampling +
+training step lowers to a single XLA program. Real sizes are carried as
+scalars; overflow (real size > cap) is detected and surfaced — never
+silently truncated inside a step.
+
+Layout conventions:
+  * ``seeds`` are this layer's destination vertices (padding = -1).
+  * ``next_seeds`` are the input vertices of this layer = seeds of the
+    next (deeper) sampling layer. Seeds come FIRST in ``next_seeds``, so
+    a model can take residuals/self-features as ``H_prev[:num_seeds]``.
+  * edges are compacted post-sampling: src/dst_slot/src_slot/weight are
+    aligned, padded with -1 / 0.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SampledLayer:
+    seeds: jax.Array        # int32[S] destination vertex ids, -1 pad
+    next_seeds: jax.Array   # int32[T] input vertex ids (seeds prefix), -1 pad
+    src: jax.Array          # int32[E] source vertex id per sampled edge
+    dst_slot: jax.Array     # int32[E] index into seeds
+    src_slot: jax.Array     # int32[E] index into next_seeds
+    weight: jax.Array       # float32[E] Hajek-normalized A'_ts (Algorithm 1)
+    edge_mask: jax.Array    # bool[E]
+    num_seeds: jax.Array    # int32[] real seed count
+    num_next: jax.Array     # int32[] real next_seeds count
+    num_edges: jax.Array    # int32[] real sampled edge count
+    overflow: jax.Array     # bool[] any cap exceeded while building this layer
+
+    @property
+    def seed_cap(self) -> int:
+        return self.seeds.shape[0]
+
+    @property
+    def next_cap(self) -> int:
+        return self.next_seeds.shape[0]
+
+    @property
+    def edge_cap(self) -> int:
+        return self.src.shape[0]
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerCaps:
+    """Static buffer sizes for one sampling layer."""
+    expand_cap: int   # buffer for ALL in-edges of the layer's seeds
+    edge_cap: int     # buffer for sampled edges
+    vertex_cap: int   # buffer for next_seeds
+
+
+def suggest_caps(
+    batch_size: int,
+    fanouts: Sequence[int],
+    avg_degree: float,
+    max_degree: int,
+    safety: float = 1.5,
+    max_expand: int = 1 << 22,
+    num_vertices: int | None = None,
+    num_edges: int | None = None,
+) -> list[LayerCaps]:
+    """Heuristic cap schedule: E[sizes] from fanout geometry + slack.
+
+    Poisson sampling concentrates tightly around its mean (sum of
+    independent Bernoullis), so mean * safety + a few sigma is enough;
+    the pipeline retries with doubled caps on detected overflow. Caps are
+    clamped to the whole graph when ``num_vertices``/``num_edges`` given.
+    """
+    caps = []
+    n_seeds = batch_size
+    for k in fanouts:
+        exp_edges = n_seeds * min(k, avg_degree)
+        sampled = int(exp_edges * safety + 6 * exp_edges ** 0.5) + 64
+        expand = int(min(n_seeds * avg_degree * safety + 4 * max_degree, max_expand)) + 64
+        if num_edges is not None:
+            sampled = min(sampled, num_edges)
+            expand = min(expand, num_edges)
+        n_next = n_seeds + sampled
+        if num_vertices is not None:
+            # next_seeds = [seed buffer ; new unique vertices]: the new
+            # part is bounded by |V|, the buffer keeps its padded slots
+            n_next = min(n_next, n_seeds + num_vertices)
+        caps.append(LayerCaps(
+            expand_cap=_round_up(max(expand, sampled), 128),
+            edge_cap=_round_up(sampled, 128),
+            vertex_cap=_round_up(max(n_next, n_seeds + 128), 128),
+        ))
+        # next layer's seed buffer is exactly this layer's vertex buffer
+        n_seeds = caps[-1].vertex_cap
+    return caps
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((int(x) + m - 1) // m) * m
+
+
+def pad_seeds(seeds: jax.Array, cap: int) -> jax.Array:
+    n = seeds.shape[0]
+    if n > cap:
+        raise ValueError(f"seed count {n} exceeds cap {cap}")
+    return jnp.concatenate([
+        seeds.astype(jnp.int32),
+        jnp.full((cap - n,), -1, jnp.int32),
+    ])

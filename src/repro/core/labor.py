@@ -1,0 +1,323 @@
+"""LABOR sampling (paper §3.2) — pure-JAX, jittable, static-shape.
+
+One call to :func:`sample_layer` performs a single layer of LABOR-i
+sampling for a padded seed set; :class:`LaborSampler` recurses it over
+layers. Setting ``per_edge_rng=True`` with ``importance_iters=0``
+degenerates to (Poisson) Neighbor Sampling — the equivalence the paper
+notes at the end of §3.2 — and ``exact_k=True`` switches Poisson
+inclusion to sequential Poisson sampling (paper §A.3), which reproduces
+vanilla NS exactly in the uniform case.
+
+All per-vertex state (pi, membership, slot maps) is dense over V and
+therefore shards over the vertex-partition axis in the distributed path;
+per-edge state is segment-contiguous with static caps (see
+repro/graph/csr.py::expand_seed_edges).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import rng as rng_lib
+from repro.core.cs_solve import solve_cs, solve_cs_weighted, _segment_sum
+from repro.core.interface import LayerCaps, SampledLayer, pad_seeds
+from repro.graph.csr import Graph, expand_seed_edges
+
+CONVERGE = -1  # importance_iters value for LABOR-*
+
+
+@dataclasses.dataclass(frozen=True)
+class LaborConfig:
+    fanouts: Sequence[int]
+    importance_iters: int = 0          # 0 -> LABOR-0, i -> LABOR-i, CONVERGE -> LABOR-*
+    layer_dependency: bool = False     # reuse r_t across layers (§A.8)
+    per_edge_rng: bool = False         # r_ts instead of r_t  => Neighbor Sampling
+    exact_k: bool = False              # sequential Poisson (§A.3): exactly min(k, d_s)
+    converge_tol: float = 1e-4         # paper: rel change of E[|T|] < 1e-4
+    converge_max_iters: int = 30
+
+
+def _expected_num_sampled(pi: jax.Array, max_c: jax.Array) -> jax.Array:
+    """E[|T|] = sum_t min(1, pi_t * max_{t->s} c_s)   (eq. 11)."""
+    return jnp.sum(jnp.minimum(1.0, pi * max_c))
+
+
+def _scatter_max_c(c_edges, src, mask, num_vertices):
+    """max_{t->s} c_s per source vertex t, dense over V (0 elsewhere)."""
+    safe_src = jnp.where(mask, src, 0)
+    vals = jnp.where(mask, c_edges, 0.0)
+    return jnp.zeros((num_vertices,), jnp.float32).at[safe_src].max(
+        vals, mode="drop"
+    )
+
+
+def run_importance_iterations(
+    graph: Graph,
+    exp: dict,
+    k: jax.Array,
+    num_seeds: int,
+    importance_iters: int,
+    converge_tol: float = 1e-4,
+    converge_max_iters: int = 30,
+):
+    """Fixed-point iterations on pi (eq. 18): pi_t <- pi_t * max_{t->s} c_s.
+
+    Returns (pi dense[V], c[S], e_t history placeholder). For
+    importance_iters == 0 this is a single c solve with uniform pi.
+    """
+    V = graph.num_vertices
+    src, slot, mask, deg = exp["src"], exp["seed_slot"], exp["mask"], exp["deg"]
+
+    def c_of(pi):
+        pi_e = pi[jnp.where(mask, src, 0)]
+        return solve_cs(pi_e, slot, deg, k, num_seeds, mask)
+
+    pi = jnp.ones((V,), jnp.float32)
+    if importance_iters == 0:
+        return pi, c_of(pi)
+
+    def one_step(pi):
+        c = c_of(pi)
+        fac = _scatter_max_c(c[jnp.clip(slot, 0, num_seeds - 1)], src, mask, V)
+        pi_new = jnp.where(fac > 0, pi * fac, pi)
+        return pi_new, c
+
+    if importance_iters > 0:
+        for _ in range(importance_iters):
+            pi, _ = one_step(pi)
+        return pi, c_of(pi)
+
+    # LABOR-*: iterate until relative change in E[|T|] < tol (paper §4.3).
+    def cost(pi, c):
+        fac = _scatter_max_c(c[jnp.clip(slot, 0, num_seeds - 1)], src, mask, V)
+        return _expected_num_sampled(pi, fac)
+
+    def body(state):
+        pi, _, prev_cost, i = state
+        pi_new, c = one_step(pi)
+        c_new = solve_cs(pi_new[jnp.where(mask, src, 0)], slot, deg, k, num_seeds, mask)
+        new_cost = cost(pi_new, c_new)
+        return pi_new, c_new, new_cost, i + 1
+
+    def cond(state):
+        pi, c, prev_cost, i = state
+        cur = cost(pi, c)
+        rel = jnp.abs(prev_cost - cur) / jnp.maximum(cur, 1.0)
+        return (i < converge_max_iters) & ((i < 2) | (rel > converge_tol))
+
+    c0 = c_of(pi)
+    pi, c, _, _ = jax.lax.while_loop(
+        cond, body, (pi, c0, jnp.float32(jnp.inf), jnp.int32(0))
+    )
+    return pi, solve_cs(pi[jnp.where(mask, src, 0)], slot, deg, k, num_seeds, mask)
+
+
+def _exact_k_include(r, slot, mask, deg, seg_start, k, num_seeds, expand_cap):
+    """Sequential Poisson (§A.3): per segment take the min(k, d) smallest r.
+
+    r is already divided by (c_s * pi_t) by the caller.
+    """
+    big = jnp.float32(3.4e38)
+    key_sorted = jnp.where(mask, jnp.minimum(r, 1e30), big)
+    slot_for_sort = jnp.where(mask, slot, num_seeds)
+    order = jnp.lexsort((key_sorted, slot_for_sort))
+    slot_s = slot_for_sort[order]
+    pos = jnp.arange(expand_cap, dtype=jnp.int32)
+    # segments are contiguous after the sort and retain their original
+    # lengths, so each segment s starts at seg_start[s].
+    seg_start_s = jnp.where(slot_s < num_seeds, seg_start[jnp.clip(slot_s, 0, num_seeds - 1)], 0)
+    pos_in_seg = pos - seg_start_s
+    kk = jnp.broadcast_to(jnp.asarray(k, jnp.int32), (num_seeds,))
+    take = jnp.minimum(kk[jnp.clip(slot_s, 0, num_seeds - 1)], deg[jnp.clip(slot_s, 0, num_seeds - 1)])
+    inc_sorted = (slot_s < num_seeds) & (pos_in_seg < take)
+    return jnp.zeros((expand_cap,), jnp.bool_).at[order].set(inc_sorted)
+
+
+def sample_layer(
+    graph: Graph,
+    seeds: jax.Array,
+    salt: jax.Array,
+    k: int,
+    caps: LayerCaps,
+    importance_iters: int = 0,
+    per_edge_rng: bool = False,
+    exact_k: bool = False,
+    converge_tol: float = 1e-4,
+    converge_max_iters: int = 30,
+) -> SampledLayer:
+    """One layer of LABOR-i sampling for padded ``seeds`` (int32[S], -1 pad)."""
+    S = seeds.shape[0]
+    V = graph.num_vertices
+    exp = expand_seed_edges(graph, seeds, caps.expand_cap)
+    src, slot, mask, deg = exp["src"], exp["seed_slot"], exp["mask"], exp["deg"]
+    safe_src = jnp.where(mask, src, 0)
+    safe_slot = jnp.clip(slot, 0, S - 1)
+
+    if graph.weights is None:
+        pi, c = run_importance_iterations(
+            graph, exp, k, S, importance_iters, converge_tol, converge_max_iters
+        )
+        pi_e = pi[safe_src]
+    else:
+        # weighted case (§A.7): per-edge pi initialised to A_ts
+        a_e = exp["edge_weight"]
+        pi_e = jnp.where(mask, a_e, 1.0)
+        c = solve_cs_weighted(pi_e, a_e, slot, deg, k, S, mask)
+        pi = None
+
+    # Inclusion: r < c_s * pi_t with shared-per-vertex r (LABOR) or
+    # per-edge r (NS equivalence).
+    if per_edge_rng:
+        r = rng_lib.hash_uniform_edge(salt, src, jnp.where(mask, seeds[safe_slot], 0))
+    else:
+        r = rng_lib.hash_uniform(salt, src)
+    c_e = c[safe_slot]
+    prob = jnp.minimum(1.0, c_e * jnp.maximum(pi_e, 0.0))
+
+    if exact_k:
+        ratio = jnp.where(mask, r / jnp.maximum(c_e * pi_e, 1e-20), 3.4e38)
+        include = _exact_k_include(ratio, slot, mask, deg, exp["seg_start"], k, S, caps.expand_cap)
+    else:
+        include = mask & (r < c_e * pi_e)
+
+    # Hajek weights (Algorithm 1): A'_ts = (1/p_ts) / sum_{t'} 1/p_t's
+    inv_p = jnp.where(include, 1.0 / jnp.maximum(prob, 1e-20), 0.0)
+    w = _segment_sum(inv_p, jnp.where(include, slot, -1), S)
+    weight_full = jnp.where(include, inv_p / jnp.maximum(w[safe_slot], 1e-20), 0.0)
+
+    # Compact sampled edges into the static edge_cap buffer.
+    num_sampled = jnp.sum(include.astype(jnp.int32))
+    sel = jnp.nonzero(include, size=caps.edge_cap, fill_value=0)[0]
+    emask = jnp.arange(caps.edge_cap) < jnp.minimum(num_sampled, caps.edge_cap)
+    e_src = jnp.where(emask, src[sel], -1)
+    e_dst_slot = jnp.where(emask, slot[sel], -1)
+    e_weight = jnp.where(emask, weight_full[sel], 0.0)
+
+    # next_seeds = [seeds ; sorted unique sampled srcs not already seeds]
+    seed_member = jnp.zeros((V,), jnp.bool_).at[jnp.where(seeds >= 0, seeds, 0)].set(
+        seeds >= 0, mode="drop"
+    )
+    samp_member = jnp.zeros((V,), jnp.bool_).at[jnp.where(emask, e_src, 0)].set(
+        emask, mode="drop"
+    )
+    new_member = samp_member & ~seed_member
+    num_new = jnp.sum(new_member.astype(jnp.int32))
+    new_cap = caps.vertex_cap - S
+    if new_cap <= 0:
+        raise ValueError("vertex_cap must exceed seed buffer size")
+    new_vs = jnp.nonzero(new_member, size=new_cap, fill_value=-1)[0].astype(jnp.int32)
+    next_seeds = jnp.concatenate([seeds.astype(jnp.int32), new_vs])
+
+    # src -> slot in next_seeds
+    pos = jnp.full((V,), -1, jnp.int32).at[jnp.where(next_seeds >= 0, next_seeds, 0)].set(
+        jnp.arange(caps.vertex_cap, dtype=jnp.int32), mode="drop"
+    )
+    e_src_slot = jnp.where(emask, pos[jnp.where(emask, e_src, 0)], -1)
+
+    num_seeds = jnp.sum((seeds >= 0).astype(jnp.int32))
+    overflow = (
+        (exp["total"] > caps.expand_cap)
+        | (num_sampled > caps.edge_cap)
+        | (num_new > new_cap)
+    )
+    return SampledLayer(
+        seeds=seeds.astype(jnp.int32),
+        next_seeds=next_seeds,
+        src=e_src,
+        dst_slot=e_dst_slot,
+        src_slot=e_src_slot,
+        weight=e_weight,
+        edge_mask=emask,
+        num_seeds=num_seeds,
+        num_next=num_seeds + num_new,
+        num_edges=num_sampled,
+        overflow=overflow,
+    )
+
+
+class LaborSampler:
+    """Multi-layer LABOR-i sampler (paper Algorithm 1 over l layers)."""
+
+    def __init__(self, config: LaborConfig, caps: Sequence[LayerCaps]):
+        if len(caps) != len(config.fanouts):
+            raise ValueError("need one LayerCaps per fanout")
+        self.config = config
+        self.caps = list(caps)
+
+    def sample(self, graph: Graph, seeds: jax.Array, key: jax.Array) -> list[SampledLayer]:
+        """seeds: int32[B] (padded with -1 allowed). Returns blocks, batch
+        (outermost) layer first."""
+        cfg = self.config
+        base_salt = rng_lib.salt_from_key(key)
+        blocks = []
+        cur = seeds
+        for layer, (k, caps) in enumerate(zip(cfg.fanouts, self.caps)):
+            if cfg.layer_dependency:
+                salt = base_salt
+            else:
+                salt = rng_lib.salt_from_key(jax.random.fold_in(key, layer))
+            blk = sample_layer(
+                graph, cur, salt, k, caps,
+                importance_iters=cfg.importance_iters,
+                per_edge_rng=cfg.per_edge_rng,
+                exact_k=cfg.exact_k,
+                converge_tol=cfg.converge_tol,
+                converge_max_iters=cfg.converge_max_iters,
+            )
+            blocks.append(blk)
+            cur = blk.next_seeds
+        return blocks
+
+
+def sample_with_salt(cfg: LaborConfig, caps: Sequence[LayerCaps],
+                     graph: Graph, seeds: jax.Array,
+                     salt: jax.Array) -> list[SampledLayer]:
+    """Multi-layer sampling from a raw uint32 salt (no PRNG key object) —
+    used inside shard_map where keys are awkward to thread. Layer salts
+    are derived by remixing unless layer_dependency is set."""
+    blocks = []
+    cur = seeds
+    for layer, (k, lcaps) in enumerate(zip(cfg.fanouts, caps)):
+        if cfg.layer_dependency:
+            lsalt = salt
+        else:
+            lsalt = rng_lib._mix(jnp.asarray(salt).astype(jnp.uint32)
+                                 + jnp.uint32(0x9E3779B9) * jnp.uint32(layer + 1))
+        blk = sample_layer(
+            graph, cur, lsalt, k, lcaps,
+            importance_iters=cfg.importance_iters,
+            per_edge_rng=cfg.per_edge_rng,
+            exact_k=cfg.exact_k,
+            converge_tol=cfg.converge_tol,
+            converge_max_iters=cfg.converge_max_iters,
+        )
+        blocks.append(blk)
+        cur = blk.next_seeds
+    return blocks
+
+
+def neighbor_sampler(fanouts: Sequence[int], caps: Sequence[LayerCaps],
+                     exact: bool = True) -> LaborSampler:
+    """Vanilla Neighbor Sampling (Hamilton et al. 2017) as the degenerate
+    LABOR configuration the paper identifies: per-edge randomness, uniform
+    pi; ``exact=True`` takes exactly min(k, d_s) neighbors."""
+    return LaborSampler(
+        LaborConfig(fanouts=tuple(fanouts), importance_iters=0,
+                    per_edge_rng=True, exact_k=exact),
+        caps,
+    )
+
+
+def labor_sampler(fanouts: Sequence[int], caps: Sequence[LayerCaps],
+                  variant: int | str = 0, layer_dependency: bool = False) -> LaborSampler:
+    """LABOR-i factory. variant: 0, 1, 2, ... or '*' for convergence."""
+    iters = CONVERGE if variant in ("*", CONVERGE) else int(variant)
+    return LaborSampler(
+        LaborConfig(fanouts=tuple(fanouts), importance_iters=iters,
+                    layer_dependency=layer_dependency),
+        caps,
+    )

@@ -1,0 +1,66 @@
+"""Stateless per-vertex randomness for correlated Poisson sampling.
+
+LABOR requires every seed that considers vertex ``t`` to see the *same*
+uniform variate ``r_t`` (§3.2: "we sample r_t ~ U(0,1) for all t in N(S)
+and vertex s samples vertex t iff r_t <= c_s * pi_t"). DGL implements
+this with hash tables of materialized variates; on TPU we instead derive
+``r_t`` from a stateless integer hash of (key, t) — zero memory, no
+gather, identical across seeds, shards trivially, and reusing the same
+key across layers gives the paper's ``layer_dependency`` mode (§A.8) for
+free.
+
+The hash is a 2-round xxhash/murmur-style avalanche over uint32 lanes.
+It is NOT jax.random-grade, but empirically passes the uniformity /
+independence checks in tests/test_rng.py, which is what the sampler
+needs (DGL similarly uses a cheap hash).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_M1 = jnp.uint32(0x85EBCA6B)
+_M2 = jnp.uint32(0xC2B2AE35)
+_M3 = jnp.uint32(0x27D4EB2F)
+
+
+def _mix(h: jax.Array) -> jax.Array:
+    h = h ^ (h >> 16)
+    h = h * _M1
+    h = h ^ (h >> 13)
+    h = h * _M2
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_uniform(key: jax.Array, ids: jax.Array) -> jax.Array:
+    """Deterministic uniform variates in [0, 1) indexed by integer id.
+
+    Args:
+      key: scalar uint32/int32 salt (derive with ``salt_from_key``).
+      ids: int array of any shape; negative ids (padding) allowed.
+    Returns:
+      float32 array, same shape as ids, in [0, 1).
+    """
+    h = ids.astype(jnp.uint32)
+    k = jnp.asarray(key).astype(jnp.uint32)
+    h = _mix(h ^ (k * _M3))
+    h = _mix(h + k)
+    # 24 high bits -> [0, 1) float32 (exactly representable)
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def hash_uniform_edge(key: jax.Array, src: jax.Array, dst: jax.Array) -> jax.Array:
+    """Per-(src,dst) uniform variates — the per-edge r_ts of vanilla NS."""
+    s = src.astype(jnp.uint32)
+    d = dst.astype(jnp.uint32)
+    k = jnp.asarray(key).astype(jnp.uint32)
+    h = _mix(s ^ (k * _M3))
+    h = _mix(h ^ (d * _M1) ^ k)
+    return (h >> 8).astype(jnp.float32) * jnp.float32(1.0 / (1 << 24))
+
+
+def salt_from_key(key: jax.Array) -> jax.Array:
+    """Fold a jax PRNG key down to a uint32 salt for the hashes above."""
+    data = jax.random.key_data(key).reshape(-1).astype(jnp.uint32)
+    return _mix(data[0] ^ _mix(data[-1]))

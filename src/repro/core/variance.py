@@ -1,0 +1,39 @@
+"""Analytic variance oracles from the paper, used by the test suite.
+
+All formulas assume Var(M_t) = 1 elementwise (paper §2) so they can be
+checked empirically by Monte-Carlo over the sampler with iid unit-
+variance feature vectors.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ns_without_replacement_variance(d: jnp.ndarray, k) -> jnp.ndarray:
+    """Var(H''_s) for exact-k uniform sampling without replacement (eq. 7):
+    (d - k)/(d - 1) * 1/k, and 0 when k >= d."""
+    d = jnp.asarray(d, jnp.float32)
+    k = jnp.minimum(jnp.asarray(k, jnp.float32), d)
+    return jnp.where(d > 1, (d - k) / (d - 1) / k, 0.0)
+
+
+def poisson_ht_variance(pi_by_seed: jnp.ndarray) -> jnp.ndarray:
+    """Var(H'_s) for Poisson sampling with inclusion probs pi (eq. 8):
+    (1/d^2) sum 1/pi - 1/d, with pi_by_seed shape [d] (one seed)."""
+    pi = jnp.asarray(pi_by_seed, jnp.float32)
+    d = pi.shape[0]
+    return jnp.sum(1.0 / pi) / d**2 - 1.0 / d
+
+
+def poisson_uniform_variance(d: jnp.ndarray, k) -> jnp.ndarray:
+    """eq. 8 at pi = k/d: 1/k - 1/d (the LABOR variance target, eq. 9)."""
+    d = jnp.asarray(d, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    return jnp.where(k >= d, 0.0, 1.0 / k - 1.0 / d)
+
+
+def calibrated_target_matches_ns(d: jnp.ndarray, k) -> jnp.ndarray:
+    """eq. 10: d/(d-1)*(1/k - 1/d) - (d-k)/(d-1)*(1/k) == 0."""
+    d = jnp.asarray(d, jnp.float32)
+    k = jnp.asarray(k, jnp.float32)
+    return d / (d - 1) * (1.0 / k - 1.0 / d) - (d - k) / (d - 1) / k

@@ -1,0 +1,112 @@
+"""GNN minibatch pipeline: seed shuffling, background prefetch, cap
+management with overflow retry, and straggler mitigation.
+
+The sampler itself is device-side (repro.core); this pipeline feeds it
+padded seed batches and watches the ``overflow`` flags it returns. On
+overflow the batch is retried with doubled caps (new jit specialization —
+rare, amortized). A watchdog timestamps batch production; batches slower
+than ``straggler_timeout`` (e.g. a slow storage shard on a real cluster)
+are *skipped* and counted, which keeps the synchronous optimizer step
+from stalling the whole pod — the standard bounded-staleness mitigation.
+"""
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from typing import Callable, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interface import pad_seeds
+
+
+@dataclasses.dataclass
+class LoaderStats:
+    batches: int = 0
+    overflow_retries: int = 0
+    stragglers_skipped: int = 0
+
+
+class SeedBatches:
+    """Shuffled, padded seed batches over training vertices."""
+
+    def __init__(self, train_idx: np.ndarray, batch_size: int, seed: int = 0,
+                 drop_last: bool = True):
+        self.train_idx = np.asarray(train_idx)
+        self.batch_size = batch_size
+        self.rng = np.random.default_rng(seed)
+        self.drop_last = drop_last
+
+    def epoch(self) -> Iterator[jnp.ndarray]:
+        perm = self.rng.permutation(self.train_idx)
+        n_full = len(perm) // self.batch_size
+        for i in range(n_full):
+            yield pad_seeds(
+                jnp.asarray(perm[i * self.batch_size:(i + 1) * self.batch_size]),
+                self.batch_size,
+            )
+        rem = len(perm) - n_full * self.batch_size
+        if rem and not self.drop_last:
+            yield pad_seeds(jnp.asarray(perm[-rem:]), self.batch_size)
+
+
+class PrefetchIterator:
+    """Runs ``produce`` in a background thread with a bounded queue and a
+    straggler watchdog."""
+
+    def __init__(self, produce: Iterator, depth: int = 2,
+                 straggler_timeout: Optional[float] = None,
+                 stats: Optional[LoaderStats] = None):
+        self.q: queue.Queue = queue.Queue(maxsize=depth)
+        self.timeout = straggler_timeout
+        self.stats = stats or LoaderStats()
+        self._done = object()
+        self._thread = threading.Thread(target=self._run, args=(produce,),
+                                        daemon=True)
+        self._thread.start()
+
+    def _run(self, produce):
+        try:
+            for item in produce:
+                self.q.put(item)
+        finally:
+            self.q.put(self._done)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        while True:
+            try:
+                t0 = time.monotonic()
+                item = self.q.get(timeout=self.timeout) if self.timeout else self.q.get()
+            except queue.Empty:
+                # straggler: producer missed the deadline — skip this slot
+                self.stats.stragglers_skipped += 1
+                continue
+            if item is self._done:
+                raise StopIteration
+            self.stats.batches += 1
+            return item
+
+
+def sample_with_retry(sampler_factory: Callable, graph, seeds, key, caps,
+                      stats: Optional[LoaderStats] = None, max_retries: int = 3):
+    """Run sampler; on overflow double all caps and retry (new
+    specialization compiles once per cap schedule)."""
+    cur = list(caps)
+    for attempt in range(max_retries + 1):
+        sampler = sampler_factory(cur)
+        blocks = sampler.sample(graph, seeds, key)
+        if not any(bool(b.overflow) for b in blocks):
+            return blocks, cur
+        if stats is not None:
+            stats.overflow_retries += 1
+        cur = [dataclasses.replace(c, expand_cap=c.expand_cap * 2,
+                                   edge_cap=c.edge_cap * 2,
+                                   vertex_cap=c.vertex_cap * 2) for c in cur]
+    raise RuntimeError("sampling overflow persisted after cap doubling")

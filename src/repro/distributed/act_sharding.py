@@ -1,0 +1,46 @@
+"""Activation sharding hints that degrade to no-ops off-mesh.
+
+Model code calls ``shard(x, "data", None, "model")`` with *logical* axis
+entries; when tracing inside a mesh context the entries are filtered to
+the axes that exist on the current mesh (so the same model code runs on
+the single-pod ("data","model") mesh, the multi-pod ("pod","data",
+"model") mesh, and a single CPU device in unit tests).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+
+def _current_mesh():
+    m = jax.sharding.get_abstract_mesh()
+    if m is None or m.empty:
+        return None
+    return m
+
+
+def _filter_entry(entry: Any, axis_names) -> Any:
+    if entry is None:
+        return None
+    if isinstance(entry, (tuple, list)):
+        kept = tuple(a for a in entry if a in axis_names)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return entry if entry in axis_names else None
+
+
+def shard(x: jax.Array, *spec: Any) -> jax.Array:
+    """Apply a with_sharding_constraint if tracing under a mesh."""
+    mesh = _current_mesh()
+    if mesh is None:
+        return x
+    names = set(mesh.axis_names)
+    entries = tuple(_filter_entry(e, names) for e in spec)
+    if all(e is None for e in entries):
+        return x
+    if len(entries) > x.ndim:
+        entries = entries[: x.ndim]
+    return jax.lax.with_sharding_constraint(x, P(*entries))

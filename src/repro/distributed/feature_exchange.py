@@ -1,0 +1,102 @@
+"""Distributed vertex-feature gather: the collective the paper's
+technique shrinks.
+
+Features are range-partitioned over the data-parallel axis to match
+jax's contiguous array sharding (owner of global id v = v // V_local,
+local row = v % V_local). After sampling, every device
+needs feature rows for its block's ``next_seeds``; this module fetches
+them with a fixed-capacity request/response all_to_all pair inside
+shard_map — the standard DistDGL/P3-style exchange mapped to TPU
+collectives. LABOR's ~7x reduction in |V^3| multiplies directly into the
+byte volume of both all_to_alls (the §Roofline collective term of the
+labor-gcn cells).
+
+All caps are static; overflow is detected and returned as a flag.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def request_layout(ids: jax.Array, num_parts: int, per_peer_cap: int,
+                   v_local: int):
+    """Group padded global ids (-1 pad) by owner into (P, cap) with the
+    originating position so responses can be scattered back.
+
+    Returns (req_ids (P,cap) int32 local row ids, req_pos (P,cap) int32
+    positions into ``ids``, overflow bool[]).
+    """
+    T = ids.shape[0]
+    valid = ids >= 0
+    owner = jnp.where(valid, jnp.minimum(ids // v_local, num_parts - 1),
+                      num_parts)
+    # rank of each id within its owner group
+    oh = jax.nn.one_hot(owner, num_parts + 1, dtype=jnp.int32)
+    rank = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(T), owner]
+    overflow = jnp.any(jnp.where(valid, rank, 0) >= per_peer_cap)
+    slot = jnp.where(valid & (rank < per_peer_cap),
+                     owner * per_peer_cap + rank, num_parts * per_peer_cap)
+    local_row = jnp.where(valid, ids - owner * v_local, -1)
+    req_ids = jnp.full((num_parts * per_peer_cap + 1,), -1, jnp.int32)
+    req_ids = req_ids.at[slot].set(local_row.astype(jnp.int32),
+                                   mode="drop")[:-1].reshape(num_parts, per_peer_cap)
+    req_pos = jnp.full((num_parts * per_peer_cap + 1,), -1, jnp.int32)
+    req_pos = req_pos.at[slot].set(jnp.where(valid, jnp.arange(T, dtype=jnp.int32), -1),
+                                   mode="drop")[:-1].reshape(num_parts, per_peer_cap)
+    return req_ids, req_pos, overflow
+
+
+def exchange_features(local_feats: jax.Array, ids: jax.Array, axis_name: str,
+                      per_peer_cap: int) -> Tuple[jax.Array, jax.Array]:
+    """Inside shard_map: fetch feature rows for global ``ids`` (-1 pad).
+
+    local_feats: (V_local, F) this device's owned rows.
+    Returns (feats (T, F), overflow bool[]).
+    """
+    P = jax.lax.axis_size(axis_name)
+    T = ids.shape[0]
+    V_local, F = local_feats.shape
+    req_ids, req_pos, overflow = request_layout(ids, P, per_peer_cap, V_local)
+
+    # send my requests to owners; receive others' requests for my rows
+    incoming = jax.lax.all_to_all(req_ids[None], axis_name, split_axis=1,
+                                  concat_axis=0, tiled=False)[:, 0]  # (P, cap)
+    rows = jnp.where(incoming >= 0, incoming, 0)
+    resp = local_feats[rows] * (incoming >= 0)[..., None].astype(local_feats.dtype)
+    # send responses back
+    back = jax.lax.all_to_all(resp[None], axis_name, split_axis=1,
+                              concat_axis=0, tiled=False)[:, 0]  # (P, cap, F)
+
+    out = jnp.zeros((T + 1, F), local_feats.dtype)
+    pos = jnp.where(req_pos >= 0, req_pos, T)
+    out = out.at[pos.reshape(-1)].set(back.reshape(-1, F), mode="drop")
+    return out[:T], overflow
+
+
+def make_sharded_gather(mesh, axis_name: str, per_peer_cap: int):
+    """Build a jit-able gather(local_feats_sharded, ids_sharded) under
+    shard_map on ``mesh``: features sharded (P, V_loc, F) over axis,
+    ids (P, T) per-device requests."""
+    from jax.sharding import PartitionSpec as P_
+    from jax.experimental.shard_map import shard_map
+
+    def gather(feats, ids):
+        def body(local_feats, local_ids):
+            f, ov = exchange_features(local_feats[0], local_ids[0], axis_name,
+                                      per_peer_cap)
+            return f[None], ov[None]
+        return shard_map(
+            body, mesh=mesh,
+            in_specs=(P_(axis_name, None, None), P_(axis_name, None)),
+            out_specs=(P_(axis_name, None, None), P_(axis_name)),
+        )(feats, ids)
+
+    return gather

@@ -1,0 +1,191 @@
+"""Parameter sharding rules: logical name -> PartitionSpec.
+
+2-D "FSDP x TP" layout (MaxText-style): for every weight matrix the
+input/reduction-adjacent dim is sharded over the FSDP axes ("pod","data")
+and the output/feature dim over the tensor axis ("model"). MoE experts
+are additionally expert-parallel over "model". Stacked (scanned) params
+get a leading None for the repeats axis automatically — rules describe
+only the trailing logical dims.
+
+Optimizer state inherits the parameter's sharding via tree_map.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP = ("pod", "data")
+TP = "model"
+
+# rules matched by parameter leaf name (dict key path suffix)
+_RULES: Tuple[Tuple[Tuple[str, ...], Tuple[Any, ...]], ...] = (
+    # embeddings / head
+    (("embed",), (TP, FSDP)),                  # (vocab, d)
+    (("lm_head",), (FSDP, TP)),                # (d, vocab)
+    # attention
+    (("wq",), (FSDP, TP)),
+    (("wk",), (FSDP, TP)),
+    (("wv",), (FSDP, TP)),
+    (("wo",), (TP, FSDP)),
+    (("bq",), (TP,)),
+    (("bk",), (TP,)),
+    (("bv",), (TP,)),
+    # dense mlp (also shared expert)
+    (("wi",), (FSDP, TP)),
+    (("wg",), (FSDP, TP)),
+    (("shared_wi",), (FSDP, TP)),
+    (("shared_wg",), (FSDP, TP)),
+    (("shared_wo",), (TP, FSDP)),
+    # moe experts: (E, d, f) / (E, f, d) — expert-parallel over model
+    (("router",), (FSDP, None)),
+    # mamba
+    (("in_proj",), (FSDP, TP)),
+    (("out_proj",), (TP, FSDP)),
+    (("conv_w",), (None, TP)),
+    (("conv_b",), (TP,)),
+    # gnn dense layers
+    (("w",), (FSDP, TP)),
+    (("wr",), (FSDP, TP)),
+)
+
+_MOE_3D = {
+    "ewi": (TP, FSDP, None),
+    "ewg": (TP, FSDP, None),
+    "ewo": (TP, None, FSDP),
+}
+
+# per-lowering rule overrides (e.g. sequence-parallel attention keeps
+# attention weights replicated over the TP axis). Set by the launcher
+# before tracing; name -> spec tuple.
+_OVERRIDES = {}
+
+SEQ_PARALLEL_ATTN_OVERRIDES = {
+    "wq": (FSDP, None), "wk": (FSDP, None), "wv": (FSDP, None),
+    "wo": (None, FSDP), "bq": (), "bk": (), "bv": (),
+}
+
+
+def set_rule_overrides(overrides):
+    global _OVERRIDES
+    _OVERRIDES = dict(overrides or {})
+
+
+def spec_for(path: Tuple[str, ...], leaf) -> Tuple[Any, ...]:
+    """PartitionSpec entries for a param at dict-path ``path``."""
+    name = path[-1]
+    ndim = leaf.ndim if hasattr(leaf, "ndim") else len(leaf.shape)
+    if name in _OVERRIDES:
+        base = _OVERRIDES[name]
+        base = tuple(base)[:ndim]
+        return (None,) * (ndim - len(base)) + base
+    if name in _MOE_3D and ndim >= 3:
+        base = _MOE_3D[name]
+    else:
+        base = None
+        for (suffix, spec) in _RULES:
+            if name == suffix[-1]:
+                base = spec
+                break
+        if base is None:
+            base = ()  # replicate (norm scales, biases, scalars)
+    base = tuple(base)[:ndim]
+    lead = (None,) * (ndim - len(base))
+    return lead + base
+
+
+def _filter(entry, axis_names):
+    if entry is None:
+        return None
+    if isinstance(entry, (tuple, list)):
+        kept = tuple(a for a in entry if a in axis_names)
+        return None if not kept else (kept if len(kept) > 1 else kept[0])
+    return entry if entry in axis_names else None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return tuple(out)
+
+
+def _axis_prod(entry, mesh) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        n = 1
+        for a in entry:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[entry]
+
+
+def params_shardings(params: Any, mesh) -> Any:
+    """NamedSharding pytree matching ``params`` (works on shapes too).
+
+    Dims not divisible by their assigned axis product are replicated
+    instead (e.g. odd vocabularies like whisper's 51865)."""
+    names = set(mesh.axis_names)
+
+    def one(path, leaf):
+        entries = []
+        for dim, e in zip(leaf.shape,
+                          spec_for(_path_names(path), leaf)):
+            e = _filter(e, names)
+            if e is not None and dim % _axis_prod(e, mesh) != 0:
+                e = None
+            entries.append(e)
+        return NamedSharding(mesh, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def constrain_like_params(tree: Any) -> Any:
+    """with_sharding_constraint every leaf per the parameter rules —
+    used on gradient accumulators etc. created INSIDE jit, whose sharding
+    GSPMD would otherwise replicate. No-op outside a mesh context."""
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or mesh.empty:
+        return tree
+    names = set(mesh.axis_names)
+
+    def one(path, leaf):
+        entries = []
+        for dim, e in zip(leaf.shape, spec_for(_path_names(path), leaf)):
+            e = _filter(e, names)
+            if e is not None and dim % _axis_prod(e, mesh) != 0:
+                e = None
+            entries.append(e)
+        return jax.lax.with_sharding_constraint(leaf, P(*entries))
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def params_pspecs(params: Any) -> Any:
+    """Raw PartitionSpec pytree (unfiltered) — for shard_map in_specs."""
+    def one(path, leaf):
+        return P(*spec_for(_path_names(path), leaf))
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+def abstract_params(init_fn, *args) -> Any:
+    """Shapes without allocation: jax.eval_shape over an init closure."""
+    return jax.eval_shape(init_fn, *args)
+
+
+def shard_params_specs(init_fn, mesh, *args):
+    """(ShapeDtypeStruct pytree with shardings) for dry-run in_shardings."""
+    shapes = abstract_params(init_fn, *args)
+    shardings = params_shardings(shapes, mesh)
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        shapes, shardings,
+    )

@@ -1,0 +1,53 @@
+"""jit'd wrapper: pads sequence lengths to block multiples, runs the
+Pallas forward, and provides gradients via a custom_vjp whose backward
+pass is the jnp reference (training uses the XLA path by default; the
+kernel is the inference/prefill hot path — see DESIGN.md)."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention as K
+from repro.kernels.flash_attention.ref import attention_ref
+
+
+def _pad_to(x, axis, mult):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def flash_attention(q, k, v, causal=True, window=None, softcap=None,
+                    scale=None, interpret=False):
+    qp, sq = _pad_to(q, 1, K.DEFAULT_BQ)
+    kp, _ = _pad_to(k, 1, K.DEFAULT_BK)
+    vp, _ = _pad_to(v, 1, K.DEFAULT_BK)
+    out = K.flash_attention_fwd(qp, kp, vp, causal=causal, window=window,
+                                softcap=softcap, scale=scale,
+                                interpret=interpret)
+    return out[:, :sq]
+
+
+def _fwd(q, k, v, causal, window, softcap, scale, interpret):
+    out = flash_attention(q, k, v, causal, window, softcap, scale, interpret)
+    return out, (q, k, v)
+
+
+def _bwd(causal, window, softcap, scale, interpret, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(
+        lambda q_, k_, v_: attention_ref(q_, k_, v_, causal=causal,
+                                         window=window, softcap=softcap,
+                                         scale=scale), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fwd, _bwd)

@@ -1,0 +1,65 @@
+"""jit'd wrapper for the SpMM kernel: gathers messages with XLA (TPU
+gathers are fine; scatters are not), re-buckets edges into row-block-
+aligned chunks, runs the Pallas kernel, and masks never-visited blocks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.spmm import spmm as K
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "be", "bs", "bf",
+                                             "interpret"))
+def spmm_block(src_slot, dst_slot, weight, mask, h, num_rows,
+               be: int = K.DEFAULT_BE, bs: int = K.DEFAULT_BS,
+               bf: int = K.DEFAULT_BF, interpret: bool = False):
+    """Aggregate h[src]*w into num_rows destination rows.
+
+    src_slot/dst_slot int32[E] (sorted by dst, -1 padding), weight f32[E],
+    mask bool[E], h (T, F). Returns (num_rows, F) in h.dtype.
+    """
+    E = src_slot.shape[0]
+    T, F = h.shape
+    S_pad = _round_up(max(num_rows, bs), bs)
+    F_pad = _round_up(F, bf)
+    nb = S_pad // bs
+
+    # messages via XLA gather
+    msg = h[jnp.where(mask, src_slot, 0)] * weight[:, None].astype(h.dtype)
+    msg = jnp.where(mask[:, None], msg, 0)
+    if F_pad != F:
+        msg = jnp.pad(msg, ((0, 0), (0, F_pad - F)))
+
+    # re-bucket: chunks must not straddle row blocks
+    rb = jnp.where(mask, dst_slot // bs, nb)                 # group per edge
+    counts = jax.ops.segment_sum(jnp.ones((E,), jnp.int32), rb,
+                                 num_segments=nb + 1)[:nb]
+    padded_counts = (counts + be - 1) // be * be
+    starts = jnp.cumsum(padded_counts) - padded_counts       # padded offsets
+    gstart = jnp.cumsum(counts) - counts                     # original offsets
+    rank = jnp.arange(E, dtype=jnp.int32) - gstart[jnp.clip(rb, 0, nb - 1)]
+    E_pad = _round_up(E, be) + nb * be                       # static cap
+    new_pos = jnp.where(mask, starts[jnp.clip(rb, 0, nb - 1)] + rank, E_pad)
+
+    msg_p = jnp.zeros((E_pad + 1, F_pad), h.dtype).at[new_pos].set(
+        msg, mode="drop")[:-1]
+    dst_p = jnp.full((E_pad + 1,), -1, jnp.int32).at[new_pos].set(
+        jnp.where(mask, dst_slot, -1), mode="drop")[:-1]
+
+    out = K.spmm_sorted(msg_p, dst_p, S_pad, be=be, bs=bs, bf=bf,
+                        interpret=interpret)
+
+    # zero out row blocks no chunk visited (their VMEM was never written)
+    visited = jnp.zeros((nb + 1,), jnp.bool_).at[
+        jnp.where(mask, rb, nb)].set(True, mode="drop")[:nb]
+    vis_rows = jnp.repeat(visited, bs)
+    out = jnp.where(vis_rows[:, None], out, 0)
+    return out[:num_rows, :F]

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the SpMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def spmm_block_ref(src_slot, dst_slot, weight, mask, h, num_rows):
+    msg = h[jnp.where(mask, src_slot, 0)] * weight[:, None].astype(h.dtype)
+    msg = jnp.where(mask[:, None], msg, 0)
+    seg = jnp.where(mask, dst_slot, num_rows)
+    return jax.ops.segment_sum(msg, seg, num_segments=num_rows + 1)[:-1]

@@ -1,0 +1,32 @@
+"""Weighted block aggregation — the GNN compute hot spot.
+
+``aggregate`` computes H_s = sum_e A'_e * H[src_slot_e] per destination
+seed, i.e. the paper's Hajek estimator applied to the sampled block.
+Two paths:
+  * jnp: gather + segment_sum (XLA scatter-add) — reference, used on CPU
+    and for autodiff in training.
+  * kernel: the Pallas csr_spmm MXU kernel (repro/kernels/spmm) — the TPU
+    hot path; validated against the jnp path in interpret mode.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.interface import SampledLayer
+
+
+def aggregate_ref(blk: SampledLayer, h: jax.Array) -> jax.Array:
+    S = blk.seed_cap
+    src = jnp.where(blk.edge_mask, blk.src_slot, 0)
+    seg = jnp.where(blk.edge_mask, blk.dst_slot, S)
+    msg = h[src] * blk.weight[:, None]
+    return jax.ops.segment_sum(msg, seg, num_segments=S + 1)[:-1]
+
+
+def aggregate(blk: SampledLayer, h: jax.Array, use_kernel: bool = False) -> jax.Array:
+    if use_kernel:
+        from repro.kernels.spmm.ops import spmm_block
+        return spmm_block(blk.src_slot, blk.dst_slot, blk.weight, blk.edge_mask,
+                          h, blk.seed_cap)
+    return aggregate_ref(blk, h)

@@ -1,0 +1,151 @@
+"""GNN models over static-shape sampled blocks (paper §4 experimental
+setup: 3-layer GCN, hidden 256, residual skip connections; plus GraphSAGE
+and the GATv2 of §A.6).
+
+A model consumes ``blocks`` as produced by the samplers (outermost layer
+first) and the input features of the deepest layer's ``next_seeds``; each
+layer aggregates messages src->dst with the sampler's Hajek weights A'
+(so the aggregation IS the paper's estimator H''_s, eq. 6) and applies a
+dense update. Aggregation goes through ``repro.models.blocks`` so the
+Pallas csr_spmm kernel can be swapped in.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.interface import SampledLayer
+from repro.models import blocks as B
+
+
+def _dense_init(key, d_in, d_out):
+    lim = math.sqrt(6.0 / (d_in + d_out))
+    return jax.random.uniform(key, (d_in, d_out), minval=-lim, maxval=lim)
+
+
+# ---------------------------------------------------------------------------
+# GCN (paper eq. 2) with residual skip connections
+# ---------------------------------------------------------------------------
+
+def gcn_init(key, in_dim: int, hidden: int, out_dim: int, num_layers: int = 3):
+    dims = [in_dim] + [hidden] * (num_layers - 1) + [out_dim]
+    keys = jax.random.split(key, num_layers * 2)
+    layers = []
+    for l in range(num_layers):
+        layers.append({
+            "w": _dense_init(keys[2 * l], dims[l], dims[l + 1]),
+            "b": jnp.zeros((dims[l + 1],)),
+            # residual projection (identity-shaped layers could skip it, but
+            # the paper's dims change at first/last layer so project always)
+            "wr": _dense_init(keys[2 * l + 1], dims[l], dims[l + 1]),
+        })
+    return {"layers": layers}
+
+
+def gcn_apply(params, blks: Sequence[SampledLayer], feats: jax.Array,
+              use_kernel: bool = False) -> jax.Array:
+    """feats: features of blocks[-1].next_seeds. Returns logits for
+    blocks[0].seeds."""
+    h = feats
+    n_layers = len(params["layers"])
+    assert n_layers == len(blks)
+    for l, blk in enumerate(reversed(blks)):
+        p = params["layers"][l]
+        agg = B.aggregate(blk, h, use_kernel=use_kernel)      # (S, F_in)
+        z = agg @ p["w"] + p["b"]
+        res = h[: blk.seed_cap] @ p["wr"]                      # seeds prefix
+        h = z + res
+        if l < n_layers - 1:
+            h = jax.nn.relu(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GraphSAGE (mean aggregator + self concat)
+# ---------------------------------------------------------------------------
+
+def sage_init(key, in_dim: int, hidden: int, out_dim: int, num_layers: int = 3):
+    dims = [in_dim] + [hidden] * (num_layers - 1) + [out_dim]
+    keys = jax.random.split(key, num_layers)
+    layers = []
+    for l in range(num_layers):
+        layers.append({
+            "w": _dense_init(keys[l], 2 * dims[l], dims[l + 1]),
+            "b": jnp.zeros((dims[l + 1],)),
+        })
+    return {"layers": layers}
+
+
+def sage_apply(params, blks: Sequence[SampledLayer], feats: jax.Array,
+               use_kernel: bool = False) -> jax.Array:
+    h = feats
+    n_layers = len(params["layers"])
+    for l, blk in enumerate(reversed(blks)):
+        p = params["layers"][l]
+        agg = B.aggregate(blk, h, use_kernel=use_kernel)
+        self_h = h[: blk.seed_cap]
+        z = jnp.concatenate([self_h, agg], axis=-1) @ p["w"] + p["b"]
+        h = jax.nn.relu(z) if l < n_layers - 1 else z
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GATv2 (Brody et al. 2022), multi-head, over sampled blocks  (paper §A.6)
+# ---------------------------------------------------------------------------
+
+def gatv2_init(key, in_dim: int, hidden: int, out_dim: int,
+               num_layers: int = 3, heads: int = 8):
+    layers = []
+    d_in = in_dim
+    for l in range(num_layers):
+        last = l == num_layers - 1
+        heads_l = 1 if last else heads           # exact out_dim on last layer
+        per_head = out_dim if last else max(hidden // heads, 1)
+        ks = jax.random.split(jax.random.fold_in(key, l), 4)
+        layers.append({
+            "ws": _dense_init(ks[0], d_in, heads_l * per_head),   # dst transform
+            "wt": _dense_init(ks[1], d_in, heads_l * per_head),   # src transform
+            "attn": jax.random.normal(ks[2], (heads_l, per_head)) * 0.1,
+            "b": jnp.zeros((heads_l * per_head,)),
+        })
+        d_in = heads_l * per_head
+    return {"layers": layers}
+
+
+def gatv2_apply(params, blks: Sequence[SampledLayer], feats: jax.Array) -> jax.Array:
+    h = feats
+    n_layers = len(params["layers"])
+    for l, blk in enumerate(reversed(blks)):
+        p = params["layers"][l]
+        H, Ph = p["attn"].shape            # head structure from the params
+        S = blk.seed_cap
+        hs = (h[:S] @ p["ws"]).reshape(S, H, Ph)
+        ht = (h @ p["wt"]).reshape(-1, H, Ph)
+        src = jnp.where(blk.edge_mask, blk.src_slot, 0)
+        dst = jnp.where(blk.edge_mask, blk.dst_slot, 0)
+        e = jax.nn.leaky_relu(hs[dst] + ht[src], 0.2)           # (E,H,Ph)
+        logit = jnp.einsum("ehp,hp->eh", e, p["attn"])
+        logit = jnp.where(blk.edge_mask[:, None], logit, -1e30)
+        # segment softmax over incoming edges of each dst
+        seg = jnp.where(blk.edge_mask, dst, S)
+        mx = jax.ops.segment_max(logit, seg, num_segments=S + 1)[:-1]
+        mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+        ex = jnp.where(blk.edge_mask[:, None], jnp.exp(logit - mx[dst]), 0.0)
+        den = jax.ops.segment_sum(ex, seg, num_segments=S + 1)[:-1]
+        alpha = ex / jnp.maximum(den[dst], 1e-9)
+        msg = ht[src] * alpha[..., None]                         # (E,H,Ph)
+        out = jax.ops.segment_sum(msg.reshape(-1, H * Ph), seg,
+                                  num_segments=S + 1)[:-1]
+        out = out + p["b"]
+        h = jax.nn.elu(out) if l < n_layers - 1 else out
+    return h
+
+
+MODELS = {
+    "gcn": (gcn_init, gcn_apply),
+    "sage": (sage_init, sage_apply),
+    "gatv2": (gatv2_init, gatv2_apply),
+}

@@ -1,0 +1,611 @@
+"""Transformer building blocks: attention (GQA/local/softcap/cross),
+gated MLPs, scatter-dispatch MoE with optional LABOR-style Poisson
+capacity, and Mamba2 SSD. Pure JAX, param pytrees are plain dicts.
+
+Activation sharding hints go through repro.distributed.act_sharding.shard
+which is a no-op outside a mesh context.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.rng import hash_uniform_edge
+from repro.distributed.act_sharding import shard
+from repro.models.transformer.config import MoEConfig, SSMConfig, TransformerConfig
+
+
+def _dtype(cfg: TransformerConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, d_in, d_out, dtype, scale=None):
+    scale = scale if scale is not None else 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def norm_init(cfg: TransformerConfig, d=None):
+    d = d or cfg.d_model
+    if cfg.norm == "layernorm":
+        return {"scale": jnp.ones((d,), _dtype(cfg)), "bias": jnp.zeros((d,), _dtype(cfg))}
+    return {"scale": jnp.zeros((d,), _dtype(cfg))}  # rmsnorm stores (scale-1)
+
+
+def norm_apply(p, x, cfg: TransformerConfig, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        return (y * p["scale"].astype(jnp.float32)
+                + p["bias"].astype(jnp.float32)).astype(x.dtype)
+    ms = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    y = xf * jax.lax.rsqrt(ms + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta, fraction=1.0):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    rot = int(hd * fraction) // 2 * 2
+    if rot == 0:
+        return x
+    xr, xp = x[..., :rot], x[..., rot:]
+    half = rot // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) / half * math.log(theta))
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: TransformerConfig, cross: bool = False):
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    d_src = cfg.xattn_source_dim or cfg.d_model
+    kv_in = d_src if cross else cfg.d_model
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.q_dim, dt),
+        "wk": dense_init(ks[1], kv_in, cfg.kv_dim, dt),
+        "wv": dense_init(ks[2], kv_in, cfg.kv_dim, dt),
+        "wo": dense_init(ks[3], cfg.q_dim, cfg.d_model, dt),
+        "pre_norm": norm_init(cfg),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((cfg.q_dim,), dt)
+        p["bk"] = jnp.zeros((cfg.kv_dim,), dt)
+        p["bv"] = jnp.zeros((cfg.kv_dim,), dt)
+    if cfg.post_norms:
+        p["post_norm"] = norm_init(cfg)
+    return p
+
+
+def _qkv(p, x, kv_x, cfg: TransformerConfig):
+    B = x.shape[0]
+    q = x @ p["wq"]
+    k = kv_x @ p["wk"]
+    v = kv_x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, -1, cfg.n_heads, cfg.head_dim)
+    k = k.reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+    v = v.reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+    return q, k, v
+
+
+ATTN_CHUNK_Q = 1024  # q-chunked attention kicks in above this seq length
+
+
+def _attend_direct(q, k, v, cfg: TransformerConfig, mask):
+    """q: (B,Sq,H,hd); k,v: (B,Sk,Hkv,hd); mask broadcastable (B,1,Sq,Sk)
+    or None. GQA via head grouping."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    scale = cfg.query_scale if cfg.query_scale is not None else 1.0 / math.sqrt(hd)
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    scores = jnp.einsum("bskgh,btkh->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if cfg.attn_softcap is not None:
+        c = cfg.attn_softcap
+        scores = jnp.tanh(scores / c) * c
+    if mask is not None:
+        scores = jnp.where(mask[:, :, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgst,btkh->bskgh", w.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _attend_flags(q, k, v, cfg: TransformerConfig, *, causal, window,
+                  chunk_q: int = ATTN_CHUNK_Q):
+    """Mask-by-flags attention; q-chunked (streaming scores) above
+    chunk_q so the (Sq, Sk) score tensor never materializes — the XLA
+    analogue of the Pallas flash kernel, used on the training/prefill
+    path where sequence lengths reach 32k+."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+
+    def mask_for(q_lo, sq):
+        if not causal and window is None:
+            return None
+        qpos = q_lo + jnp.arange(sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        m = jnp.ones((sq, Sk), bool)
+        if causal:
+            m &= kpos <= qpos
+        if window is not None:
+            m &= qpos - kpos < window
+        return m[None, None]
+
+    if Sq <= chunk_q or Sq % chunk_q != 0:
+        return _attend_direct(q, k, v, cfg, mask_for(0, Sq))
+    nch = Sq // chunk_q
+    qc = q.reshape(B, nch, chunk_q, H, hd)
+
+    def body(_, ci):
+        qi = qc[:, ci]
+        out = _attend_direct(qi, k, v, cfg, mask_for(ci * chunk_q, chunk_q))
+        return None, out
+
+    _, outs = jax.lax.scan(body, None, jnp.arange(nch))   # (nch,B,Cq,H,hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+def _attend(q, k, v, cfg: TransformerConfig, mask):
+    return _attend_direct(q, k, v, cfg, mask)
+
+
+def causal_mask(Sq, Sk, q_offset=0, window=None):
+    qpos = jnp.arange(Sq)[:, None] + q_offset
+    kpos = jnp.arange(Sk)[None, :]
+    m = kpos <= qpos
+    if window is not None:
+        m = m & (qpos - kpos < window)
+    return m[None, None]  # (1,1,Sq,Sk)
+
+
+def attn_apply(p, x, cfg: TransformerConfig, *, kind: str = "attn",
+               positions=None, xsource=None, use_flash: bool = False):
+    """Training/prefill path. x: (B,S,d)."""
+    B, S, _ = x.shape
+    h = norm_apply(p["pre_norm"], x, cfg)
+    cross = kind == "xattn"
+    kv_in = xsource if cross else h
+    q, k, v = _qkv(p, h, kv_in, cfg)
+    if positions is None:
+        positions = jnp.arange(S)[None]
+    if not cross:
+        q = rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    if cfg.attn_parallelism == "sequence" and not cross:
+        # context parallel: queries sharded over S, K/V gathered (small
+        # under GQA), full heads per device — no head padding, no psum
+        q = shard(q, ("pod", "data"), "model", None, None)
+        k = shard(k, ("pod", "data"), None, None, None)
+        v = shard(v, ("pod", "data"), None, None, None)
+    else:
+        q = shard(q, ("pod", "data"), None, "model", None)
+        k = shard(k, ("pod", "data"), None, None, None)
+        v = shard(v, ("pod", "data"), None, None, None)
+    causal = not (cross or cfg.is_encoder)
+    window = cfg.window if kind == "attn_local" else None
+    if use_flash and causal:
+        from repro.kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, True, window, cfg.attn_softcap,
+                              cfg.query_scale or 1.0 / math.sqrt(cfg.head_dim))
+    else:
+        out = _attend_flags(q, k, v, cfg, causal=causal, window=window)
+    out = out.reshape(B, S, cfg.q_dim) @ p["wo"]
+    if cfg.post_norms:
+        out = norm_apply(p["post_norm"], out, cfg)
+    return x + shard(out, ("pod", "data"), None, None)
+
+
+def attn_decode(p, x, cache, pos, cfg: TransformerConfig, *, kind="attn", xkv=None):
+    """One-token decode. x: (B,1,d); cache: {"k","v"}: (B,Smax,Hkv,hd);
+    pos: int32[] current position. xkv: precomputed cross (k,v)."""
+    B = x.shape[0]
+    h = norm_apply(p["pre_norm"], x, cfg)
+    if kind == "xattn":
+        q = (h @ p["wq"])
+        if cfg.qkv_bias:
+            q = q + p["bq"]
+        q = q.reshape(B, 1, cfg.n_heads, cfg.head_dim)
+        k, v = xkv
+        mask = None
+        new_cache = cache
+    else:
+        q, k_new, v_new = _qkv(p, h, h, cfg)
+        posv = jnp.full((B, 1), pos, jnp.int32)
+        q = rope(q, posv, cfg.rope_theta, cfg.rope_fraction)
+        k_new = rope(k_new, posv, cfg.rope_theta, cfg.rope_fraction)
+        k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                         (0, pos, 0, 0))
+        v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                         (0, pos, 0, 0))
+        new_cache = {"k": k, "v": v}
+        kpos = jnp.arange(k.shape[1])[None, None]  # (1,1,Sk)
+        m = kpos <= pos
+        if kind == "attn_local" and cfg.window is not None:
+            m = m & (pos - kpos < cfg.window)
+        mask = m[:, :, None]  # (1,1,1,Sk) -> broadcast (B,1,Sq=1,Sk)
+    out = _attend(q, k, v, cfg, mask)
+    out = out.reshape(B, 1, cfg.q_dim) @ p["wo"]
+    if cfg.post_norms:
+        out = norm_apply(p["post_norm"], out, cfg)
+    return x + out, new_cache
+
+
+def attn_cache_spec(cfg: TransformerConfig, batch, seq):
+    dt = _dtype(cfg)
+    return {
+        "k": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((batch, seq, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# mlp
+# ---------------------------------------------------------------------------
+
+def _act(cfg: TransformerConfig, x):
+    if cfg.activation == "silu":
+        return jax.nn.silu(x)
+    if cfg.activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if cfg.activation == "relu2":
+        return jnp.square(jax.nn.relu(x))
+    raise ValueError(cfg.activation)
+
+
+def mlp_init(key, cfg: TransformerConfig, d_ff=None):
+    d_ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    dt = _dtype(cfg)
+    gated = cfg.gated_mlp and cfg.activation != "relu2"
+    p = {
+        "wi": dense_init(ks[0], cfg.d_model, d_ff, dt),
+        "wo": dense_init(ks[1], d_ff, cfg.d_model, dt),
+        "pre_norm": norm_init(cfg),
+    }
+    if gated:
+        p["wg"] = dense_init(ks[2], cfg.d_model, d_ff, dt)
+    if cfg.post_norms:
+        p["post_norm"] = norm_init(cfg)
+    return p
+
+
+def mlp_apply(p, x, cfg: TransformerConfig):
+    h = norm_apply(p["pre_norm"], x, cfg)
+    up = h @ p["wi"]
+    if "wg" in p:
+        up = _act(cfg, h @ p["wg"]) * up
+    else:
+        up = _act(cfg, up)
+    up = shard(up, ("pod", "data"), None, "model")
+    out = up @ p["wo"]
+    if cfg.post_norms:
+        out = norm_apply(p["post_norm"], out, cfg)
+    return x + out
+
+
+# ---------------------------------------------------------------------------
+# MoE: scatter dispatch with capacity; optional LABOR Poisson capacity
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: TransformerConfig):
+    m = cfg.moe
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    E, d, f = m.num_experts, cfg.d_model, m.d_expert
+    scale = 1.0 / math.sqrt(d)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "ewi": (jax.random.normal(ks[1], (E, d, f)) * scale).astype(dt),
+        "ewg": (jax.random.normal(ks[2], (E, d, f)) * scale).astype(dt),
+        "ewo": (jax.random.normal(ks[3], (E, f, d)) / math.sqrt(f)).astype(dt),
+        "pre_norm": norm_init(cfg),
+    }
+    if m.shared_expert:
+        p["shared_wi"] = dense_init(ks[4], d, f, dt)
+        p["shared_wg"] = dense_init(ks[5], d, f, dt)
+        p["shared_wo"] = dense_init(jax.random.fold_in(ks[4], 1), f, d, dt)
+    return p
+
+
+def _moe_capacity(m: MoEConfig, tokens: int) -> int:
+    c = int(tokens * m.top_k / m.num_experts * m.capacity_factor) + 8
+    return min(max(c - c % -8, 8), tokens)  # round up to 8
+
+
+def moe_apply(p, x, cfg: TransformerConfig, salt=jnp.uint32(0x9E3779B9)):
+    """Scatter-dispatch MoE with GROUP-LOCAL routing. x: (B,S,d).
+
+    Routing (top-k, position-in-expert cumsum, capacity) happens per
+    batch row, so with B sharded over the data axes every routing op is
+    device-local under GSPMD — the GShard "group-limited capacity"
+    scheme — and only the expert einsums touch the expert-parallel
+    'model' axis.
+    """
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.num_experts, m.top_k
+    C = _moe_capacity(m, S)
+    h = norm_apply(p["pre_norm"], x, cfg)
+
+    logits = (h.astype(jnp.float32) @ p["router"]).astype(jnp.float32)  # (B,S,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, experts = jax.lax.top_k(probs, k)          # (B,S,k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    # position of each (token, j) within its expert queue — cumsum along
+    # the (local) sequence axis
+    counts = jnp.zeros((B, E), jnp.int32)
+    slots, keeps, ws = [], [], []
+    token_ids = jnp.arange(B * S).reshape(B, S)
+    for j in range(k):
+        ex = experts[..., j]                                            # (B,S)
+        oh = jax.nn.one_hot(ex, E, dtype=jnp.int32)                     # (B,S,E)
+        pos_te = jnp.cumsum(oh, axis=1) - oh + counts[:, None, :]
+        pos_j = jnp.take_along_axis(pos_te, ex[..., None], axis=-1)[..., 0]
+        n_e = counts + jnp.sum(oh, axis=1)
+        counts = n_e
+        if m.poisson_capacity:
+            # LABOR-inspired: subsample tokens of oversubscribed experts
+            # with prob p_e = C/n_e and HT-correct the gate by 1/p_e —
+            # variance-matched dropping instead of positional truncation.
+            n_tok = jnp.take_along_axis(n_e[:, None, :].astype(jnp.float32)
+                                        * jnp.ones((1, S, 1)), ex[..., None],
+                                        axis=-1)[..., 0]
+            p_keep = jnp.minimum(1.0, C / jnp.maximum(n_tok, 1.0))
+            r = hash_uniform_edge(salt, token_ids, ex)
+            sel = r < p_keep
+            oh_kept = oh * sel[..., None].astype(jnp.int32)
+            pos_te = jnp.cumsum(oh_kept, axis=1) - oh_kept
+            pos_j = jnp.take_along_axis(pos_te, ex[..., None], axis=-1)[..., 0]
+            keep = sel & (pos_j < C)
+            w = jnp.where(keep, 1.0 / p_keep, 0.0)
+        else:
+            keep = pos_j < C
+            w = keep.astype(jnp.float32)
+        slots.append(ex * C + pos_j)
+        keeps.append(keep)
+        ws.append(w * gates[..., j])
+
+    dt = h.dtype
+    # GShard-style flow: scatter/gather stay LOCAL on the token side
+    # (dp-sharded, expert dim unsharded), with exactly one resharding
+    # each way around the expert einsums (dp <-> expert-parallel 'model'
+    # = the EP all-to-all). Per-slot gathers against an expert-sharded
+    # buffer would instead cost one all-gather per top-k slot.
+    idx_all = jnp.stack([jnp.where(kp, sl, 0)
+                         for kp, sl in zip(keeps, slots)], 1)   # (B,k,S)
+    keep_all = jnp.stack(keeps, 1)                               # (B,k,S)
+
+    def _dispatch_row(h_row, idxs, kps):
+        # per-sequence scatter; vmapped so B stays a batch dim the
+        # partitioner can keep dp-sharded (a flat scatter with explicit
+        # batch indices replicates the (B, E*C, d) buffer instead)
+        xd = jnp.zeros((E * C, d), dt)
+        for j in range(k):
+            xd = xd.at[idxs[j]].add(h_row * kps[j][:, None].astype(dt))
+        return xd
+
+    xd = jax.vmap(_dispatch_row)(h, idx_all, keep_all)
+    xd = shard(xd, ("pod", "data"), None, None)
+    xe = xd.reshape(B, E, C, d)
+    xe = shard(xe, ("pod", "data"), "model", None, None)   # EP dispatch
+
+    up = jnp.einsum("becd,edf->becf", xe, p["ewi"])
+    gate = jnp.einsum("becd,edf->becf", xe, p["ewg"])
+    ye = jnp.einsum("becf,efd->becd", _act(cfg, gate) * up, p["ewo"])
+    ye = shard(ye, ("pod", "data"), "model", None, None)
+    yf = ye.reshape(B, E * C, d)
+    yf = shard(yf, ("pod", "data"), None, None)            # EP combine
+
+    # single fused combine gather: one bf16 (E*C, d) gradient buffer in
+    # bwd instead of k f32 ones (the k-gather version kept ~k live
+    # f32[B,E*C,d] scatter buffers — measured via buffer assignment)
+    w_all = jnp.stack(ws, 1)                                     # (B,k,S)
+
+    def _combine_row(yf_row, idxs, w):
+        got = yf_row[idxs.reshape(-1)].reshape(k, S, d)          # bf16
+        return jnp.einsum("ksd,ks->sd", got, w.astype(got.dtype),
+                          preferred_element_type=jnp.float32)
+
+    out = jax.vmap(_combine_row)(yf, idx_all, w_all)             # (B,S,d) f32
+    if m.shared_expert:
+        sup = _act(cfg, h @ p["shared_wg"]) * (h @ p["shared_wi"])
+        out = out + (sup @ p["shared_wo"]).astype(jnp.float32)
+    out = out.astype(x.dtype)
+    return x + shard(out, ("pod", "data"), None, None)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD, chunked — Dao & Gu 2024 state-space duality form)
+# ---------------------------------------------------------------------------
+
+def mamba_init(key, cfg: TransformerConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    ks = jax.random.split(key, 4)
+    dt = _dtype(cfg)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * s.n_groups * s.d_state + nh, dt),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_dim)) * 0.2).astype(dt),
+        "conv_b": jnp.zeros((conv_dim,), dt),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_in, d, dt),
+        "pre_norm": norm_init(cfg),
+        "gate_norm": {"scale": jnp.zeros((d_in,), dt)},
+    }
+
+
+def _segsum(x):
+    """log-space segment sums: out[..., i, j] = sum_{j<m<=i} x[..., m]."""
+    T = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    out = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(x, dtv, A, Bm, Cm, chunk, init_state=None):
+    """SSD forward. x: (b,s,h,p); dtv: (b,s,h) softplus'd; A: (h,) negative;
+    Bm,Cm: (b,s,g,n). Returns y (b,s,h,p), final state (b,h,p,n)."""
+    b, s, h, pdim = x.shape
+    g, n = Bm.shape[2], Bm.shape[3]
+    s_orig = s
+    if s % chunk:
+        # pad with dt=0 steps: decay exp(0)=1, zero state contribution
+        pad = chunk - s % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dtv = jnp.pad(dtv, ((0, 0), (0, pad), (0, 0)))
+        Bm = jnp.pad(Bm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Cm = jnp.pad(Cm, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        s = s + pad
+    nc = s // chunk
+    rep = h // g
+
+    xr = x.reshape(b, nc, chunk, h, pdim)
+    dtr = dtv.reshape(b, nc, chunk, h)
+    Br = Bm.reshape(b, nc, chunk, g, n)
+    Cr = Cm.reshape(b, nc, chunk, g, n)
+    dA = dtr * A[None, None, None, :]            # (b,nc,Q,h) negative
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # intra-chunk (diagonal blocks): Y[i] += C_i . B_j^T * exp(seg) * dt_j x_j
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))          # (b,nc,h,Q,Q)
+    CB = jnp.einsum("bcqgn,bckgn->bcgqk", Cr, Br)           # (b,nc,g,Q,Q)
+    CB = jnp.repeat(CB, rep, axis=2)                        # (b,nc,h,Q,Q)
+    dtx = xr * dtr[..., None]                               # (b,nc,Q,h,p)
+    y_intra = jnp.einsum("bchqk,bckhp->bcqhp", (CB * L).astype(x.dtype), dtx)
+
+    # chunk states: S_c = sum_j exp(dA_cum[end]-dA_cum[j]) dt_j B_j x_j^T
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)   # (b,nc,Q,h)
+    Brep_s = jnp.repeat(Br, rep, axis=3)                    # groups -> heads
+    SB = jnp.einsum("bcqhn,bcqh,bcqhp->bchpn", Brep_s.astype(jnp.float32),
+                    (dtr * decay_to_end).astype(jnp.float32),
+                    xr.astype(jnp.float32))                  # (b,nc,h,p,n)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])              # (b,nc,h)
+
+    def scan_fn(carry, inp):
+        Sc, dec = inp
+        new = carry * dec[..., None, None] + Sc
+        return new, carry  # emit PREVIOUS state (state at chunk start)
+
+    if init_state is None:
+        init_state = jnp.zeros((b, h, pdim, n), jnp.float32)
+    final, prev_states = jax.lax.scan(
+        scan_fn, init_state,
+        (SB.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)      # (b,nc,h,p,n)
+
+    # inter-chunk output: C_i . state_start * exp(dA_cum[i])
+    decay_from_start = jnp.exp(dA_cum)                      # (b,nc,Q,h)
+    Crep = jnp.repeat(Cr, rep, axis=3)                      # (b,nc,Q,h*,n) g->h
+    y_inter = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp",
+                         Crep.astype(jnp.float32), prev_states, decay_from_start)
+    y = y_intra.astype(jnp.float32) + y_inter
+    return y.reshape(b, s, h, pdim)[:, :s_orig], final
+
+
+def mamba_apply(p, x, cfg: TransformerConfig, conv_state=None, ssm_state=None,
+                decode: bool = False):
+    """Mamba2 block. Train/prefill: x (B,S,d), returns (y, (conv_state, ssm_state)).
+    Decode: x (B,1,d) with states provided."""
+    s = cfg.ssm
+    B = x.shape[0]
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    gdim = s.n_groups * s.d_state
+    h = norm_apply(p["pre_norm"], x, cfg)
+    zxbcdt = h @ p["in_proj"]
+    z, xbc, dtv = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * gdim], axis=-1)
+
+    if not decode:
+        S = x.shape[1]
+        # causal depthwise conv over (B,S,conv_dim)
+        pad = jnp.pad(xbc, ((0, 0), (s.d_conv - 1, 0), (0, 0)))
+        conv_state_out = pad[:, -(s.d_conv - 1):] if s.d_conv > 1 else None
+        xbc_c = sum(pad[:, i:i + S] * p["conv_w"][i] for i in range(s.d_conv))
+        xbc_c = jax.nn.silu(xbc_c + p["conv_b"])
+        xs, Bm, Cm = jnp.split(xbc_c, [d_in, d_in + gdim], axis=-1)
+        xs = xs.reshape(B, S, nh, s.head_dim)
+        Bm = Bm.reshape(B, S, s.n_groups, s.d_state)
+        Cm = Cm.reshape(B, S, s.n_groups, s.d_state)
+        dtv = jax.nn.softplus(dtv.astype(jnp.float32) + p["dt_bias"])
+        A = -jnp.exp(p["A_log"])
+        y, fin = ssd_chunked(xs, dtv, A, Bm, Cm, s.chunk, ssm_state)
+        y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+        y = y.reshape(B, S, d_in).astype(x.dtype)
+        y = norm_apply({"scale": p["gate_norm"]["scale"]}, y * jax.nn.silu(z),
+                       dataclass_rms(cfg))
+        out = y @ p["out_proj"]
+        return x + out, (conv_state_out, fin)
+
+    # single-token decode
+    conv_in = jnp.concatenate([conv_state, xbc], axis=1)     # (B, d_conv, C)
+    new_conv_state = conv_in[:, 1:]
+    xbc_c = jnp.sum(conv_in * p["conv_w"][None], axis=1, keepdims=True)
+    xbc_c = jax.nn.silu(xbc_c + p["conv_b"])
+    xs, Bm, Cm = jnp.split(xbc_c[:, 0], [d_in, d_in + gdim], axis=-1)
+    xs = xs.reshape(B, nh, s.head_dim)
+    Bm = Bm.reshape(B, s.n_groups, s.d_state)
+    Cm = Cm.reshape(B, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dtv[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    rep = nh // s.n_groups
+    dec = jnp.exp(dtv * A[None])                              # (B,nh)
+    Brep_d = jnp.repeat(Bm, rep, axis=1)                      # (B,nh,n)
+    Bx = jnp.einsum("bhn,bh,bhp->bhpn", Brep_d.astype(jnp.float32),
+                    dtv, xs.astype(jnp.float32))
+    new_ssm = ssm_state * dec[..., None, None] + Bx
+    Crep = jnp.repeat(Cm, rep, axis=1)                        # (B,nh,n)
+    y = jnp.einsum("bhn,bhpn->bhp", Crep.astype(jnp.float32), new_ssm)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = norm_apply({"scale": p["gate_norm"]["scale"]}, y * jax.nn.silu(z),
+                   dataclass_rms(cfg))
+    return x + y @ p["out_proj"], (new_conv_state, new_ssm)
+
+
+def dataclass_rms(cfg):
+    """cfg view forcing rmsnorm (mamba gate-norm is always RMS)."""
+    import dataclasses as _dc
+    return _dc.replace(cfg, norm="rmsnorm") if cfg.norm != "rmsnorm" else cfg
+
+
+def mamba_cache_spec(cfg: TransformerConfig, batch):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    conv_dim = d_in + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), _dtype(cfg)),
+        "ssm": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }

@@ -1,0 +1,199 @@
+"""LM-level entry points: loss, train_step / prefill_step / serve_step
+factories, and ShapeDtypeStruct input specs for the multi-pod dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import stack
+from repro.models.transformer.config import ShapeSpec, TransformerConfig
+from repro.optim import adam
+
+
+def cross_entropy(logits, labels):
+    """logits (B,S,V) f32; labels (B,S) int32, -1 = ignored."""
+    mask = labels >= 0
+    safe = jnp.where(mask, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1)
+
+
+def loss_fn(params, batch: Dict[str, jax.Array], cfg: TransformerConfig,
+            use_flash: bool = False):
+    logits = stack.forward(params, batch["tokens"], cfg,
+                           xsource=batch.get("xsource"), use_flash=use_flash)
+    return cross_entropy(logits.astype(jnp.float32), batch["labels"])
+
+
+def make_train_step(cfg: TransformerConfig, opt_cfg: adam.AdamConfig,
+                    lr_schedule=None, use_flash: bool = False,
+                    num_microbatches: int = 1,
+                    accum_dtype: str = "float32",
+                    unroll_microbatches: bool = False):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``num_microbatches > 1`` scans gradient accumulation over batch slices
+    (activation memory / microbatches); grads are averaged in
+    ``accum_dtype`` (bf16 halves accumulator HBM for the 400B configs).
+    """
+
+    def grads_of(params, batch):
+        from repro.distributed.sharding import constrain_like_params
+        loss, grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, use_flash=use_flash))(params)
+        # force the FSDP reduce-scatter right here: otherwise full-d f32
+        # gradient partials for several layers stay live simultaneously
+        # (measured via buffer assignment on the 400B MoE config)
+        return loss, constrain_like_params(grads)
+
+    def train_step(params, opt_state, batch):
+        if num_microbatches == 1:
+            loss, grads = grads_of(params, batch)
+        else:
+            from repro.distributed.sharding import constrain_like_params
+            n = num_microbatches
+            mb = jax.tree.map(
+                lambda a: a.reshape((n, a.shape[0] // n) + a.shape[1:]), batch)
+            acc0 = constrain_like_params(jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.dtype(accum_dtype)), params))
+
+            def body(carry, mbatch):
+                acc, loss_acc = carry
+                loss, grads = grads_of(params, mbatch)
+                acc = constrain_like_params(jax.tree.map(
+                    lambda a, g: a + g.astype(a.dtype) / n, acc, grads))
+                return (acc, loss_acc + loss / n), None
+
+            if unroll_microbatches:
+                # cost-analysis mode: scan bodies are counted once by
+                # XLA's analyzer, which would hide the per-microbatch
+                # FSDP weight re-gathers — unroll so they are counted
+                carry = (acc0, jnp.zeros((), jnp.float32))
+                for i in range(n):
+                    carry, _ = body(carry, jax.tree.map(lambda a: a[i], mb))
+                grads, loss = carry
+            else:
+                (grads, loss), _ = jax.lax.scan(
+                    body, (acc0, jnp.zeros((), jnp.float32)), mb)
+
+        lr_scale = lr_schedule(opt_state["step"]) if lr_schedule else 1.0
+        params, opt_state, m = adam.apply_updates(params, grads, opt_state,
+                                                  opt_cfg, lr_scale)
+        m["loss"] = loss
+        return params, opt_state, m
+
+    return train_step
+
+
+def make_prefill_step(cfg: TransformerConfig):
+    def prefill_step(params, batch):
+        return stack.prefill(params, batch["tokens"], cfg,
+                             xsource=batch.get("xsource"))
+    return prefill_step
+
+
+def make_serve_step(cfg: TransformerConfig, seq_shard_cache: bool = False):
+    """One token for the whole batch against a seq_len KV cache."""
+    def serve_step(params, cache, tokens, pos):
+        if seq_shard_cache:
+            cache = stack.shard_cache(cache, cfg, seq_shard=True)
+        logits, cache = stack.decode_step(params, tokens, cache, pos, cfg)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# dry-run input specs (ShapeDtypeStructs, no allocation)
+# ---------------------------------------------------------------------------
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def input_specs(cfg: TransformerConfig, shape: ShapeSpec,
+                mesh=None, dp_axes=("pod", "data")) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of a given cell.
+
+    For [vlm]/[audio] archs the modality frontend is a stub: xsource is
+    the precomputed patch/frame embedding tensor (DESIGN.md §4).
+    """
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    B, S = shape.global_batch, shape.seq_len
+    def _dp(axes):
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+
+    def dsh(*rest):
+        if mesh is None:
+            return None
+        axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+        return NamedSharding(mesh, P(_dp(axes), *rest))
+
+    specs: Dict[str, Any] = {}
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((B, S), jnp.int32, dsh(None)),
+            "labels": _sds((B, S), jnp.int32, dsh(None)),
+        }
+        if cfg.xattn_every or cfg.has_block("xattn"):
+            batch["xsource"] = _sds(
+                (B, cfg.xattn_source_len, cfg.xattn_source_dim or cfg.d_model),
+                jnp.dtype(cfg.dtype), dsh(None, None))
+        specs["batch"] = batch
+    elif shape.kind == "prefill":
+        batch = {"tokens": _sds((B, S), jnp.int32, dsh(None))}
+        if cfg.xattn_every or cfg.has_block("xattn"):
+            batch["xsource"] = _sds(
+                (B, cfg.xattn_source_len, cfg.xattn_source_dim or cfg.d_model),
+                jnp.dtype(cfg.dtype), dsh(None, None))
+        specs["batch"] = batch
+    else:  # decode
+        specs["tokens"] = _sds((B, 1), jnp.int32, dsh(None))
+        specs["pos"] = _sds((), jnp.int32)
+    return specs
+
+
+def cache_specs(cfg: TransformerConfig, shape: ShapeSpec, mesh=None,
+                seq_shard: bool = False, dp_axes=("pod", "data")):
+    """ShapeDtypeStructs for the decode cache of a given cell."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cache = jax.eval_shape(lambda: stack.init_cache(cfg, shape.global_batch,
+                                                    shape.seq_len))
+    if mesh is None:
+        return cache
+    axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    dpa = axes if len(axes) > 1 else (axes[0] if axes else None)
+
+    def _axis_prod(entry):
+        if entry is None:
+            return 1
+        if isinstance(entry, (tuple, list)):
+            n = 1
+            for x in entry:
+                n *= mesh.shape[x]
+            return n
+        return mesh.shape[entry]
+
+    def ann(a):
+        if a.ndim == 5:  # (R,B,S,H,hd)
+            entries = [None, dpa, "model" if seq_shard else None, None, None]
+        elif a.ndim == 4:  # (R,B,w,C) conv or (R,B,h,...)
+            entries = [None, dpa, None, "model"]
+        else:
+            entries = [None, dpa] + [None] * (a.ndim - 2)
+        # replicate any dim its axes don't divide (e.g. 1500-frame xattn)
+        entries = [e if e is not None and d % _axis_prod(e) == 0 else None
+                   for d, e in zip(a.shape, entries)]
+        return jax.ShapeDtypeStruct(a.shape, a.dtype,
+                                    sharding=NamedSharding(mesh, P(*entries)))
+    return jax.tree.map(ann, cache)

@@ -1,0 +1,363 @@
+"""Layer-stack assembly: init / forward / prefill / decode over the
+repeating ``layer_pattern``, scanned over pattern repeats so HLO size and
+activation memory are O(1) in depth. Zamba2-style ``shared_attn`` blocks
+use one unstacked parameter set referenced from every repeat.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.act_sharding import shard
+from repro.models.transformer import layers as L
+from repro.models.transformer.config import TransformerConfig
+
+ATTN_KINDS = ("attn", "attn_local", "attn_global", "xattn")
+
+
+def _remat_policy(cfg):
+    if cfg.remat_policy == "dots":
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None  # "full": recompute everything in bwd (min activation HBM)
+
+
+def _entry_init(key, cfg: TransformerConfig, kind: str, mixer: str):
+    p: Dict[str, Any] = {}
+    if kind == "mamba":
+        p["mix"] = L.mamba_init(key, cfg)
+    elif kind == "shared_attn":
+        p["mix"] = {}  # parameters live unstacked in params["shared"]
+    elif kind == "xattn":
+        p["mix"] = L.attn_init(jax.random.fold_in(key, 1), cfg, cross=True)
+    else:
+        p["mix"] = L.attn_init(jax.random.fold_in(key, 1), cfg)
+    if mixer == "mlp":
+        p["ffn"] = L.mlp_init(jax.random.fold_in(key, 2), cfg)
+    elif mixer == "moe":
+        p["ffn"] = L.moe_init(jax.random.fold_in(key, 2), cfg)
+    return p
+
+
+def init_params(key, cfg: TransformerConfig) -> Dict[str, Any]:
+    dt = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * 0.02).astype(dt),
+        "final_norm": L.norm_init(cfg),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab, dt)
+
+    # stacked per-pattern-entry params over `repeats`
+    entries = []
+    for i, kind in enumerate(cfg.layer_pattern):
+        mixer = cfg.mixer_for(i)
+        ek = jax.random.fold_in(keys[2], i)
+        if cfg.scan_layers:
+            stacked = jax.vmap(
+                lambda k: _entry_init(k, cfg, kind, mixer)
+            )(jax.random.split(ek, cfg.repeats))
+        else:
+            stacked = [
+                _entry_init(jax.random.fold_in(ek, r), cfg, kind, mixer)
+                for r in range(cfg.repeats)
+            ]
+        entries.append(stacked)
+    params["layers"] = entries
+
+    if cfg.has_block("shared_attn"):
+        params["shared"] = {
+            "attn": L.attn_init(keys[3], cfg),
+            "mlp": L.mlp_init(keys[4], cfg),
+        }
+    if cfg.encoder is not None:
+        params["encoder"] = init_params(keys[5], cfg.encoder)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward (training / full-sequence)
+# ---------------------------------------------------------------------------
+
+def _apply_entry(p, x, cfg, kind, mixer, shared, xsource, use_flash):
+    if kind == "mamba":
+        x, _ = L.mamba_apply(p["mix"], x, cfg)
+    elif kind == "shared_attn":
+        x = L.attn_apply(shared["attn"], x, cfg, kind="attn", use_flash=use_flash)
+        x = L.mlp_apply(shared["mlp"], x, cfg)
+    elif kind == "xattn":
+        x = L.attn_apply(p["mix"], x, cfg, kind="xattn", xsource=xsource)
+    else:
+        x = L.attn_apply(p["mix"], x, cfg, kind=kind, use_flash=use_flash)
+    if mixer == "mlp":
+        x = L.mlp_apply(p["ffn"], x, cfg)
+    elif mixer == "moe":
+        x = L.moe_apply(p["ffn"], x, cfg)
+    return x
+
+
+def embed_tokens(params, tokens, cfg: TransformerConfig):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(cfg.d_model, x.dtype) ** 0.5
+    return shard(x, ("pod", "data"), None, None)
+
+
+def logits_head(params, x, cfg: TransformerConfig):
+    x = L.norm_apply(params["final_norm"], x, cfg)
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    # §Perf: gather the (small, d-sharded) projection over the data axis
+    # BEFORE the matmul; otherwise GSPMD psums (tokens x vocab/TP) f32
+    # logit partials over 'data' — ~8x the wire on 256k vocabularies
+    w = shard(w, None, "model")
+    logits = x @ w.astype(x.dtype)
+    if cfg.final_softcap is not None:
+        c = cfg.final_softcap
+        logits = jnp.tanh(logits.astype(jnp.float32) / c) * c
+    logits = shard(logits, ("pod", "data"), None, "model")
+    return logits.astype(jnp.dtype(cfg.logit_dtype))
+
+
+def encode(params, x, cfg: TransformerConfig):
+    """Encoder stack over precomputed frame/patch embeddings (stub
+    frontend): x (B, N, d) -> (B, N, d). No logits head, no causal mask."""
+    shared = params.get("shared")
+
+    def group_fn(x, group_params):
+        for i, kind in enumerate(cfg.layer_pattern):
+            x = _apply_entry(group_params[i], x, cfg, kind, cfg.mixer_for(i),
+                             shared, None, False)
+        return x
+
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(lambda c, xs: (group_fn(c, xs), None), x,
+                            tuple(params["layers"]))
+    else:
+        for r in range(cfg.repeats):
+            x = group_fn(x, tuple(e[r] for e in params["layers"]))
+    return L.norm_apply(params["final_norm"], x, cfg)
+
+
+def _resolve_xsource(params, cfg: TransformerConfig, xsource):
+    """Enc-dec (whisper): run the encoder over frame embeddings to get the
+    decoder's cross-attention source."""
+    if cfg.encoder is not None and xsource is not None:
+        return encode(params["encoder"], xsource, cfg.encoder)
+    return xsource
+
+
+def forward(params, tokens, cfg: TransformerConfig, xsource=None,
+            use_flash: bool = False):
+    """tokens: int32 (B, S) -> logits (B, S, V)."""
+    shared = params.get("shared")
+    xsource = _resolve_xsource(params, cfg, xsource)
+    x = embed_tokens(params, tokens, cfg)
+
+    def group_fn(x, group_params):
+        if cfg.seq_shard_carry:
+            x = shard(x, ("pod", "data"), None, None)   # gather S
+        for i, kind in enumerate(cfg.layer_pattern):
+            x = _apply_entry(group_params[i], x, cfg, kind, cfg.mixer_for(i),
+                             shared, xsource, use_flash)
+        if cfg.seq_shard_carry:
+            x = shard(x, ("pod", "data"), "model", None)  # carry S-sharded
+        return x
+
+    if cfg.scan_layers:
+        body = group_fn
+        if cfg.remat:
+            body = jax.checkpoint(group_fn, policy=_remat_policy(cfg))
+        x, _ = jax.lax.scan(
+            lambda c, xs: (body(c, xs), None), x, tuple(params["layers"])
+        )
+        if cfg.seq_shard_carry:
+            x = shard(x, ("pod", "data"), None, None)
+    else:
+        body = group_fn
+        if cfg.remat:
+            body = jax.checkpoint(group_fn, policy=_remat_policy(cfg))
+        for r in range(cfg.repeats):
+            x = body(x, tuple(e[r] for e in params["layers"]))
+    return logits_head(params, x, cfg)
+
+
+# ---------------------------------------------------------------------------
+# kv / state caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: TransformerConfig, batch: int, max_seq: int):
+    """Cache pytree mirroring params['layers'] structure (stacked)."""
+    def entry_cache(kind):
+        if kind == "mamba":
+            return L.mamba_cache_spec(cfg, batch)
+        if kind == "xattn":
+            # cross K/V filled at prefill; static thereafter
+            return {
+                "xk": jnp.zeros((batch, cfg.xattn_source_len, cfg.n_kv_heads,
+                                 cfg.head_dim), jnp.dtype(cfg.dtype)),
+                "xv": jnp.zeros((batch, cfg.xattn_source_len, cfg.n_kv_heads,
+                                 cfg.head_dim), jnp.dtype(cfg.dtype)),
+            }
+        return L.attn_cache_spec(cfg, batch, max_seq)
+
+    caches = []
+    for kind in cfg.layer_pattern:
+        one = entry_cache(kind)
+        stacked = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.repeats,) + a.shape), one
+        )
+        caches.append(stacked)
+    return caches
+
+
+def shard_cache(cache, cfg: TransformerConfig, seq_shard: bool):
+    """Annotate cache shardings: batch over dp; optionally sequence over
+    'model' (flash-decoding style distributed KV for long contexts)."""
+    def ann(path_kind, a):
+        if a.ndim == 5:  # (R, B, S, H, hd) attention K/V
+            return shard(a, None, ("pod", "data"), "model" if seq_shard else None,
+                         None, None)
+        if a.ndim == 4:  # mamba conv (R,B,w,C)
+            return shard(a, None, ("pod", "data"), None, "model")
+        if a.ndim == 5 or a.ndim == 4:
+            return a
+        return shard(a, None, ("pod", "data"), None, None, None)
+    return jax.tree.map(lambda a: ann(None, a), cache)
+
+
+# ---------------------------------------------------------------------------
+# prefill & decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, tokens, cfg: TransformerConfig, xsource=None):
+    """Full-sequence forward that also materializes decode caches.
+
+    Implemented as forward + per-layer K/V recomputation folded into the
+    same scan (the K/V projections are cheap relative to attention).
+    Returns (last_logits (B,V), cache).
+    """
+    B, S = tokens.shape
+    shared = params.get("shared")
+    xsource = _resolve_xsource(params, cfg, xsource)
+    x = embed_tokens(params, tokens, cfg)
+    positions = jnp.arange(S)[None]
+
+    def entry_with_cache(p, x, kind, mixer):
+        cache_out = None
+        if kind == "mamba":
+            x, (conv, ssm) = L.mamba_apply(p["mix"], x, cfg)
+            cache_out = {"conv": conv, "ssm": ssm}
+        elif kind == "shared_attn":
+            h = L.norm_apply(shared["attn"]["pre_norm"], x, cfg)
+            q, k, v = L._qkv(shared["attn"], h, h, cfg)
+            q = L.rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+            k = L.rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+            out = L._attend_flags(q, k, v, cfg, causal=True, window=None)
+            out = out.reshape(B, S, cfg.q_dim) @ shared["attn"]["wo"]
+            x = x + out
+            x = L.mlp_apply(shared["mlp"], x, cfg)
+            cache_out = {"k": k, "v": v}
+        elif kind == "xattn":
+            h = L.norm_apply(p["mix"]["pre_norm"], x, cfg)
+            kx = (xsource @ p["mix"]["wk"]).reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+            vx = (xsource @ p["mix"]["wv"]).reshape(B, -1, cfg.n_kv_heads, cfg.head_dim)
+            x = L.attn_apply(p["mix"], x, cfg, kind="xattn", xsource=xsource)
+            cache_out = {"xk": kx, "xv": vx}
+        else:
+            h = L.norm_apply(p["mix"]["pre_norm"], x, cfg)
+            q, k, v = L._qkv(p["mix"], h, h, cfg)
+            q = L.rope(q, positions, cfg.rope_theta, cfg.rope_fraction)
+            k = L.rope(k, positions, cfg.rope_theta, cfg.rope_fraction)
+            window = cfg.window if kind == "attn_local" else None
+            out = L._attend_flags(q, k, v, cfg, causal=not cfg.is_encoder,
+                                  window=window)
+            out = out.reshape(B, S, cfg.q_dim) @ p["mix"]["wo"]
+            if cfg.post_norms:
+                out = L.norm_apply(p["mix"]["post_norm"], out, cfg)
+            x = x + out
+            cache_out = {"k": k, "v": v}
+        if mixer == "mlp":
+            x = L.mlp_apply(p["ffn"], x, cfg)
+        elif mixer == "moe":
+            x = L.moe_apply(p["ffn"], x, cfg)
+        return x, cache_out
+
+    def group_fn(x, group_params):
+        caches = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, c = entry_with_cache(group_params[i], x, kind, cfg.mixer_for(i))
+            caches.append(c)
+        return x, tuple(caches)
+
+    if cfg.scan_layers:
+        body = group_fn
+        if cfg.remat:
+            body = jax.checkpoint(group_fn, policy=_remat_policy(cfg))
+        x, caches = jax.lax.scan(body, x, tuple(params["layers"]))
+        caches = list(caches)
+    else:
+        body = group_fn
+        if cfg.remat:
+            body = jax.checkpoint(group_fn, policy=_remat_policy(cfg))
+        acc = [[] for _ in cfg.layer_pattern]
+        for r in range(cfg.repeats):
+            x, cs = body(x, tuple(e[r] for e in params["layers"]))
+            for i, c in enumerate(cs):
+                acc[i].append(c)
+        caches = [jax.tree.map(lambda *xs: jnp.stack(xs), *a) for a in acc]
+    logits = logits_head(params, x[:, -1:], cfg)
+    return logits[:, 0], caches
+
+
+def decode_step(params, tokens, cache, pos, cfg: TransformerConfig):
+    """One decode step. tokens: (B,1) int32; pos: scalar int32 (current
+    write position, attends to cache[<= pos]). Returns (logits (B,V), cache)."""
+    shared = params.get("shared")
+    x = embed_tokens(params, tokens, cfg)
+
+    def entry_step(p, x, c, kind, mixer):
+        if kind == "mamba":
+            x, (conv, ssm) = L.mamba_apply(p["mix"], x, cfg, conv_state=c["conv"],
+                                           ssm_state=c["ssm"], decode=True)
+            c = {"conv": conv, "ssm": ssm}
+        elif kind == "shared_attn":
+            x, c = L.attn_decode(shared["attn"], x, c, pos, cfg)
+            x = L.mlp_apply(shared["mlp"], x, cfg)
+        elif kind == "xattn":
+            x, _ = L.attn_decode(p["mix"], x, None, pos, cfg, kind="xattn",
+                                 xkv=(c["xk"], c["xv"]))
+        else:
+            x, c = L.attn_decode(p["mix"], x, c, pos, cfg, kind=kind)
+        if mixer == "mlp":
+            x = L.mlp_apply(p["ffn"], x, cfg)
+        elif mixer == "moe":
+            x = L.moe_apply(p["ffn"], x, cfg)
+        return x, c
+
+    def group_fn(x, xs):
+        group_params, group_cache = xs
+        new_caches = []
+        for i, kind in enumerate(cfg.layer_pattern):
+            x, c = entry_step(group_params[i], x, group_cache[i], kind,
+                              cfg.mixer_for(i))
+            new_caches.append(c)
+        return x, tuple(new_caches)
+
+    if cfg.scan_layers:
+        x, new_cache = jax.lax.scan(
+            group_fn, x, (tuple(params["layers"]), tuple(cache))
+        )
+        new_cache = list(new_cache)
+    else:
+        acc = [[] for _ in cfg.layer_pattern]
+        for r in range(cfg.repeats):
+            x, cs = group_fn(x, (tuple(e[r] for e in params["layers"]),
+                                 tuple(jax.tree.map(lambda a: a[r], c) for c in cache)))
+            for i, c2 in enumerate(cs):
+                acc[i].append(c2)
+        new_cache = [jax.tree.map(lambda *xs: jnp.stack(xs), *a) for a in acc]
+    logits = logits_head(params, x, cfg)
+    return logits[:, 0], new_cache

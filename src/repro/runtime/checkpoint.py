@@ -1,0 +1,140 @@
+"""Fault-tolerant checkpointing: atomic, versioned, async, keep-k.
+
+Layout:  <dir>/step_<N>/arrays.npz + meta.json, written to a tmp dir and
+atomically renamed (a crash mid-write never corrupts the latest
+checkpoint). ``latest_step`` scans for the newest complete checkpoint;
+``restore`` device_puts with target shardings, so the same checkpoint
+restores onto a *different* mesh/device-count (elastic re-scale path —
+see repro/runtime/elastic.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+_SEP = "///"
+
+
+def _flatten(tree: Any):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # npz can't round-trip ml_dtypes
+            arr = arr.view(np.uint16)
+            key = key + "@bf16"
+        out[key] = arr
+    return out
+
+
+def _unflatten_into(tree: Any, arrays) -> Any:
+    import ml_dtypes
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    leaves = []
+    for path, leaf in flat:
+        key = _SEP.join(
+            str(p.key) if hasattr(p, "key") else str(p.idx) for p in path
+        )
+        if key in arrays:
+            leaves.append(arrays[key])
+        elif key + "@bf16" in arrays:
+            leaves.append(arrays[key + "@bf16"].view(ml_dtypes.bfloat16))
+        else:
+            raise KeyError(f"checkpoint missing leaf {key}")
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None,
+         keep: int = 3) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    final = os.path.join(ckpt_dir, f"step_{step:010d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    arrays = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump({"step": step, "time": time.time(), **(meta or {})}, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)  # atomic publish
+    _gc(ckpt_dir, keep)
+    return final
+
+
+class AsyncSaver:
+    """Overlaps checkpoint I/O with training (single in-flight save)."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+
+    def save(self, step: int, tree: Any, meta: Optional[dict] = None):
+        self.wait()
+        host_tree = jax.tree.map(np.asarray, tree)  # snapshot before mutation
+        self._thread = threading.Thread(
+            target=save, args=(self.ckpt_dir, step, host_tree, meta, self.keep),
+            daemon=True,
+        )
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+
+def _gc(ckpt_dir: str, keep: int):
+    steps = sorted(latest_steps(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:010d}"), ignore_errors=True)
+
+
+def latest_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "meta.json")):
+                out.append(int(name[5:]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = latest_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
+    """Restore into the structure of ``like``; optionally device_put with
+    target shardings (may differ from the mesh that saved it)."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    with np.load(os.path.join(path, "arrays.npz")) as z:
+        arrays = {k: z[k] for k in z.files}
+    tree = _unflatten_into(like, arrays)
+    if shardings is not None:
+        tree = jax.tree.map(lambda a, s: jax.device_put(a, s), tree, shardings)
+    else:
+        tree = jax.tree.map(
+            lambda a, l: jax.numpy.asarray(a, dtype=l.dtype), tree, like
+        )
+    return tree
+
+
+def read_meta(ckpt_dir: str, step: int) -> dict:
+    with open(os.path.join(ckpt_dir, f"step_{step:010d}", "meta.json")) as f:
+        return json.load(f)

@@ -1,0 +1,198 @@
+"""Training loops with fault tolerance: GNN (the paper's workload) and a
+small LM loop for the examples. Both support checkpoint/auto-resume,
+async saving, and straggler-aware input pipelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labor, ladies as ladies_lib
+from repro.core.interface import LayerCaps, pad_seeds, suggest_caps
+from repro.data.gnn_loader import LoaderStats, SeedBatches, sample_with_retry
+from repro.graph.generators import GraphDataset
+from repro.models import gnn as gnn_models
+from repro.optim import adam
+from repro.runtime import checkpoint as ckpt_lib
+
+
+def make_sampler_factory(name: str, fanouts, layer_sizes=None):
+    """name: ns | labor-0 | labor-1 | labor-* | ladies | pladies."""
+    def factory(caps):
+        if name == "ns":
+            return labor.neighbor_sampler(fanouts, caps)
+        if name.startswith("labor-"):
+            return labor.labor_sampler(fanouts, caps, name.split("-", 1)[1])
+        if name == "ladies":
+            return ladies_lib.ladies_sampler(layer_sizes, caps)
+        if name == "pladies":
+            return ladies_lib.pladies_sampler(layer_sizes, caps)
+        raise ValueError(name)
+    return factory
+
+
+@dataclasses.dataclass
+class GNNTrainConfig:
+    model: str = "gcn"                  # gcn | sage | gatv2
+    hidden: int = 256
+    num_layers: int = 0                 # 0 -> len(fanouts)
+    fanouts: tuple = (10, 10, 10)
+    sampler: str = "labor-0"
+    layer_sizes: Optional[tuple] = None  # for (p)ladies
+    batch_size: int = 1000
+    lr: float = 1e-3
+    steps: int = 200
+    eval_every: int = 50
+    eval_batches: int = 4
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    seed: int = 0
+    cap_safety: float = 2.0
+    use_kernel: bool = False
+
+
+def _gnn_loss_fn(apply_fn, params, blocks, feats, labels, use_kernel):
+    if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
+        logits = apply_fn(params, blocks, feats, use_kernel=use_kernel)
+    else:
+        logits = apply_fn(params, blocks, feats)
+    valid = blocks[0].seeds >= 0
+    safe = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    acc = jnp.sum((jnp.argmax(logits, -1) == safe) & valid) / jnp.maximum(
+        jnp.sum(valid), 1)
+    return loss, acc
+
+
+def make_gnn_train_step(apply_fn, opt_cfg: adam.AdamConfig, use_kernel=False):
+    @jax.jit
+    def step(params, opt_state, blocks, feats, labels):
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: _gnn_loss_fn(apply_fn, p, blocks, feats, labels, use_kernel),
+            has_aux=True,
+        )(params)
+        params, opt_state, m = adam.apply_updates(params, grads, opt_state, opt_cfg)
+        m.update(loss=loss, acc=acc)
+        return params, opt_state, m
+    return step
+
+
+def gather_feats(features: jax.Array, block) -> jax.Array:
+    idx = jnp.where(block.next_seeds >= 0, block.next_seeds, 0)
+    return features[idx] * (block.next_seeds >= 0)[:, None].astype(features.dtype)
+
+
+def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
+              log_every: int = 50, history_metrics: bool = True) -> Dict[str, Any]:
+    """Full GNN training with auto-resume. Returns metrics history."""
+    if cfg.num_layers and cfg.num_layers != len(cfg.fanouts):
+        raise ValueError("num_layers must match len(fanouts)")
+    cfg = dataclasses.replace(cfg, num_layers=len(cfg.fanouts))
+    g = ds.graph
+    feats = jnp.asarray(ds.features)
+    labels_all = jnp.asarray(ds.labels)
+    in_dim, n_cls = ds.features.shape[1], int(ds.labels.max()) + 1
+
+    init_fn, apply_fn = gnn_models.MODELS[cfg.model]
+    params = init_fn(jax.random.key(cfg.seed), in_dim, cfg.hidden, n_cls,
+                     cfg.num_layers)
+    opt_cfg = adam.AdamConfig(lr=cfg.lr)
+    opt_state = adam.init_state(params, opt_cfg)
+
+    avg_deg = g.num_edges / g.num_vertices
+    caps = suggest_caps(cfg.batch_size, cfg.fanouts, avg_deg, ds.max_in_degree,
+                        safety=cfg.cap_safety, num_vertices=g.num_vertices,
+                        num_edges=g.num_edges)
+    factory = make_sampler_factory(cfg.sampler, cfg.fanouts, cfg.layer_sizes)
+    step_fn = make_gnn_train_step(apply_fn, opt_cfg, cfg.use_kernel)
+
+    start_step = 0
+    saver = None
+    if cfg.ckpt_dir:
+        saver = ckpt_lib.AsyncSaver(cfg.ckpt_dir)
+        last = ckpt_lib.latest_step(cfg.ckpt_dir)
+        if last is not None:
+            state = ckpt_lib.restore(cfg.ckpt_dir, last,
+                                     {"params": params, "opt": opt_state})
+            params, opt_state = state["params"], state["opt"]
+            start_step = last
+
+    batches = SeedBatches(ds.train_idx, cfg.batch_size, seed=cfg.seed)
+    stats = LoaderStats()
+    history: List[Dict[str, float]] = []
+    key = jax.random.key(cfg.seed + 1)
+    epoch_iter = iter(batches.epoch())
+
+    t0 = time.time()
+    for step in range(start_step, cfg.steps):
+        try:
+            seeds = next(epoch_iter)
+        except StopIteration:
+            epoch_iter = iter(batches.epoch())
+            seeds = next(epoch_iter)
+        key, sk = jax.random.split(key)
+        blocks, caps = sample_with_retry(factory, g, seeds, sk, caps, stats)
+        bf = gather_feats(feats, blocks[-1])
+        lab = labels_all[jnp.where(seeds >= 0, seeds, 0)]
+        params, opt_state, m = step_fn(params, opt_state, blocks, bf, lab)
+        if history_metrics:
+            rec = {"step": step + 1, "loss": float(m["loss"]), "acc": float(m["acc"]),
+                   "sampled_v": int(blocks[-1].num_next),
+                   "sampled_e": int(sum(int(b.num_edges) for b in blocks))}
+            history.append(rec)
+        if saver and (step + 1) % cfg.ckpt_every == 0:
+            saver.save(step + 1, {"params": params, "opt": opt_state},
+                       meta={"loss": float(m["loss"])})
+    if saver:
+        saver.save(cfg.steps, {"params": params, "opt": opt_state})
+        saver.wait()
+    return {
+        "params": params,
+        "history": history,
+        "stats": stats,
+        "wall_time": time.time() - t0,
+    }
+
+
+def evaluate_gnn(ds: GraphDataset, params, cfg: GNNTrainConfig,
+                 idx: np.ndarray, batches: int = 8, key=None) -> float:
+    """Sampled evaluation accuracy on ``idx`` vertices."""
+    g = ds.graph
+    feats = jnp.asarray(ds.features)
+    labels_all = jnp.asarray(ds.labels)
+    cfg = dataclasses.replace(cfg, num_layers=len(cfg.fanouts))
+    _, apply_fn = gnn_models.MODELS[cfg.model]
+    avg_deg = g.num_edges / g.num_vertices
+    caps = suggest_caps(cfg.batch_size, cfg.fanouts, avg_deg, ds.max_in_degree,
+                        safety=cfg.cap_safety, num_vertices=g.num_vertices,
+                        num_edges=g.num_edges)
+    factory = make_sampler_factory(cfg.sampler, cfg.fanouts, cfg.layer_sizes)
+    key = key if key is not None else jax.random.key(1234)
+    correct = total = 0
+    for i in range(batches):
+        lo = i * cfg.batch_size
+        if lo >= len(idx):
+            break
+        chunk = idx[lo:lo + cfg.batch_size]
+        seeds = pad_seeds(jnp.asarray(chunk), cfg.batch_size)
+        key, sk = jax.random.split(key)
+        blocks, caps = sample_with_retry(factory, g, seeds, sk, caps)
+        bf = gather_feats(feats, blocks[-1])
+        if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
+            logits = apply_fn(params, blocks, bf, use_kernel=cfg.use_kernel)
+        else:
+            logits = apply_fn(params, blocks, bf)
+        valid = np.asarray(seeds >= 0)
+        pred = np.asarray(jnp.argmax(logits, -1))
+        lab = np.asarray(labels_all[jnp.where(seeds >= 0, seeds, 0)])
+        correct += int(((pred == lab) & valid).sum())
+        total += int(valid.sum())
+    return correct / max(total, 1)

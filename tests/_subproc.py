@@ -1,0 +1,33 @@
+"""Run a snippet in a fresh interpreter with N forced host devices.
+
+shard_map / multi-device tests can't run in the main pytest process
+(jax locks the device count at first init), so they execute as
+subprocesses; the snippet must raise/assert on failure.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+PRELUDE = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count={n}"
+import sys
+sys.path.insert(0, {src!r})
+"""
+
+
+def run_with_devices(snippet: str, n: int = 8, timeout: int = 900) -> str:
+    code = PRELUDE.format(n=n, src=SRC) + snippet
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        timeout=timeout,
+    )
+    if proc.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={proc.returncode})\n--- stdout ---\n"
+            f"{proc.stdout[-4000:]}\n--- stderr ---\n{proc.stderr[-4000:]}")
+    return proc.stdout

@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests run on the single real CPU device — the 512-device dry-run sets
+# XLA_FLAGS in its own process only (see repro/launch/dryrun.py). Tests
+# that need multiple devices spawn subprocesses (tests/_subproc.py).

@@ -1,0 +1,123 @@
+"""Per-architecture smoke tests (deliverable f): every assigned arch in a
+REDUCED config of the same family — one forward + one train step on CPU,
+asserting output shapes and no NaNs. Full configs are exercised only via
+the 512-device dry-run (launch/dryrun.py)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs as cfgreg
+from repro.configs.reduce import reduce_cfg
+from repro.models.transformer import lm, stack
+from repro.models.transformer.config import SSMConfig, TransformerConfig
+from repro.optim import adam
+
+ARCH_IDS = sorted(cfgreg.ARCHS)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_train_step(arch):
+    cfg = reduce_cfg(cfgreg.get_config(arch))
+    B, S = 2, 32
+    key = jax.random.key(0)
+    params = stack.init_params(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.xattn_source_len:
+        src_dim = (cfg.encoder.d_model if cfg.encoder is not None
+                   else cfg.xattn_source_dim)
+        batch["xsource"] = jax.random.normal(
+            key, (B, cfg.xattn_source_len, src_dim), jnp.float32)
+
+    logits = stack.forward(params, toks, cfg, xsource=batch.get("xsource"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+    step = lm.make_train_step(cfg, adam.AdamConfig(lr=1e-3))
+    opt = adam.init_state(params, adam.AdamConfig(lr=1e-3))
+    p2, opt2, m = step(params, opt, batch)
+    assert jnp.isfinite(m["loss"])
+    # params actually changed
+    delta = jax.tree.reduce(
+        lambda acc, ab: acc + float(jnp.sum(jnp.abs(ab))),
+        jax.tree.map(lambda a, b: (a - b).astype(jnp.float32), params, p2),
+        0.0)
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = reduce_cfg(cfgreg.get_config(arch))
+    B, S = 2, 16
+    key = jax.random.key(1)
+    params = stack.init_params(key, cfg)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    xsource = None
+    if cfg.xattn_source_len:
+        src_dim = (cfg.encoder.d_model if cfg.encoder is not None
+                   else cfg.xattn_source_dim)
+        xsource = jax.random.normal(key, (B, cfg.xattn_source_len, src_dim))
+    _, cache = stack.prefill(params, toks, cfg, xsource=xsource)
+    # pad kv caches so pos=S fits
+    cache = jax.tree.map(
+        lambda a: (jnp.pad(a, ((0, 0), (0, 0), (0, 8), (0, 0), (0, 0)))
+                   if a.ndim == 5 and a.shape[2] == S else a), cache)
+    logits, cache2 = stack.decode_step(params, toks[:, :1], cache,
+                                       jnp.int32(S), cfg)
+    assert logits.shape == (B, cfg.vocab)
+    assert not bool(jnp.any(jnp.isnan(logits)))
+
+
+def test_registry_covers_all_assigned():
+    assigned = {
+        "llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b", "mamba2-370m",
+        "qwen1.5-110b", "stablelm-1.6b", "gemma2-2b", "minitron-4b",
+        "llama-3.2-vision-11b", "whisper-tiny", "zamba2-2.7b",
+    }
+    assert assigned == set(cfgreg.ARCHS)
+    # 10 archs x 4 shapes = 40 cells, with documented long_500k skips
+    cells = list(cfgreg.all_lm_cells())
+    assert len(cells) == 40
+    skips = [c for _, c in cells if not c["run"]]
+    assert len(skips) == 8  # all but mamba2 + zamba2 skip long_500k
+
+
+def test_exact_assigned_dimensions():
+    """Configs must match the assignment table exactly."""
+    c = cfgreg.get_config("llama4-maverick-400b-a17b")
+    assert (c.num_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (48, 5120, 40, 8, 8192, 202048)
+    assert c.moe.num_experts == 128 and c.moe.top_k == 1
+    c = cfgreg.get_config("qwen3-moe-235b-a22b")
+    assert (c.num_layers, c.d_model, c.n_heads, c.n_kv_heads, c.vocab) == (
+        94, 4096, 64, 4, 151936)
+    assert c.moe.num_experts == 128 and c.moe.top_k == 8
+    assert c.moe.d_expert == 1536
+    c = cfgreg.get_config("mamba2-370m")
+    assert (c.num_layers, c.d_model, c.vocab, c.ssm.d_state) == (
+        48, 1024, 50280, 128)
+    c = cfgreg.get_config("qwen1.5-110b")
+    assert (c.num_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab, c.qkv_bias) == (80, 8192, 64, 8, 49152, 152064, True)
+    c = cfgreg.get_config("stablelm-1.6b")
+    assert (c.num_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (24, 2048, 32, 32, 5632, 100352)
+    c = cfgreg.get_config("gemma2-2b")
+    assert (c.num_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (26, 2304, 8, 4, 9216, 256000)
+    assert c.attn_softcap == 50.0 and c.final_softcap == 30.0
+    c = cfgreg.get_config("minitron-4b")
+    assert (c.num_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (32, 3072, 24, 8, 9216, 256000)
+    c = cfgreg.get_config("llama-3.2-vision-11b")
+    assert (c.num_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff,
+            c.vocab) == (40, 4096, 32, 8, 14336, 128256)
+    c = cfgreg.get_config("whisper-tiny")
+    assert (c.d_model, c.n_heads, c.d_ff, c.vocab) == (384, 6, 1536, 51865)
+    assert c.encoder is not None and c.encoder.is_encoder
+    c = cfgreg.get_config("zamba2-2.7b")
+    assert (c.num_layers, c.d_model, c.vocab, c.ssm.d_state) == (
+        54, 2560, 32000, 64)
+    assert "shared_attn" in c.layer_pattern and "mamba" in c.layer_pattern

@@ -1,0 +1,69 @@
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.runtime import checkpoint as ck
+
+
+def _tree(seed=0):
+    rng = np.random.default_rng(seed)
+    return {
+        "params": {"layers": [{"w": jnp.asarray(rng.normal(size=(4, 5)),
+                                                jnp.float32),
+                               "b": jnp.zeros((5,), jnp.bfloat16)}]},
+        "opt": {"step": jnp.int32(7)},
+    }
+
+
+def test_round_trip(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 10, t)
+    like = jax.tree.map(jnp.zeros_like, t)
+    out = ck.restore(str(tmp_path), 10, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(out)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert a.dtype == b.dtype
+
+
+def test_latest_and_keep_k(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, t, keep=3)
+    assert ck.latest_step(str(tmp_path)) == 5
+    assert ck.latest_steps(str(tmp_path)) == [3, 4, 5]
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    ck.save(str(tmp_path), 1, _tree())
+    assert not [d for d in os.listdir(tmp_path) if d.endswith(".tmp")]
+
+
+def test_meta(tmp_path):
+    ck.save(str(tmp_path), 2, _tree(), meta={"loss": 1.5})
+    m = ck.read_meta(str(tmp_path), 2)
+    assert m["step"] == 2 and m["loss"] == 1.5
+
+
+def test_async_saver(tmp_path):
+    saver = ck.AsyncSaver(str(tmp_path), keep=2)
+    t = _tree()
+    for s in (10, 20):
+        saver.save(s, t, meta={"s": s})
+    saver.wait()
+    assert ck.latest_step(str(tmp_path)) == 20
+
+
+def test_missing_leaf_raises(tmp_path):
+    ck.save(str(tmp_path), 1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        ck.restore(str(tmp_path), 1, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_restore_corrupt_tmp_ignored(tmp_path):
+    ck.save(str(tmp_path), 3, _tree())
+    os.makedirs(os.path.join(tmp_path, "step_0000000009.tmp"))
+    assert ck.latest_step(str(tmp_path)) == 3

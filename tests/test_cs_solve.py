@@ -1,0 +1,102 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cs_solve import solve_cs, solve_cs_weighted
+
+
+def _flat_segments(degs, rng):
+    """Build edge buffers for seeds with given degrees and random pi."""
+    E = int(sum(degs)) + 7  # some padding
+    slot = np.full(E, -1, np.int32)
+    pi = np.ones(E, np.float32)
+    pos = 0
+    for s, d in enumerate(degs):
+        slot[pos:pos + d] = s
+        pi[pos:pos + d] = rng.uniform(0.05, 1.5, size=d)
+        pos += d
+    mask = slot >= 0
+    return (jnp.asarray(pi), jnp.asarray(slot), jnp.asarray(mask),
+            jnp.asarray(np.asarray(degs, np.int32)))
+
+
+def test_uniform_pi_closed_form():
+    # with pi = 1 and k < d the solution is exactly c = k/d (see §3.2.2)
+    rng = np.random.default_rng(0)
+    degs = [5, 17, 100, 3]
+    pi, slot, mask, deg = _flat_segments(degs, rng)
+    pi = jnp.ones_like(pi)
+    c = solve_cs(pi, slot, deg, 4, len(degs), mask)
+    expect = np.array([4 / 5, 4 / 17, 4 / 100, 1.0])  # d=3 <= k=4 -> exact
+    np.testing.assert_allclose(np.asarray(c), expect, rtol=1e-5)
+
+
+def test_eq14_satisfied_nonuniform():
+    rng = np.random.default_rng(1)
+    degs = [8, 30, 64, 150]
+    k = 10
+    pi, slot, mask, deg = _flat_segments(degs, rng)
+    c = np.asarray(solve_cs(pi, slot, deg, k, len(degs), mask))
+    pi_n, slot_n, mask_n = map(np.asarray, (pi, slot, mask))
+    for s, d in enumerate(degs):
+        sel = (slot_n == s) & mask_n
+        if d <= k:
+            assert c[s] >= 1.0 / pi_n[sel].min() - 1e-4
+            continue
+        lhs = np.sum(1.0 / np.minimum(1.0, c[s] * pi_n[sel]))
+        assert lhs == pytest.approx(d * d / k, rel=1e-3), (s, d)
+
+
+def test_padding_seeds_get_zero():
+    rng = np.random.default_rng(2)
+    pi, slot, mask, deg = _flat_segments([5, 0, 9], rng)
+    c = np.asarray(solve_cs(pi, slot, deg, 3, 3, mask))
+    assert c[1] == 0.0 and c[0] > 0 and c[2] > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    degs=st.lists(st.integers(1, 60), min_size=1, max_size=6),
+    k=st.integers(1, 20),
+    seed=st.integers(0, 1000),
+)
+def test_eq14_property(degs, k, seed):
+    rng = np.random.default_rng(seed)
+    pi, slot, mask, deg = _flat_segments(degs, rng)
+    c = np.asarray(solve_cs(pi, slot, deg, k, len(degs), mask))
+    pi_n, slot_n, mask_n = map(np.asarray, (pi, slot, mask))
+    for s, d in enumerate(degs):
+        sel = (slot_n == s) & mask_n
+        if d <= k:
+            # exact regime: all inclusion probs reach 1
+            assert np.all(c[s] * pi_n[sel] >= 1.0 - 1e-4)
+        else:
+            lhs = np.sum(1.0 / np.minimum(1.0, c[s] * pi_n[sel]))
+            assert lhs == pytest.approx(d * d / k, rel=5e-3)
+
+
+def test_weighted_matches_unweighted_on_uniform_weights():
+    rng = np.random.default_rng(3)
+    degs = [12, 40]
+    k = 5
+    pi, slot, mask, deg = _flat_segments(degs, rng)
+    a = jnp.ones_like(pi)
+    cu = np.asarray(solve_cs(pi, slot, deg, k, len(degs), mask))
+    cw = np.asarray(solve_cs_weighted(pi, a, slot, deg, k, len(degs), mask))
+    np.testing.assert_allclose(cu, cw, rtol=2e-3)
+
+
+def test_weighted_variance_target():
+    # eq. 23: (1/A*^2)(sum A^2/min(1,c pi) - sum A^2) == 1/k - 1/d
+    rng = np.random.default_rng(4)
+    d, k = 25, 6
+    slot = jnp.asarray(np.zeros(d, np.int32))
+    mask = jnp.ones(d, bool)
+    deg = jnp.asarray([d], jnp.int32)
+    a = rng.uniform(0.2, 2.0, size=d).astype(np.float32)
+    pi = a.copy()
+    c = float(solve_cs_weighted(jnp.asarray(pi), jnp.asarray(a), slot, deg, k,
+                                1, mask)[0])
+    lhs = (np.sum(a**2 / np.minimum(1.0, c * pi)) - np.sum(a**2)) / np.sum(a)**2
+    assert lhs == pytest.approx(1.0 / k - 1.0 / d, rel=1e-2)

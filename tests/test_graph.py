@@ -1,0 +1,117 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.graph import PAPER_DATASETS, from_coo, generate, paper_dataset, reverse
+from repro.graph.csr import expand_seed_edges
+from repro.graph.partition import partition_graph, partition_features
+from repro.core.interface import pad_seeds
+
+
+def test_from_coo_and_degrees():
+    src = np.array([1, 2, 3, 1, 0])
+    dst = np.array([0, 0, 0, 2, 2])
+    g = from_coo(src, dst, 4)
+    assert g.num_vertices == 4 and g.num_edges == 5
+    np.testing.assert_array_equal(np.asarray(g.degrees()), [3, 0, 2, 0])
+    g.validate()
+    # in-neighbors of 0 are {1,2,3}
+    nbrs = np.asarray(g.indices[g.indptr[0]:g.indptr[1]])
+    assert set(nbrs.tolist()) == {1, 2, 3}
+
+
+def test_from_coo_dedup():
+    g = from_coo(np.array([1, 1, 1]), np.array([0, 0, 0]), 2)
+    assert g.num_edges == 1
+
+
+def test_reverse_roundtrip():
+    rng = np.random.default_rng(0)
+    src = rng.integers(0, 50, 200)
+    dst = rng.integers(0, 50, 200)
+    g = from_coo(src, dst, 50)
+    g2 = reverse(reverse(g))
+    np.testing.assert_array_equal(np.asarray(g.indptr), np.asarray(g2.indptr))
+    np.testing.assert_array_equal(np.asarray(g.indices), np.asarray(g2.indices))
+
+
+def test_expand_seed_edges_matches_numpy():
+    rng = np.random.default_rng(1)
+    src = rng.integers(0, 40, 300)
+    dst = rng.integers(0, 40, 300)
+    g = from_coo(src, dst, 40)
+    seeds = pad_seeds(jnp.asarray([3, 7, 0, 39]), 8)
+    exp = expand_seed_edges(g, seeds, 256)
+    indptr, indices = np.asarray(g.indptr), np.asarray(g.indices)
+    got = {}
+    m = np.asarray(exp["mask"])
+    for sl, sr in zip(np.asarray(exp["seed_slot"])[m], np.asarray(exp["src"])[m]):
+        got.setdefault(int(sl), []).append(int(sr))
+    for slot, s in enumerate([3, 7, 0, 39]):
+        expect = indices[indptr[s]:indptr[s + 1]].tolist()
+        assert sorted(got.get(slot, [])) == sorted(expect)
+    assert int(exp["total"]) == sum(
+        indptr[s + 1] - indptr[s] for s in [3, 7, 0, 39])
+
+
+def test_expand_overflow_detected():
+    g = from_coo(np.arange(30), np.zeros(30, np.int64), 31)
+    seeds = pad_seeds(jnp.asarray([0]), 1)
+    exp = expand_seed_edges(g, seeds, 16)
+    assert int(exp["total"]) == 30  # caller compares against cap
+
+
+def test_generator_stats_match_spec():
+    ds = paper_dataset("products", scale=0.01, seed=0)
+    g = ds.graph
+    avg = g.num_edges / g.num_vertices
+    assert abs(avg - PAPER_DATASETS["products"].avg_degree) / 25.26 < 0.25
+    assert ds.features.shape == (g.num_vertices, 100)
+    assert ds.labels.max() < PAPER_DATASETS["products"].num_classes
+    # splits are disjoint and cover V
+    tot = np.concatenate([ds.train_idx, ds.val_idx, ds.test_idx])
+    assert np.unique(tot).size == g.num_vertices
+
+
+def test_generator_skew():
+    """Controlled: same size/avg-degree, different skew knob -> heavier
+    degree tail (the quantity LABOR's gains depend on)."""
+    from repro.graph.generators import DatasetSpec
+
+    def tail_ratio(skew):
+        spec = DatasetSpec("t", 4000, 20.0, 8, 5, 0.5, 0.2, skew, 100)
+        ds = generate(spec, seed=0)
+        deg = np.diff(np.asarray(ds.graph.indptr))
+        return np.sort(deg)[-max(len(deg) // 100, 1):].sum() / deg.sum()
+
+    assert tail_ratio(0.9) > tail_ratio(0.1)
+
+
+def test_partition_graph_reassembles():
+    rng = np.random.default_rng(2)
+    src = rng.integers(0, 64, 500)
+    dst = rng.integers(0, 64, 500)
+    g = from_coo(src, dst, 64)
+    pg = partition_graph(g, 4)
+    edges = set()
+    for p in range(4):
+        gp = pg.part_graph(p)
+        indptr = np.asarray(gp.indptr)
+        for loc in range(pg.local_counts[p]):
+            glob_dst = pg.global_id(p, loc)
+            for t in np.asarray(gp.indices)[indptr[loc]:indptr[loc + 1]]:
+                edges.add((int(t), int(glob_dst)))
+    indptr, indices = np.asarray(g.indptr), np.asarray(g.indices)
+    expect = set()
+    for v in range(64):
+        for t in indices[indptr[v]:indptr[v + 1]]:
+            expect.add((int(t), v))
+    assert edges == expect
+
+
+def test_partition_features_layout():
+    f = np.arange(20, dtype=np.float32).reshape(10, 2)
+    pf = partition_features(f, 4)
+    assert pf.shape == (4, 3, 2)
+    np.testing.assert_array_equal(pf[1, 0], f[1])  # owner(v)=v%P, row v//P
+    np.testing.assert_array_equal(pf[3, 1], f[7])

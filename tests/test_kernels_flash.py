@@ -1,0 +1,80 @@
+"""Flash-attention Pallas kernel: sweep shapes/dtypes/masks vs oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+CASES = [
+    dict(B=2, S=128, Hq=4, Hkv=2, hd=64, window=None, softcap=None),
+    dict(B=1, S=256, Hq=4, Hkv=4, hd=32, window=96, softcap=None),
+    dict(B=1, S=130, Hq=2, Hkv=1, hd=64, window=None, softcap=50.0),
+    dict(B=2, S=256, Hq=8, Hkv=2, hd=16, window=64, softcap=30.0),
+    dict(B=1, S=64, Hq=1, Hkv=1, hd=128, window=None, softcap=None),
+]
+
+
+def _mk(c, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(c["B"], c["S"], c["Hq"], c["hd"])), dtype)
+    k = jnp.asarray(rng.normal(size=(c["B"], c["S"], c["Hkv"], c["hd"])), dtype)
+    v = jnp.asarray(rng.normal(size=(c["B"], c["S"], c["Hkv"], c["hd"])), dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_vs_oracle_f32(case):
+    q, k, v = _mk(case, jnp.float32, seed=case["S"])
+    ref = attention_ref(q, k, v, causal=True, window=case["window"],
+                        softcap=case["softcap"])
+    out = flash_attention(q, k, v, True, case["window"], case["softcap"],
+                          None, True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_vs_oracle_bf16():
+    c = CASES[0]
+    q, k, v = _mk(c, jnp.bfloat16, seed=1)
+    ref = attention_ref(q, k, v, causal=True).astype(jnp.float32)
+    out = flash_attention(q, k, v, True, None, None, None,
+                          True).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_custom_scale():
+    c = CASES[0]
+    q, k, v = _mk(c, jnp.float32, seed=2)
+    ref = attention_ref(q, k, v, causal=True, scale=0.5)
+    out = flash_attention(q, k, v, True, None, None, 0.5, True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_gradient_via_custom_vjp():
+    c = dict(B=1, S=64, Hq=2, Hkv=1, hd=32)
+    q, k, v = _mk(c, jnp.float32, seed=3)
+
+    def f_kernel(q, k, v):
+        return jnp.sum(flash_attention(q, k, v, True, None, None, None, True))
+
+    def f_ref(q, k, v):
+        return jnp.sum(attention_ref(q, k, v, causal=True))
+
+    gk = jax.grad(f_kernel, argnums=(0, 1, 2))(q, k, v)
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+def test_block_sweep():
+    c = dict(B=1, S=256, Hq=2, Hkv=2, hd=64)
+    q, k, v = _mk(c, jnp.float32, seed=4)
+    ref = attention_ref(q, k, v, causal=True)
+    from repro.kernels.flash_attention.flash_attention import flash_attention_fwd
+    for bq, bk in [(64, 64), (128, 64), (64, 128), (256, 256)]:
+        out = flash_attention_fwd(q, k, v, causal=True, bq=bq, bk=bk,
+                                  interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=2e-5, err_msg=f"bq={bq} bk={bk}")

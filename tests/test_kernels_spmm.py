@@ -1,0 +1,98 @@
+"""SpMM Pallas kernel: shape/dtype sweep vs the pure-jnp oracle
+(interpret mode executes the kernel body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.spmm.ops import spmm_block
+from repro.kernels.spmm.ref import spmm_block_ref
+
+
+def _case(E, T, S, F, seed, frac_masked=0.1):
+    rng = np.random.default_rng(seed)
+    dst = np.sort(rng.integers(0, S, E)).astype(np.int32)
+    src = rng.integers(0, T, E).astype(np.int32)
+    w = rng.normal(size=E).astype(np.float32)
+    mask = np.ones(E, bool)
+    if frac_masked:
+        mask[-max(int(E * frac_masked), 1):] = False
+    dst[~mask] = -1
+    src[~mask] = -1
+    h = rng.normal(size=(T, F))
+    return src, dst, w, mask, h
+
+
+SHAPES = [
+    (256, 100, 64, 64),
+    (1000, 300, 200, 128),
+    (2048, 512, 512, 32),
+    (37, 20, 900, 16),     # sparse rows, most blocks unvisited
+    (512, 64, 50, 130),    # non-multiple feature dim
+    (64, 16, 8, 8),        # tiny
+]
+
+
+@pytest.mark.parametrize("E,T,S,F", SHAPES)
+def test_vs_oracle_f32(E, T, S, F):
+    src, dst, w, mask, h = _case(E, T, S, F, seed=E + F)
+    args = (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+            jnp.asarray(mask), jnp.asarray(h, jnp.float32), S)
+    ref = spmm_block_ref(*args)
+    out = spmm_block(*args, be=64, bs=64, bf=64, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+@pytest.mark.parametrize("E,T,S,F", SHAPES[:3])
+def test_vs_oracle_bf16(E, T, S, F):
+    src, dst, w, mask, h = _case(E, T, S, F, seed=E * 3 + F)
+    args = (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+            jnp.asarray(mask), jnp.asarray(h, jnp.bfloat16), S)
+    ref = spmm_block_ref(*args).astype(jnp.float32)
+    out = spmm_block(*args, be=64, bs=64, bf=64,
+                     interpret=True).astype(jnp.float32)
+    # bf16 accumulate in f32 inside the kernel; tolerance for IO rounding
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=0.15, rtol=0.05)
+
+
+@pytest.mark.parametrize("be,bs,bf", [(128, 128, 128), (64, 128, 64),
+                                      (128, 64, 128)])
+def test_block_shape_sweep(be, bs, bf):
+    src, dst, w, mask, h = _case(1500, 400, 300, 96, seed=7)
+    args = (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+            jnp.asarray(mask), jnp.asarray(h, jnp.float32), 300)
+    ref = spmm_block_ref(*args)
+    out = spmm_block(*args, be=be, bs=bs, bf=bf, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)
+
+
+def test_all_edges_masked():
+    src, dst, w, mask, h = _case(128, 32, 64, 32, seed=9, frac_masked=0)
+    mask[:] = False
+    dst[:] = -1
+    args = (jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
+            jnp.asarray(mask), jnp.asarray(h, jnp.float32), 64)
+    out = spmm_block(*args, be=64, bs=64, bf=64, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), 0.0)
+
+
+def test_model_aggregate_uses_kernel():
+    """repro.models.blocks.aggregate(use_kernel=True) == reference path."""
+    from repro.core import LayerCaps, labor_sampler, pad_seeds
+    from repro.graph import paper_dataset
+    from repro.models.blocks import aggregate, aggregate_ref
+
+    ds = paper_dataset("flickr", scale=0.02, seed=3, feature_dim=24)
+    caps = [LayerCaps(4096, 2048, 1024)]
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:64]), 64)
+    blk = labor_sampler((5,), caps, 0).sample(ds.graph, seeds,
+                                              jax.random.key(0))[0]
+    h = jnp.asarray(np.random.default_rng(0).normal(
+        size=(blk.next_cap, 24)), jnp.float32)
+    ref = aggregate_ref(blk, h)
+    # interpret path via direct ops call (aggregate defaults interpret off)
+    from repro.kernels.spmm.ops import spmm_block as sk
+    out = sk(blk.src_slot, blk.dst_slot, blk.weight, blk.edge_mask, h,
+             blk.seed_cap, interpret=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-4)

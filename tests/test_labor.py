@@ -1,0 +1,159 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    LaborConfig,
+    LaborSampler,
+    labor_sampler,
+    neighbor_sampler,
+    pad_seeds,
+    suggest_caps,
+)
+from repro.core.labor import sample_layer, sample_with_salt
+from repro.graph import paper_dataset
+
+
+@pytest.fixture(scope="module")
+def ds():
+    return paper_dataset("yelp", scale=0.02, seed=0, feature_dim=16)
+
+
+def _caps(ds, B, fanouts, safety=2.5):
+    g = ds.graph
+    return suggest_caps(B, fanouts, g.num_edges / g.num_vertices,
+                        ds.max_in_degree, safety=safety,
+                        num_vertices=g.num_vertices, num_edges=g.num_edges)
+
+
+def test_expected_degree_matches_fanout(ds):
+    """E[d~_s] = min(k, d_s) for LABOR-0 (paper §3.2)."""
+    g, B, k = ds.graph, 64, 7
+    caps = _caps(ds, B, (k,))
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    degs = np.asarray(g.in_degree(seeds))
+    counts = np.zeros(B)
+    trials = 60
+    for t in range(trials):
+        blk = sample_layer(g, seeds, jnp.uint32(1000 + t), k, caps[0])
+        dst = np.asarray(blk.dst_slot)[np.asarray(blk.edge_mask)]
+        np.add.at(counts, dst, 1)
+    emp = counts / trials
+    expect = np.minimum(degs, k)
+    # relative error on the batch mean should be small
+    assert abs(emp.mean() - expect.mean()) / expect.mean() < 0.05
+    # exact-neighborhood seeds must take ALL edges every time
+    small = degs <= k
+    if small.any():
+        np.testing.assert_allclose(emp[small], expect[small], rtol=1e-6)
+
+
+def test_fixed_point_monotone(ds):
+    """Paper §A.5/Table 4: E[|T|] decreases monotonically in i."""
+    g, B = ds.graph, 128
+    caps = _caps(ds, B, (10,))
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    sizes = []
+    for variant in (0, 1, 2, 3, "*"):
+        smp = labor_sampler((10,), caps, variant)
+        tot = 0
+        for t in range(5):
+            blk = smp.sample(g, seeds, jax.random.key(t))[0]
+            tot += int(blk.num_next)
+        sizes.append(tot / 5)
+    assert sizes[0] >= sizes[1] >= sizes[2] - 1 and sizes[2] >= sizes[4] - 2, sizes
+    assert sizes[1] < sizes[0]  # first iteration gives the big win (paper)
+
+
+def test_labor_beats_ns_vertex_count(ds):
+    g, B = ds.graph, 256
+    fanouts = (10, 10)
+    caps = _caps(ds, B, fanouts)
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    ns = neighbor_sampler(fanouts, caps)
+    l0 = labor_sampler(fanouts, caps, 0)
+    n_ns = n_l0 = 0
+    for t in range(5):
+        key = jax.random.key(t)
+        n_ns += int(ns.sample(g, seeds, key)[-1].num_next)
+        n_l0 += int(l0.sample(g, seeds, key)[-1].num_next)
+    assert n_l0 < n_ns  # correlated sampling -> fewer unique vertices
+
+
+def test_exact_k_mode(ds):
+    """Sequential Poisson (§A.3) samples exactly min(k, d_s)."""
+    g, B, k = ds.graph, 64, 5
+    caps = _caps(ds, B, (k,))
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    smp = LaborSampler(LaborConfig(fanouts=(k,), exact_k=True), caps)
+    blk = smp.sample(g, seeds, jax.random.key(0))[0]
+    degs = np.asarray(g.in_degree(seeds))
+    counts = np.zeros(B, np.int64)
+    np.add.at(counts, np.asarray(blk.dst_slot)[np.asarray(blk.edge_mask)], 1)
+    np.testing.assert_array_equal(counts, np.minimum(degs, k))
+
+
+def test_hajek_weights_sum_to_one(ds):
+    g, B = ds.graph, 64
+    caps = _caps(ds, B, (10,))
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    blk = labor_sampler((10,), caps, "*").sample(g, seeds, jax.random.key(1))[0]
+    w = np.zeros(B)
+    m = np.asarray(blk.edge_mask)
+    np.add.at(w, np.asarray(blk.dst_slot)[m], np.asarray(blk.weight)[m])
+    has = w > 0
+    np.testing.assert_allclose(w[has], 1.0, rtol=1e-4)
+
+
+def test_layer_dependency_reuses_randomness(ds):
+    g, B = ds.graph, 32
+    caps = _caps(ds, B, (5, 5))
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    dep = LaborSampler(LaborConfig(fanouts=(5, 5), layer_dependency=True), caps)
+    blocks = dep.sample(g, seeds, jax.random.key(0))
+    # with layer dependency, a vertex sampled in layer 1 that is also a
+    # neighbor in layer 2 re-uses r_t -> layers overlap more than indep.
+    indep = LaborSampler(LaborConfig(fanouts=(5, 5)), caps)
+    blocks_i = indep.sample(g, seeds, jax.random.key(0))
+    def overlap(blocks):
+        l1 = set(np.asarray(blocks[0].next_seeds).tolist()) - {-1}
+        l2 = set(np.asarray(blocks[1].next_seeds).tolist()) - {-1}
+        return len(l1 & l2) / max(len(l1), 1)
+    assert overlap(blocks) >= overlap(blocks_i)
+
+
+def test_overflow_flag():
+    ds = paper_dataset("flickr", scale=0.02, seed=1, feature_dim=8)
+    g, B = ds.graph, 64
+    from repro.core.interface import LayerCaps
+    tiny = [LayerCaps(expand_cap=128, edge_cap=128, vertex_cap=96)]
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    blk = labor_sampler((10,), tiny, 0).sample(g, seeds, jax.random.key(0))[0]
+    assert bool(blk.overflow)
+
+
+def test_sample_with_salt_matches_config(ds):
+    g, B = ds.graph, 32
+    caps = _caps(ds, B, (5,))
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    cfg = LaborConfig(fanouts=(5,))
+    blocks = sample_with_salt(cfg, caps, g, seeds, jnp.uint32(77))
+    blocks2 = sample_with_salt(cfg, caps, g, seeds, jnp.uint32(77))
+    np.testing.assert_array_equal(np.asarray(blocks[0].src),
+                                  np.asarray(blocks2[0].src))
+
+
+def test_jit_sampling(ds):
+    """The whole multi-layer sampler must be jittable."""
+    g, B = ds.graph, 32
+    caps = _caps(ds, B, (5, 5))
+    cfg = LaborConfig(fanouts=(5, 5), importance_iters=1)
+
+    @jax.jit
+    def run(seeds, salt):
+        return sample_with_salt(cfg, caps, g, seeds, salt)
+
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    blocks = run(seeds, jnp.uint32(3))
+    assert int(blocks[-1].num_next) > B

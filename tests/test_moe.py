@@ -1,0 +1,118 @@
+"""MoE layer: routing correctness vs an explicit per-token reference,
+capacity truncation, and the LABOR-inspired Poisson capacity mode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer.config import MoEConfig, TransformerConfig
+from repro.models.transformer import layers as L
+
+
+def _cfg(**moe_kw):
+    return TransformerConfig(
+        "t", num_layers=2, d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+        d_ff=64, vocab=64, dtype="float32",
+        moe=MoEConfig(**{**dict(num_experts=4, top_k=2, d_expert=24,
+                                capacity_factor=8.0), **moe_kw}))
+
+
+def _moe_reference(p, x, cfg):
+    """Dense per-token reference: every token through its top-k experts,
+    no capacity limit (valid when capacity_factor is big enough)."""
+    m = cfg.moe
+    B, S, d = x.shape
+    h = L.norm_apply(p["pre_norm"], x, cfg)
+    logits = h.astype(jnp.float32) @ p["router"]
+    probs = jax.nn.softmax(logits, -1)
+    gates, experts = jax.lax.top_k(probs, m.top_k)
+    gates = gates / gates.sum(-1, keepdims=True)
+    out = jnp.zeros((B, S, d), jnp.float32)
+    for e in range(m.num_experts):
+        up = h @ p["ewi"][e]
+        gate = h @ p["ewg"][e]
+        y = (jax.nn.silu(gate) * up) @ p["ewo"][e]
+        for j in range(m.top_k):
+            sel = (experts[..., j] == e).astype(jnp.float32) * gates[..., j]
+            out = out + y * sel[..., None]
+    if m.shared_expert:
+        sup = jax.nn.silu(h @ p["shared_wg"]) * (h @ p["shared_wi"])
+        out = out + sup @ p["shared_wo"]
+    return x + out.astype(x.dtype)
+
+
+@pytest.mark.parametrize("top_k,shared", [(1, False), (2, False), (2, True)])
+def test_matches_dense_reference(top_k, shared):
+    cfg = _cfg(top_k=top_k, shared_expert=shared)
+    p = L.moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (2, 16, 32), jnp.float32)
+    out = L.moe_apply(p, x, cfg)
+    ref = _moe_reference(p, x, cfg)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+def test_capacity_drops_tokens():
+    # capacity_factor tiny -> most tokens dropped -> output closer to x
+    cfg_big = _cfg(capacity_factor=8.0)
+    cfg_tiny = dataclasses.replace(
+        cfg_big, moe=dataclasses.replace(cfg_big.moe, capacity_factor=0.01))
+    p = L.moe_init(jax.random.key(0), cfg_big)
+    x = jax.random.normal(jax.random.key(1), (2, 64, 32), jnp.float32)
+    full = L.moe_apply(p, x, cfg_big)
+    trunc = L.moe_apply(p, x, cfg_tiny)
+    d_full = float(jnp.mean(jnp.abs(full - x)))
+    d_trunc = float(jnp.mean(jnp.abs(trunc - x)))
+    assert d_trunc < d_full  # dropped tokens pass through unchanged
+
+
+def test_poisson_capacity_unbiased():
+    """LABOR-style Poisson capacity: over many salts, the mean output of
+    the subsampled layer approaches the uncapped layer (HT correction)."""
+    cfg_full = _cfg(top_k=1, capacity_factor=8.0)
+    cfg_poisson = dataclasses.replace(
+        cfg_full, moe=dataclasses.replace(cfg_full.moe, capacity_factor=0.5,
+                                          poisson_capacity=True))
+    p = L.moe_init(jax.random.key(0), cfg_full)
+    x = jax.random.normal(jax.random.key(1), (1, 32, 32), jnp.float32)
+    ref = np.asarray(_moe_reference(p, x, cfg_full)) - np.asarray(x)
+    acc = np.zeros_like(ref)
+    n = 48
+    for t in range(n):
+        out = L.moe_apply(p, x, cfg_poisson, salt=jnp.uint32(1000 + t))
+        acc += np.asarray(out) - np.asarray(x)
+    acc /= n
+    # noisy but centered: correlation with the uncapped update is high
+    c = np.corrcoef(acc.reshape(-1), ref.reshape(-1))[0, 1]
+    assert c > 0.9, c
+    # and magnitude is preserved on average (HT weights 1/p)
+    ratio = np.abs(acc).mean() / np.abs(ref).mean()
+    assert 0.7 < ratio < 1.3, ratio
+
+
+def test_positional_truncation_is_biased_poisson_is_not():
+    """Motivation for the beyond-paper mode: positional truncation always
+    keeps EARLY tokens; Poisson capacity drops uniformly."""
+    cfg = _cfg(top_k=1, capacity_factor=0.25)
+    cfg_p = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, poisson_capacity=True))
+    p = L.moe_init(jax.random.key(0), cfg)
+    x = jax.random.normal(jax.random.key(1), (1, 64, 32), jnp.float32)
+
+    def kept_positions(cfg, salt=jnp.uint32(7)):
+        out = np.asarray(L.moe_apply(p, x, cfg, salt=salt)) - np.asarray(x)
+        return np.nonzero(np.abs(out[0]).sum(-1) > 1e-6)[0]
+
+    kept_t = kept_positions(cfg)
+    late_frac_t = np.mean(kept_t >= 32) if kept_t.size else 0.0
+    late = []
+    for t in range(8):
+        kp = kept_positions(cfg_p, jnp.uint32(100 + t))
+        if kp.size:
+            late.append(np.mean(kp >= 32))
+    # truncation keeps strictly early positions per expert queue; Poisson
+    # spreads uniformly — directional comparison (tolerant: small sample)
+    assert late_frac_t < 0.5
+    assert np.mean(late) > late_frac_t - 0.05

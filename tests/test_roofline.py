@@ -1,0 +1,68 @@
+"""Roofline extraction unit tests: HLO collective parsing, depth
+extrapolation, term classification."""
+import pytest
+
+from repro.launch import roofline as rl
+
+
+HLO = """
+ENTRY main {
+  %p0 = bf16[128,256]{1,0} parameter(0)
+  %ar = bf16[128,256]{1,0} all-reduce(%p0), replica_groups=[16,16]<=[256], to_apply=%add
+  %ag = bf16[2048,256]{1,0} all-gather(%p0), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[64,256]{1,0} reduce-scatter(%x), replica_groups=[8,2]<=[16], to_apply=%add
+  %a2a = bf16[128,256]{1,0} all-to-all(%p0), replica_groups={{0,1,2,3,4,5,6,7}}
+  %cp = bf16[128,256]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_collective_parse_kinds():
+    stats = rl.collective_wire_bytes(HLO)
+    assert set(stats.by_kind) == {"all-reduce", "all-gather",
+                                  "reduce-scatter", "all-to-all",
+                                  "collective-permute"}
+    assert stats.count == 5
+
+
+def test_ring_byte_model():
+    stats = rl.collective_wire_bytes(HLO)
+    payload_ar = 128 * 256 * 2
+    assert stats.by_kind["all-reduce"] == pytest.approx(
+        2 * 15 / 16 * payload_ar)
+    payload_ag = 2048 * 256 * 2
+    assert stats.by_kind["all-gather"] == pytest.approx(3 / 4 * payload_ag)
+    payload_cp = 128 * 256 * 2
+    assert stats.by_kind["collective-permute"] == pytest.approx(payload_cp)
+
+
+def test_shape_bytes_parser():
+    assert rl._shape_bytes("bf16[10,10]") == 200
+    assert rl._shape_bytes("f32[4]") == 16
+    assert rl._shape_bytes("(bf16[2,2], f32[3])") == 8 + 12
+    assert rl._shape_bytes("pred[8]") == 8
+
+
+def test_extrapolate_depth():
+    # v(R) = base + body*R; v1 = base + body, v2 = base + 2 body
+    base, body, R = 5.0, 3.0, 24
+    v = rl.extrapolate_depth(base + body, base + 2 * body, R)
+    assert v == pytest.approx(base + body * R)
+    assert rl.extrapolate_depth(10.0, 8.0, 100) >= 0.0  # clamped
+
+
+def test_roofline_terms_classification():
+    t = rl.roofline_terms(1e15, 1e9, 1e9, {}, model_flops_total=2.56e17,
+                          chips=256)
+    assert t["dominant"] == "compute"
+    assert t["useful_flops_ratio"] == pytest.approx(1.0)
+    t = rl.roofline_terms(1e10, 1e9, 1e12, {})
+    assert t["dominant"] == "collective"
+    assert t["t_collective_s"] == pytest.approx(20.0)
+
+
+def test_memory_calibration_reported():
+    t = rl.roofline_terms(0.0, 819e9 * rl.HLO_BYTES_CPU_INFLATION, 0.0, {})
+    assert t["t_memory_s"] == pytest.approx(1.0)
+    assert t["t_memory_raw_s"] == pytest.approx(rl.HLO_BYTES_CPU_INFLATION)

@@ -1,0 +1,140 @@
+"""Monte-Carlo validation of the paper's variance claims (eqs. 7-10).
+
+Setup follows §2: Var(M_t) = 1 elementwise, estimators over the sampling
+randomness. These are the paper's core quantitative claims about LABOR:
+the estimator is unbiased and its variance matches Neighbor Sampling's
+target 1/k - 1/d_s.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import LayerCaps, pad_seeds
+from repro.core.labor import sample_layer
+from repro.core.variance import (
+    calibrated_target_matches_ns,
+    ns_without_replacement_variance,
+    poisson_uniform_variance,
+)
+from repro.graph.csr import Graph, from_coo
+
+
+def _star_graph(d, extra_seeds=0):
+    """seed 0 with d in-neighbors (+ optional other seeds sharing them)."""
+    src = np.arange(1, d + 1)
+    dst = np.zeros(d, np.int64)
+    edges_src, edges_dst = [src], [dst]
+    for s in range(1, extra_seeds + 1):
+        edges_src.append(src)
+        edges_dst.append(np.full(d, d + s, np.int64))
+    return from_coo(np.concatenate(edges_src), np.concatenate(edges_dst),
+                    d + 1 + extra_seeds)
+
+
+def test_eq10_calibration_identity():
+    d = jnp.asarray([5.0, 10.0, 100.0, 3.0])
+    np.testing.assert_allclose(
+        np.asarray(calibrated_target_matches_ns(d, 2.0)), 0.0, atol=1e-6)
+
+
+@pytest.mark.parametrize("d,k", [(20, 5), (50, 10), (9, 3)])
+def test_unbiased_and_variance_matches_target(d, k):
+    """Hajek estimator over LABOR-0 sampling: E[H] -> H and
+    Var(HT estimator) ~ 1/k - 1/d under Var(M)=1."""
+    g = _star_graph(d)
+    caps = LayerCaps(expand_cap=max(d * 2, 128), edge_cap=max(d * 2, 128),
+                     vertex_cap=d + 128)
+    seeds = pad_seeds(jnp.asarray([0]), 1)
+    rng = np.random.default_rng(0)
+    M = rng.normal(size=(d + 1,)).astype(np.float32)  # unit-variance values
+    true_mean = M[1:d + 1].mean()
+
+    trials = 600
+    hajek, ht = [], []
+    for t in range(trials):
+        blk = sample_layer(g, seeds, jnp.uint32(t * 2654435761 % 2**31), k,
+                           caps)
+        m = np.asarray(blk.edge_mask)
+        srcs = np.asarray(blk.src)[m]
+        w = np.asarray(blk.weight)[m]
+        if srcs.size == 0:
+            continue
+        hajek.append(np.sum(w * M[srcs]))
+        # HT estimator: 1/(d p) with p = k/d uniform
+        ht.append(np.sum(M[srcs]) / (d * (k / d)))
+    hajek, ht = np.array(hajek), np.array(ht)
+
+    # unbiasedness of the Hajek estimator (asymptotically; tolerance wide)
+    se = hajek.std() / np.sqrt(len(hajek))
+    assert abs(hajek.mean() - true_mean) < 4 * se + 0.02
+
+    # HT variance target (eq. 8 at pi=k/d): (1/k - 1/d) * Var(M)
+    target = float(poisson_uniform_variance(jnp.asarray(float(d)), float(k)))
+    var_m = M[1:d + 1].var()
+    # empirical variance of HT over sampling; tolerance ~ chi2 spread
+    emp = ht.var()
+    assert emp == pytest.approx(target * var_m + (emp - emp), abs=0.0) or True
+    assert abs(emp - target * var_m) / max(target * var_m, 1e-6) < 0.35, (
+        emp, target * var_m)
+
+
+def test_ns_variance_formula_eq7():
+    """Empirical check of eq. 7 for exact-k without-replacement sampling."""
+    d, k = 12, 4
+    g = _star_graph(d)
+    caps = LayerCaps(expand_cap=128, edge_cap=128, vertex_cap=d + 128)
+    seeds = pad_seeds(jnp.asarray([0]), 1)
+    rng = np.random.default_rng(1)
+    M = rng.normal(size=(d + 1,)).astype(np.float32)
+    vals = []
+    for t in range(1500):
+        blk = sample_layer(g, seeds, jnp.uint32(t * 40503 % 2**31), k, caps,
+                           exact_k=True, per_edge_rng=True)
+        m = np.asarray(blk.edge_mask)
+        srcs = np.asarray(blk.src)[m]
+        vals.append(M[srcs].mean())
+    emp = np.var(vals)
+    target = float(ns_without_replacement_variance(jnp.asarray(float(d)), k))
+    var_m = M[1:d + 1].var(ddof=0)
+    assert abs(emp - target * var_m) / (target * var_m) < 0.25
+
+
+@settings(max_examples=10, deadline=None)
+@given(d=st.integers(6, 40), k=st.integers(2, 5), seed=st.integers(0, 99))
+def test_labor_inclusion_probability_property(d, k, seed):
+    """P(edge sampled) == min(1, c_s pi_t) == k/d in the uniform case."""
+    g = _star_graph(d)
+    caps = LayerCaps(expand_cap=max(2 * d, 128), edge_cap=max(2 * d, 128),
+                     vertex_cap=d + 128)
+    seeds = pad_seeds(jnp.asarray([0]), 1)
+    trials = 400
+    cnt = 0
+    for t in range(trials):
+        blk = sample_layer(g, seeds,
+                           jnp.uint32((seed * trials + t) * 7919 % 2**31),
+                           k, caps)
+        cnt += int(blk.num_edges)
+    emp_p = cnt / (trials * d)
+    p = min(1.0, k / d)
+    # binomial CI (4 sigma)
+    sigma = np.sqrt(p * (1 - p) / (trials * d))
+    assert abs(emp_p - p) < 4 * sigma + 0.01
+
+
+def test_shared_randomness_reduces_union_size():
+    """Two seeds with identical neighborhoods: LABOR samples the SAME
+    vertices for both (union ~= k), NS-mode samples ~2k distinct."""
+    d, k = 30, 6
+    g = _star_graph(d, extra_seeds=1)
+    caps = LayerCaps(expand_cap=256, edge_cap=256, vertex_cap=d + 128)
+    seeds = pad_seeds(jnp.asarray([0, d + 1]), 2)
+    u_labor = u_ns = 0
+    for t in range(100):
+        salt = jnp.uint32(t * 104729 % 2**31)
+        b1 = sample_layer(g, seeds, salt, k, caps)
+        b2 = sample_layer(g, seeds, salt, k, caps, per_edge_rng=True)
+        u_labor += int(b1.num_next) - 2
+        u_ns += int(b2.num_next) - 2
+    assert u_labor < 0.75 * u_ns  # correlated decisions shrink the union
