@@ -1,0 +1,14 @@
+# Test tiers. `make tier1` is the fast suite CI gates on (minutes);
+# `make test` is everything, including the >1-min end-to-end runs.
+PYTEST = PYTHONPATH=src python -m pytest -q
+
+.PHONY: tier1 test bench-fused
+
+tier1:
+	$(PYTEST) -m "not slow"
+
+test:
+	$(PYTEST)
+
+bench-fused:
+	PYTHONPATH=src python benchmarks/fused_step.py --scale 0.01 --steps 10

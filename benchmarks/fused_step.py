@@ -1,0 +1,178 @@
+"""Fused one-program train step vs. the unfused pipelines.
+
+For each sampler (ns / labor-0 / labor-*) this times steady-state
+training steps (compile excluded) on the synthetic products graph and
+reports steps/sec plus sampled-vertices/step for three pipelines:
+
+  * fused: one XLA dispatch per step — sampling + gather + fwd/bwd +
+    Adam with donated buffers and async overflow flags
+    (repro.runtime.trainer.make_fused_train_step)
+  * unfused: the three-dispatch modern baseline — jitted sampling,
+    eager overflow poll, feature gather, jitted train step (the
+    ``--no-fused`` trainer path)
+  * legacy: the pre-fusion pipeline — op-by-op eager sampling with the
+    cold-start iterative c_s solver (``fast_solve=False``) and the
+    per-batch host sync; this is what ``train_gnn`` did before the
+    fused-step refactor
+
+``speedup`` is fused vs. the legacy baseline; ``speedup_vs_unfused``
+isolates the pure pipeline effect with identical sampler math.
+
+``--check-parity`` additionally trains 10 steps from the same init on
+the fused and unfused paths and verifies bit-exact parameter equality.
+
+  PYTHONPATH=src python benchmarks/fused_step.py --scale 0.01 --steps 10
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import labor
+from repro.core.interface import suggest_caps
+from repro.data.gnn_loader import SeedBatches
+from repro.graph import paper_dataset
+from repro.models import gnn as gnn_models
+from repro.optim import adam
+from repro.runtime import trainer as trainer_lib
+
+
+def _fresh_state(key, in_dim, hidden, n_cls, n_layers, opt_cfg):
+    params = gnn_models.gcn_init(key, in_dim, hidden, n_cls, n_layers)
+    return params, adam.init_state(params, opt_cfg)
+
+
+def bench_sampler(ds, name, *, fanouts, batch_size, hidden, steps,
+                  cap_safety, check_parity=False, seed=0):
+    g = ds.graph
+    feats = jnp.asarray(ds.features)
+    labels_all = jnp.asarray(ds.labels)
+    n_cls = int(ds.labels.max()) + 1
+    labor_cfg = labor.config_for(name, fanouts)
+    if labor_cfg is None:
+        raise SystemExit(
+            f"unsupported sampler {name!r}: this benchmark covers the "
+            "LABOR family only (ns, labor-<i>, labor-*)")
+    legacy_cfg = dataclasses.replace(labor_cfg, fast_solve=False)
+    caps = suggest_caps(batch_size, fanouts, g.num_edges / g.num_vertices,
+                        ds.max_in_degree, safety=cap_safety,
+                        num_vertices=g.num_vertices, num_edges=g.num_edges)
+    opt_cfg = adam.AdamConfig(lr=1e-3)
+    seeds = next(iter(SeedBatches(ds.train_idx, batch_size, seed=seed).epoch()))
+    key = jax.random.key(seed + 1)
+    salts_for = lambda i: labor.layer_salts(labor_cfg,
+                                            jax.random.fold_in(key, i + 1))
+    fresh = lambda: _fresh_state(jax.random.key(seed), feats.shape[1], hidden,
+                                 n_cls, len(fanouts), opt_cfg)
+    step_fn = trainer_lib.make_gnn_train_step(gnn_models.gcn_apply, opt_cfg)
+
+    def time_loop(step_once):
+        params, opt = fresh()
+        params, opt, m = step_once(params, opt, -1)     # compile/warm
+        jax.block_until_ready(m["loss"])
+        sampled_v = []
+        t0 = time.perf_counter()
+        for i in range(steps):
+            params, opt, m = step_once(params, opt, i)
+            if "sampled_v" in m:
+                sampled_v.append(m["sampled_v"])
+        jax.block_until_ready(m["loss"])
+        sps = steps / (time.perf_counter() - t0)
+        mean_v = (float(np.mean([int(v) for v in sampled_v]))
+                  if sampled_v else None)
+        return sps, mean_v
+
+    # fused: one dispatch, donated buffers, async overflow flags
+    fused_step = trainer_lib.make_fused_train_step(
+        gnn_models.gcn_apply, opt_cfg, labor_cfg, caps)
+
+    def fused_once(params, opt, i):
+        return fused_step(params, opt, g, feats, labels_all, seeds,
+                          jax.random.fold_in(key, i + 1))
+
+    # unfused: jitted sampling + eager overflow sync + separate step
+    jit_sample = jax.jit(lambda graph, s, salts: labor.sample_with_salts(
+        labor_cfg, caps, graph, s, salts))
+
+    def pipeline_once(sample):
+        def once(params, opt, i):
+            blocks = sample(g, seeds, salts_for(i))
+            any(bool(b.overflow) for b in blocks)   # the eager host sync
+            bf = trainer_lib.gather_feats(feats, blocks[-1])
+            lab = labels_all[jnp.where(seeds >= 0, seeds, 0)]
+            return step_fn(params, opt, blocks, bf, lab)
+        return once
+
+    # legacy: op-by-op eager sampling + cold-start iterative c_s solver
+    def legacy_sample(graph, s, salts):
+        return labor.sample_with_salts(legacy_cfg, caps, graph, s, salts)
+
+    fused_sps, fused_v = time_loop(fused_once)
+    unfused_sps, _ = time_loop(pipeline_once(jit_sample))
+    legacy_sps, _ = time_loop(pipeline_once(legacy_sample))
+
+    out = {
+        "sampler": name,
+        "fused_steps_per_sec": round(fused_sps, 3),
+        "unfused_steps_per_sec": round(unfused_sps, 3),
+        "legacy_steps_per_sec": round(legacy_sps, 3),
+        "speedup": round(fused_sps / legacy_sps, 2),
+        "speedup_vs_unfused": round(fused_sps / unfused_sps, 2),
+        "sampled_vertices_per_step": round(fused_v, 1),
+    }
+
+    if check_parity:
+        from repro.runtime.trainer import GNNTrainConfig, train_gnn
+        cfg = GNNTrainConfig(hidden=hidden, fanouts=fanouts, sampler=name,
+                             batch_size=batch_size, steps=10, lr=1e-3,
+                             seed=seed, cap_safety=cap_safety)
+        rf = train_gnn(ds, cfg, history_metrics=False)
+        ru = train_gnn(ds, dataclasses.replace(cfg, fused=False),
+                       history_metrics=False)
+        out["parity_bit_exact"] = all(
+            bool((np.asarray(a) == np.asarray(b)).all())
+            for a, b in zip(jax.tree.leaves(rf["params"]),
+                            jax.tree.leaves(ru["params"])))
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="products")
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--samplers", default="ns,labor-0,labor-*")
+    ap.add_argument("--fanouts", default="10,10")
+    ap.add_argument("--batch-size", type=int, default=256)
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--cap-safety", type=float, default=2.0)
+    ap.add_argument("--check-parity", action="store_true")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    ds = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
+    rows = []
+    for name in args.samplers.split(","):
+        row = bench_sampler(ds, name, fanouts=fanouts,
+                            batch_size=args.batch_size, hidden=args.hidden,
+                            steps=args.steps, cap_safety=args.cap_safety,
+                            check_parity=args.check_parity, seed=args.seed)
+        rows.append(row)
+        print(json.dumps(row), flush=True)
+    geo = float(np.exp(np.mean([np.log(r["speedup"]) for r in rows])))
+    print(json.dumps({
+        "dataset": args.dataset, "scale": args.scale,
+        "batch_size": args.batch_size, "fanouts": fanouts,
+        "speedup_geomean_fused_vs_legacy_baseline": round(geo, 2),
+        "results": rows}, indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -7,14 +7,25 @@ Public API:
   pladies_sampler(..)                   PLADIES                  (paper §3.1)
   SampledLayer, LayerCaps, suggest_caps static-shape block interface
 """
-from repro.core.interface import LayerCaps, SampledLayer, pad_seeds, suggest_caps
+from repro.core.interface import (
+    LayerCaps,
+    SampledLayer,
+    double_caps,
+    overflow_flags,
+    pad_seeds,
+    sampled_counts,
+    suggest_caps,
+)
 from repro.core.labor import (
     CONVERGE,
     LaborConfig,
     LaborSampler,
+    config_for,
     labor_sampler,
+    layer_salts,
     neighbor_sampler,
     sample_layer,
+    sample_with_salts,
 )
 from repro.core.ladies import (
     LadiesConfig,
@@ -26,7 +37,8 @@ from repro.core.ladies import (
 
 __all__ = [
     "CONVERGE", "LaborConfig", "LaborSampler", "LadiesConfig", "LadiesSampler",
-    "LayerCaps", "SampledLayer", "labor_sampler", "ladies_sampler",
-    "neighbor_sampler", "pad_seeds", "pladies_sampler", "sample_layer",
-    "sample_layer_ladies", "suggest_caps",
+    "LayerCaps", "SampledLayer", "config_for", "double_caps", "labor_sampler",
+    "ladies_sampler", "layer_salts", "neighbor_sampler", "overflow_flags",
+    "pad_seeds", "pladies_sampler", "sample_layer", "sample_layer_ladies",
+    "sample_with_salts", "sampled_counts", "suggest_caps",
 ]

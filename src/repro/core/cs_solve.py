@@ -43,6 +43,7 @@ def solve_cs(
     edge_mask: jax.Array,
     max_iters: int = 64,
     tol: float = 1e-6,
+    c_init: jax.Array | None = None,
 ) -> jax.Array:
     """Solve eq. 14 for every seed.
 
@@ -55,6 +56,10 @@ def solve_cs(
       edge_mask: bool[E] valid-edge mask.
       max_iters: iteration cap; the paper proves convergence in <= d_s
         steps, in practice <15 (paper §4.3).
+      c_init: optional float32[S] warm start (e.g. the previous
+        importance iteration's solution — pi changes little between
+        iterations, so the solver converges in a couple of steps instead
+        of restarting from the eq. 15 guess).
     Returns:
       c: float32[S] with c_s for every valid seed (0 for padding).
     """
@@ -71,7 +76,11 @@ def solve_cs(
 
     # k >= d  ->  exact: c = max 1/pi
     exact = kf >= degf
-    c0 = jnp.where(valid, kf / jnp.maximum(degf, 1.0) ** 2 * inv_pi_sum, 0.0)  # eq. 15
+    if c_init is None:
+        c0 = jnp.where(valid, kf / jnp.maximum(degf, 1.0) ** 2 * inv_pi_sum, 0.0)  # eq. 15
+    else:
+        c0 = jnp.where(valid & (c_init > 0), c_init,
+                       kf / jnp.maximum(degf, 1.0) ** 2 * inv_pi_sum)
 
     def body(state):
         c, _, i = state
@@ -81,7 +90,13 @@ def solve_cs(
         ssum = _segment_sum(inv_min, slot, S)                       # sum 1/min(1, c pi)
         v = _segment_sum(jnp.where(edge_mask & clipped, 1.0, 0.0), slot, S)  # eq. 17
         denom = jnp.maximum(target - v, 1e-9)
-        c_new = c / denom * (ssum - v)                               # eq. 16
+        # A warm start above the fixed point can clip EVERY edge of a
+        # seed (ssum == v), where eq. 16 would collapse c to 0 and the
+        # next iteration to 0*inf = NaN; the eq. 15 cold start provably
+        # never fully clips. Bisect down instead until edges unclip.
+        fully_clipped = ssum - v <= 1e-12
+        c_new = jnp.where(fully_clipped, c * 0.5,
+                          c / denom * (ssum - v))                    # eq. 16
         c_new = jnp.where(valid & ~exact, c_new, c)
         resid = jnp.max(jnp.where(valid & ~exact, jnp.abs(c_new - c) / jnp.maximum(c, 1e-20), 0.0))
         return c_new, resid, i + 1

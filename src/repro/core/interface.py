@@ -51,12 +51,42 @@ class SampledLayer:
         return self.src.shape[0]
 
 
+def overflow_flags(blocks: Sequence["SampledLayer"]) -> jax.Array:
+    """Per-layer overflow flags stacked as bool[num_layers].
+
+    The fused train step returns these as a device array instead of
+    syncing per layer: the loader polls the stacked flags one step late
+    (see docs/pipeline.md) so overflow detection never stalls dispatch.
+    """
+    return jnp.stack([b.overflow for b in blocks])
+
+
+def sampled_counts(blocks: Sequence["SampledLayer"]) -> dict:
+    """Device-side sampling size metrics for a multi-layer block list:
+    ``sampled_v`` = |V^3|-style vertex count of the deepest layer,
+    ``sampled_e`` = total sampled edges across layers."""
+    return {
+        "sampled_v": blocks[-1].num_next,
+        "sampled_e": sum(b.num_edges for b in blocks),
+    }
+
+
 @dataclasses.dataclass(frozen=True)
 class LayerCaps:
     """Static buffer sizes for one sampling layer."""
     expand_cap: int   # buffer for ALL in-edges of the layer's seeds
     edge_cap: int     # buffer for sampled edges
     vertex_cap: int   # buffer for next_seeds
+
+
+def double_caps(caps: Sequence[LayerCaps]) -> list[LayerCaps]:
+    """The overflow-retry schedule: double every buffer of every layer.
+
+    One jit specialization exists per cap schedule, so doubling (rather
+    than fitting exactly) keeps the number of recompiles logarithmic."""
+    return [dataclasses.replace(c, expand_cap=c.expand_cap * 2,
+                                edge_cap=c.edge_cap * 2,
+                                vertex_cap=c.vertex_cap * 2) for c in caps]
 
 
 def suggest_caps(

@@ -39,6 +39,9 @@ class LaborConfig:
     exact_k: bool = False              # sequential Poisson (§A.3): exactly min(k, d_s)
     converge_tol: float = 1e-4         # paper: rel change of E[|T|] < 1e-4
     converge_max_iters: int = 30
+    # closed-form uniform-pi c + warm-started importance solves; False
+    # reproduces the original cold-start solver (benchmark baseline)
+    fast_solve: bool = True
 
 
 def _expected_num_sampled(pi: jax.Array, max_c: jax.Array) -> jax.Array:
@@ -63,33 +66,57 @@ def run_importance_iterations(
     importance_iters: int,
     converge_tol: float = 1e-4,
     converge_max_iters: int = 30,
+    fast_solve: bool = True,
 ):
     """Fixed-point iterations on pi (eq. 18): pi_t <- pi_t * max_{t->s} c_s.
 
     Returns (pi dense[V], c[S], e_t history placeholder). For
     importance_iters == 0 this is a single c solve with uniform pi.
+
+    ``fast_solve`` enables the post-fusion fast path: the closed-form
+    uniform-pi solution for LABOR-0/NS and warm-started c solves across
+    importance iterations. ``fast_solve=False`` reproduces the original
+    cold-start iterative solver on every call — kept as the benchmark
+    baseline and for solver cross-validation.
     """
     V = graph.num_vertices
     src, slot, mask, deg = exp["src"], exp["seed_slot"], exp["mask"], exp["deg"]
 
-    def c_of(pi):
+    def c_of(pi, c_prev=None):
         pi_e = pi[jnp.where(mask, src, 0)]
-        return solve_cs(pi_e, slot, deg, k, num_seeds, mask)
+        return solve_cs(pi_e, slot, deg, k, num_seeds, mask,
+                        c_init=c_prev if fast_solve else None)
 
     pi = jnp.ones((V,), jnp.float32)
     if importance_iters == 0:
-        return pi, c_of(pi)
+        if not fast_solve:
+            return pi, c_of(pi)
+        # Uniform pi: eq. 14 reduces to d / min(1, c) = d^2 / k, i.e. the
+        # closed form c = k/d for k < d and c = 1 (max 1/pi) otherwise —
+        # the exact fixed point solve_cs iterates toward (see
+        # tests/test_cs_solve.py::test_uniform_pi_closed_form). Skipping
+        # the iterative solve removes the O(E) x iters segment reductions
+        # from the LABOR-0 / NS hot path entirely.
+        degf = deg.astype(jnp.float32)
+        kf = jnp.broadcast_to(jnp.asarray(k, jnp.float32), (num_seeds,))
+        valid = deg > 0
+        c = jnp.where(valid,
+                      jnp.where(kf >= degf, 1.0,
+                                kf / jnp.maximum(degf, 1.0)),
+                      0.0)
+        return pi, c
 
-    def one_step(pi):
-        c = c_of(pi)
+    def one_step(pi, c_prev=None):
+        c = c_of(pi, c_prev)
         fac = _scatter_max_c(c[jnp.clip(slot, 0, num_seeds - 1)], src, mask, V)
         pi_new = jnp.where(fac > 0, pi * fac, pi)
         return pi_new, c
 
     if importance_iters > 0:
+        c = None
         for _ in range(importance_iters):
-            pi, _ = one_step(pi)
-        return pi, c_of(pi)
+            pi, c = one_step(pi, c)
+        return pi, c_of(pi, c)
 
     # LABOR-*: iterate until relative change in E[|T|] < tol (paper §4.3).
     def cost(pi, c):
@@ -97,23 +124,27 @@ def run_importance_iterations(
         return _expected_num_sampled(pi, fac)
 
     def body(state):
-        pi, _, prev_cost, i = state
-        pi_new, c = one_step(pi)
-        c_new = solve_cs(pi_new[jnp.where(mask, src, 0)], slot, deg, k, num_seeds, mask)
+        pi, c_prev, prev_cost, _, i = state
+        pi_new, c = one_step(pi, c_prev)
+        c_new = c_of(pi_new, c)
         new_cost = cost(pi_new, c_new)
-        return pi_new, c_new, new_cost, i + 1
+        # relative change across successive iterations — computed here,
+        # where both costs exist, so cond never re-evaluates the cost of
+        # the state it is comparing against (which made rel identically
+        # zero and silently capped the loop at 2 iterations)
+        rel = jnp.abs(prev_cost - new_cost) / jnp.maximum(new_cost, 1.0)
+        return pi_new, c_new, new_cost, rel, i + 1
 
     def cond(state):
-        pi, c, prev_cost, i = state
-        cur = cost(pi, c)
-        rel = jnp.abs(prev_cost - cur) / jnp.maximum(cur, 1.0)
+        *_, rel, i = state
         return (i < converge_max_iters) & ((i < 2) | (rel > converge_tol))
 
     c0 = c_of(pi)
-    pi, c, _, _ = jax.lax.while_loop(
-        cond, body, (pi, c0, jnp.float32(jnp.inf), jnp.int32(0))
+    pi, c, _, _, _ = jax.lax.while_loop(
+        cond, body,
+        (pi, c0, cost(pi, c0), jnp.float32(jnp.inf), jnp.int32(0))
     )
-    return pi, solve_cs(pi[jnp.where(mask, src, 0)], slot, deg, k, num_seeds, mask)
+    return pi, c_of(pi, c)
 
 
 def _exact_k_include(r, slot, mask, deg, seg_start, k, num_seeds, expand_cap):
@@ -148,6 +179,7 @@ def sample_layer(
     exact_k: bool = False,
     converge_tol: float = 1e-4,
     converge_max_iters: int = 30,
+    fast_solve: bool = True,
 ) -> SampledLayer:
     """One layer of LABOR-i sampling for padded ``seeds`` (int32[S], -1 pad)."""
     S = seeds.shape[0]
@@ -159,7 +191,8 @@ def sample_layer(
 
     if graph.weights is None:
         pi, c = run_importance_iterations(
-            graph, exp, k, S, importance_iters, converge_tol, converge_max_iters
+            graph, exp, k, S, importance_iters, converge_tol,
+            converge_max_iters, fast_solve=fast_solve,
         )
         pi_e = pi[safe_src]
     else:
@@ -239,38 +272,74 @@ def sample_layer(
     )
 
 
+def layer_salts(cfg: LaborConfig, key: jax.Array) -> jax.Array:
+    """Per-layer uint32 salts for ``cfg`` derived from a PRNG key.
+
+    Stacked as uint32[num_layers] so the whole schedule can be passed as
+    one device array into a fused (sampling traced inside jit) train
+    step. ``layer_dependency`` broadcasts the base salt (§A.8).
+    """
+    n = len(cfg.fanouts)
+    if cfg.layer_dependency:
+        base = rng_lib.salt_from_key(key)
+        return jnp.broadcast_to(base, (n,))
+    return jnp.stack([
+        rng_lib.salt_from_key(jax.random.fold_in(key, layer))
+        for layer in range(n)
+    ])
+
+
+def sample_with_salts(cfg: LaborConfig, caps: Sequence[LayerCaps],
+                      graph: Graph, seeds: jax.Array,
+                      salts: jax.Array) -> list[SampledLayer]:
+    """Multi-layer sampling from an explicit per-layer salt schedule
+    (uint32[num_layers], see :func:`layer_salts`). Fully traceable — this
+    is the entry point the fused one-program train step uses, with
+    ``salts`` as a dynamic argument so recompilation never happens across
+    steps."""
+    blocks = []
+    cur = seeds
+    for layer, (k, lcaps) in enumerate(zip(cfg.fanouts, caps)):
+        blk = sample_layer(
+            graph, cur, salts[layer], k, lcaps,
+            importance_iters=cfg.importance_iters,
+            per_edge_rng=cfg.per_edge_rng,
+            exact_k=cfg.exact_k,
+            converge_tol=cfg.converge_tol,
+            converge_max_iters=cfg.converge_max_iters,
+            fast_solve=cfg.fast_solve,
+        )
+        blocks.append(blk)
+        cur = blk.next_seeds
+    return blocks
+
+
+@partial(jax.jit, static_argnames=("cfg", "caps"))
+def _sample_with_salts_jit(cfg: LaborConfig, caps, graph, seeds, salts):
+    return sample_with_salts(cfg, caps, graph, seeds, salts)
+
+
 class LaborSampler:
     """Multi-layer LABOR-i sampler (paper Algorithm 1 over l layers)."""
 
     def __init__(self, config: LaborConfig, caps: Sequence[LayerCaps]):
         if len(caps) != len(config.fanouts):
             raise ValueError("need one LayerCaps per fanout")
-        self.config = config
+        self.config = dataclasses.replace(config,
+                                          fanouts=tuple(config.fanouts))
         self.caps = list(caps)
 
     def sample(self, graph: Graph, seeds: jax.Array, key: jax.Array) -> list[SampledLayer]:
         """seeds: int32[B] (padded with -1 allowed). Returns blocks, batch
-        (outermost) layer first."""
-        cfg = self.config
-        base_salt = rng_lib.salt_from_key(key)
-        blocks = []
-        cur = seeds
-        for layer, (k, caps) in enumerate(zip(cfg.fanouts, self.caps)):
-            if cfg.layer_dependency:
-                salt = base_salt
-            else:
-                salt = rng_lib.salt_from_key(jax.random.fold_in(key, layer))
-            blk = sample_layer(
-                graph, cur, salt, k, caps,
-                importance_iters=cfg.importance_iters,
-                per_edge_rng=cfg.per_edge_rng,
-                exact_k=cfg.exact_k,
-                converge_tol=cfg.converge_tol,
-                converge_max_iters=cfg.converge_max_iters,
-            )
-            blocks.append(blk)
-            cur = blk.next_seeds
-        return blocks
+        (outermost) layer first.
+
+        The multi-layer loop is jitted as one program (cached per
+        (config, caps) pair), which keeps the standalone sampler
+        bit-identical to the sampling subgraph traced inside the fused
+        train step."""
+        salts = layer_salts(self.config, key)
+        return _sample_with_salts_jit(self.config, tuple(self.caps), graph,
+                                      seeds, salts)
 
 
 def sample_with_salt(cfg: LaborConfig, caps: Sequence[LayerCaps],
@@ -279,25 +348,31 @@ def sample_with_salt(cfg: LaborConfig, caps: Sequence[LayerCaps],
     """Multi-layer sampling from a raw uint32 salt (no PRNG key object) —
     used inside shard_map where keys are awkward to thread. Layer salts
     are derived by remixing unless layer_dependency is set."""
-    blocks = []
-    cur = seeds
-    for layer, (k, lcaps) in enumerate(zip(cfg.fanouts, caps)):
-        if cfg.layer_dependency:
-            lsalt = salt
-        else:
-            lsalt = rng_lib._mix(jnp.asarray(salt).astype(jnp.uint32)
-                                 + jnp.uint32(0x9E3779B9) * jnp.uint32(layer + 1))
-        blk = sample_layer(
-            graph, cur, lsalt, k, lcaps,
-            importance_iters=cfg.importance_iters,
-            per_edge_rng=cfg.per_edge_rng,
-            exact_k=cfg.exact_k,
-            converge_tol=cfg.converge_tol,
-            converge_max_iters=cfg.converge_max_iters,
-        )
-        blocks.append(blk)
-        cur = blk.next_seeds
-    return blocks
+    salt = jnp.asarray(salt).astype(jnp.uint32)
+    n = len(cfg.fanouts)
+    if cfg.layer_dependency:
+        salts = jnp.broadcast_to(salt, (n,))
+    else:
+        salts = jnp.stack([
+            rng_lib._mix(salt + jnp.uint32(0x9E3779B9) * jnp.uint32(layer + 1))
+            for layer in range(n)
+        ])
+    return sample_with_salts(cfg, caps, graph, seeds, salts)
+
+
+def config_for(name: str, fanouts: Sequence[int],
+               layer_dependency: bool = False) -> Optional[LaborConfig]:
+    """LaborConfig for a sampler name (``ns`` / ``labor-<i>`` / ``labor-*``),
+    or None if the name is not a LABOR-family sampler (e.g. ladies)."""
+    if name == "ns":
+        return LaborConfig(fanouts=tuple(fanouts), importance_iters=0,
+                           per_edge_rng=True, exact_k=True)
+    if name.startswith("labor-"):
+        variant = name.split("-", 1)[1]
+        iters = CONVERGE if variant == "*" else int(variant)
+        return LaborConfig(fanouts=tuple(fanouts), importance_iters=iters,
+                           layer_dependency=layer_dependency)
+    return None
 
 
 def neighbor_sampler(fanouts: Sequence[int], caps: Sequence[LayerCaps],

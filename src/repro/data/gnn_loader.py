@@ -21,13 +21,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.interface import pad_seeds
+from repro.core.interface import double_caps, pad_seeds
 
 
 @dataclasses.dataclass
 class LoaderStats:
     batches: int = 0
     overflow_retries: int = 0
+    overflow_replays: int = 0   # fused path: batches replayed one step late
     stragglers_skipped: int = 0
 
 
@@ -97,7 +98,12 @@ class PrefetchIterator:
 def sample_with_retry(sampler_factory: Callable, graph, seeds, key, caps,
                       stats: Optional[LoaderStats] = None, max_retries: int = 3):
     """Run sampler; on overflow double all caps and retry (new
-    specialization compiles once per cap schedule)."""
+    specialization compiles once per cap schedule).
+
+    This is the *eager* protocol: it forces a device->host sync on every
+    batch to read the overflow flags before the optimizer step may run.
+    The fused pipeline uses :class:`OverflowLedger` instead, which defers
+    the check by one step so dispatch never stalls."""
     cur = list(caps)
     for attempt in range(max_retries + 1):
         sampler = sampler_factory(cur)
@@ -106,7 +112,44 @@ def sample_with_retry(sampler_factory: Callable, graph, seeds, key, caps,
             return blocks, cur
         if stats is not None:
             stats.overflow_retries += 1
-        cur = [dataclasses.replace(c, expand_cap=c.expand_cap * 2,
-                                   edge_cap=c.edge_cap * 2,
-                                   vertex_cap=c.vertex_cap * 2) for c in cur]
+        cur = double_caps(cur)
     raise RuntimeError("sampling overflow persisted after cap doubling")
+
+
+class OverflowLedger:
+    """Async overflow protocol for the fused one-program train step.
+
+    The fused step cannot eagerly check ``bool(b.overflow)`` — that would
+    block the Python thread on the in-flight XLA program and re-introduce
+    the host round-trip the fusion removed. Instead the step *gates* its
+    parameter update on the stacked overflow flags (an overflowed batch
+    is a device-side no-op) and returns the flags as a device array. The
+    trainer records each batch here and polls the flags one step late —
+    by then the program has retired, so reading the scalar costs nothing
+    — and replays the skipped batch with doubled caps.
+    """
+
+    def __init__(self, stats: Optional[LoaderStats] = None):
+        self.stats = stats or LoaderStats()
+        self._pending = None  # (tag, flags) of the most recent batch
+
+    def record(self, tag, flags):
+        """Register batch ``tag`` with its device-side overflow flags.
+        Returns the tag of the *previous* batch if it overflowed and must
+        be replayed, else None."""
+        due, self._pending = self._pending, (tag, flags)
+        return self._overflowed(due)
+
+    def flush(self):
+        """Final poll after the last step. Returns a replay tag or None."""
+        due, self._pending = self._pending, None
+        return self._overflowed(due)
+
+    def _overflowed(self, entry):
+        if entry is None:
+            return None
+        tag, flags = entry
+        if bool(np.any(np.asarray(flags))):
+            self.stats.overflow_replays += 1
+            return tag
+        return None

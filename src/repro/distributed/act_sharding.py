@@ -13,12 +13,7 @@ from typing import Any
 import jax
 from jax.sharding import PartitionSpec as P
 
-
-def _current_mesh():
-    m = jax.sharding.get_abstract_mesh()
-    if m is None or m.empty:
-        return None
-    return m
+from repro.distributed.compat import current_mesh as _current_mesh
 
 
 def _filter_entry(entry: Any, axis_names) -> Any:

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.distributed import compat
+
 FSDP = ("pod", "data")
 TP = "model"
 
@@ -152,8 +154,8 @@ def constrain_like_params(tree: Any) -> Any:
     """with_sharding_constraint every leaf per the parameter rules —
     used on gradient accumulators etc. created INSIDE jit, whose sharding
     GSPMD would otherwise replicate. No-op outside a mesh context."""
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh = compat.current_mesh()
+    if mesh is None:
         return tree
     names = set(mesh.axis_names)
 

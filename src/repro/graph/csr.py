@@ -98,12 +98,14 @@ def from_coo(
 
 
 def reverse(graph: Graph) -> Graph:
-    """Reverse edge directions (host-side)."""
+    """Reverse edge directions (host-side), preserving edge weights."""
     indptr = np.asarray(graph.indptr)
     indices = np.asarray(graph.indices)
     n = graph.num_vertices
     dst = np.repeat(np.arange(n, dtype=np.int64), np.diff(indptr))
-    return from_coo(dst, indices.astype(np.int64), n, dedup=False)
+    weights = None if graph.weights is None else np.asarray(graph.weights)
+    return from_coo(dst, indices.astype(np.int64), n, weights=weights,
+                    dedup=False)
 
 
 @partial(jax.jit, static_argnames=("edge_cap",))

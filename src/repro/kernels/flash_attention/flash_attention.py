@@ -30,7 +30,7 @@ NEG_INF = -1e30
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
                   softcap, bq, bk, sk):
     qi = pl.program_id(2)
-    q = q_ref[0, 0].astype(jnp.float32) * scale          # (BQ, hd)
+    q = q_ref[...].astype(jnp.float32) * scale           # (BQ, hd)
     nkb = sk // bk
     if causal:
         # highest k block any query in this q block can see
@@ -45,8 +45,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
 
     def body(kb, carry):
         m, l, acc = carry
-        k = pl.load(k_ref, (0, 0, pl.ds(kb * bk, bk), slice(None))).astype(jnp.float32)
-        v = pl.load(v_ref, (0, 0, pl.ds(kb * bk, bk), slice(None))).astype(jnp.float32)
+        k = pl.load(k_ref, (pl.ds(kb * bk, bk), slice(None))).astype(jnp.float32)
+        v = pl.load(v_ref, (pl.ds(kb * bk, bk), slice(None))).astype(jnp.float32)
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())))   # (BQ, BK)
         if softcap is not None:
             s = jnp.tanh(s / softcap) * softcap
@@ -67,7 +67,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, *, scale, causal, window,
         return m_new, l_new, acc_new
 
     m, l, acc = jax.lax.fori_loop(lo, nkb, body, (m0, l0, a0))
-    o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
+    o_ref[...] = (acc / jnp.maximum(l, 1e-30)).astype(o_ref.dtype)
 
 
 @functools.partial(
@@ -98,13 +98,13 @@ def flash_attention_fwd(q, k, v, *, causal=True, window=None, softcap=None,
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, Sk, hd),
+            pl.BlockSpec((None, None, bq, hd), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((None, None, Sk, hd),
                          lambda b, h, i, hkv=Hkv, hq=Hq: (b, h * hkv // hq, 0, 0)),
-            pl.BlockSpec((1, 1, Sk, hd),
+            pl.BlockSpec((None, None, Sk, hd),
                          lambda b, h, i, hkv=Hkv, hq=Hq: (b, h * hkv // hq, 0, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, bq, hd), lambda b, h, i: (b, h, i, 0)),
+        out_specs=pl.BlockSpec((None, None, bq, hd), lambda b, h, i: (b, h, i, 0)),
         out_shape=jax.ShapeDtypeStruct((B, Hq, Sq, hd), q.dtype),
         interpret=interpret,
     )(qt, kt, vt)

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs as cfgreg
+from repro.distributed import compat
 from repro.configs.labor_gcn import GNNWorkloadConfig
 from repro.distributed import sharding as sh
 from repro.launch import roofline as rl
@@ -118,7 +119,7 @@ def lower_lm_cell(arch: str, shape_name: str, mesh, *, seq_shard_cache=True,
     param_specs = sh.shard_params_specs(
         lambda: stack.init_params(jax.random.key(0), cfg), mesh)
 
-    with jax.sharding.set_mesh(mesh):
+    with compat.mesh_context(mesh):
         if shape.kind == "train":
             opt_cfg = adam.AdamConfig(
                 lr=1e-3,
@@ -187,7 +188,7 @@ def lower_gnn_cell(arch: str, mesh):
     step, specs, param_specs, meta = build_gnn_train_step(mesh, cfg)
     pspec, ospec, espec = param_specs()
     ins = specs()
-    with jax.sharding.set_mesh(mesh):
+    with compat.mesh_context(mesh):
         args = (pspec, ospec, espec, ins["indptr"], ins["indices"],
                 ins["features"], ins["seeds"], ins["labels"], ins["salt"])
         lowered = jax.jit(step).lower(*args)

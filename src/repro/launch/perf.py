@@ -18,6 +18,7 @@ import time
 import jax
 
 from repro import configs as cfgreg
+from repro.distributed import compat
 from repro.launch import roofline as rl
 from repro.launch.dryrun import (BIG_ARCHS, _cost_of, _depth_variant,
                                  _param_count, _active_frac, lower_lm_cell,
@@ -91,7 +92,7 @@ def measure_gnn(mesh, *, sampler="labor-0", compression="none",
     step, specs, param_specs, meta = build_gnn_train_step(mesh, cfg)
     pspec, ospec, espec = param_specs()
     ins = specs()
-    with jax.sharding.set_mesh(mesh):
+    with compat.mesh_context(mesh):
         lowered = jax.jit(step).lower(
             pspec, ospec, espec, ins["indptr"], ins["indices"],
             ins["features"], ins["seeds"], ins["labels"], ins["salt"])

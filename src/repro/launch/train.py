@@ -23,7 +23,13 @@ def main():
     ap.add_argument("--sampler", default="labor-0")
     ap.add_argument("--model", default="gcn")
     ap.add_argument("--fanouts", default="10,10,10")
+    ap.add_argument("--layer-sizes", default=None,
+                    help="comma-separated per-layer budgets for (p)ladies")
     ap.add_argument("--batch-size", type=int, default=1000)
+    ap.add_argument("--fused", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="one-program sample+train step with donated "
+                         "buffers (--no-fused for the eager baseline)")
     # lm
     ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--reduce", action="store_true",
@@ -43,11 +49,14 @@ def main():
 
         ds = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
         fanouts = tuple(int(x) for x in args.fanouts.split(","))
+        layer_sizes = (tuple(int(x) for x in args.layer_sizes.split(","))
+                       if args.layer_sizes else None)
         cfg = GNNTrainConfig(
             model=args.model, fanouts=fanouts, num_layers=len(fanouts),
-            sampler=args.sampler, batch_size=args.batch_size,
+            sampler=args.sampler, layer_sizes=layer_sizes,
+            batch_size=args.batch_size,
             steps=args.steps, lr=args.lr, ckpt_dir=args.ckpt_dir,
-            seed=args.seed)
+            seed=args.seed, fused=args.fused)
         out = train_gnn(ds, cfg)
         val = evaluate_gnn(ds, out["params"], cfg, ds.val_idx)
         h = out["history"]
@@ -57,6 +66,7 @@ def main():
             "avg_sampled_vertices": sum(x["sampled_v"] for x in h) / len(h),
             "stragglers_skipped": out["stats"].stragglers_skipped,
             "overflow_retries": out["stats"].overflow_retries,
+            "overflow_replays": out["stats"].overflow_replays,
         }, indent=1))
     else:
         import jax

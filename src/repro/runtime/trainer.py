@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
+from functools import partial
 from typing import Any, Callable, Dict, List, Optional
 
 import jax
@@ -13,8 +14,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import labor, ladies as ladies_lib
-from repro.core.interface import LayerCaps, pad_seeds, suggest_caps
-from repro.data.gnn_loader import LoaderStats, SeedBatches, sample_with_retry
+from repro.core.interface import (LayerCaps, double_caps, overflow_flags,
+                                  pad_seeds, sampled_counts, suggest_caps)
+from repro.data.gnn_loader import (LoaderStats, OverflowLedger, SeedBatches,
+                                   sample_with_retry)
 from repro.graph.generators import GraphDataset
 from repro.models import gnn as gnn_models
 from repro.optim import adam
@@ -24,10 +27,12 @@ from repro.runtime import checkpoint as ckpt_lib
 def make_sampler_factory(name: str, fanouts, layer_sizes=None):
     """name: ns | labor-0 | labor-1 | labor-* | ladies | pladies."""
     def factory(caps):
-        if name == "ns":
-            return labor.neighbor_sampler(fanouts, caps)
-        if name.startswith("labor-"):
-            return labor.labor_sampler(fanouts, caps, name.split("-", 1)[1])
+        labor_cfg = labor.config_for(name, fanouts)
+        if labor_cfg is not None:
+            # same config object the fused step traces with — keeping the
+            # fused and unfused paths on one source of truth is what the
+            # bit-exact parity contract rests on
+            return labor.LaborSampler(labor_cfg, caps)
         if name == "ladies":
             return ladies_lib.ladies_sampler(layer_sizes, caps)
         if name == "pladies":
@@ -54,6 +59,10 @@ class GNNTrainConfig:
     seed: int = 0
     cap_safety: float = 2.0
     use_kernel: bool = False
+    # fuse sampling + gather + fwd/bwd + Adam into one XLA program with
+    # donated buffers (LABOR-family samplers only; ladies falls back)
+    fused: bool = True
+    max_replay_retries: int = 3
 
 
 def _gnn_loss_fn(apply_fn, params, blocks, feats, labels, use_kernel):
@@ -90,6 +99,51 @@ def gather_feats(features: jax.Array, block) -> jax.Array:
     return features[idx] * (block.next_seeds >= 0)[:, None].astype(features.dtype)
 
 
+def make_fused_train_step(apply_fn, opt_cfg: adam.AdamConfig,
+                          labor_cfg: labor.LaborConfig, caps, use_kernel=False):
+    """One-dispatch train step: multi-layer LABOR sampling, feature
+    gather, forward/backward and the Adam update fused into a single
+    jitted XLA program with donated parameter/optimizer buffers.
+
+    The step never syncs on overflow. Instead the parameter update is
+    *gated*: if any layer overflowed its static caps, params/opt_state
+    pass through unchanged and the stacked per-layer ``overflow`` flags
+    come back as a device array for the loader's :class:`OverflowLedger`
+    to poll one step late (see docs/pipeline.md).
+
+    Signature: step(params, opt_state, graph, features, labels_all,
+    seeds, key) -> (params, opt_state, metrics). ``key`` is a jax PRNG
+    key — a dynamic argument, so steps never respecialize on the PRNG
+    state, and the per-layer salt schedule (:func:`labor.layer_salts`)
+    is derived inside the traced program rather than as per-step host
+    micro-dispatches.
+    """
+    caps = list(caps)
+
+    @partial(jax.jit, donate_argnums=(0, 1))
+    def step(params, opt_state, graph, features, labels_all, seeds, key):
+        salts = labor.layer_salts(labor_cfg, key)
+        blocks = labor.sample_with_salts(labor_cfg, caps, graph, seeds, salts)
+        feats = gather_feats(features, blocks[-1])
+        labels = labels_all[jnp.where(seeds >= 0, seeds, 0)]
+        (loss, acc), grads = jax.value_and_grad(
+            lambda p: _gnn_loss_fn(apply_fn, p, blocks, feats, labels,
+                                   use_kernel),
+            has_aux=True,
+        )(params)
+        new_params, new_opt, m = adam.apply_updates(params, grads, opt_state,
+                                                    opt_cfg)
+        ovf = overflow_flags(blocks)
+        any_ovf = jnp.any(ovf)
+        gate = lambda new, old: jnp.where(any_ovf, old, new)
+        params_out = jax.tree.map(gate, new_params, params)
+        opt_out = jax.tree.map(gate, new_opt, opt_state)
+        m.update(loss=loss, acc=acc, overflow=ovf, **sampled_counts(blocks))
+        return params_out, opt_out, m
+
+    return step
+
+
 def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
               log_every: int = 50, history_metrics: bool = True) -> Dict[str, Any]:
     """Full GNN training with auto-resume. Returns metrics history."""
@@ -112,7 +166,12 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
                         safety=cfg.cap_safety, num_vertices=g.num_vertices,
                         num_edges=g.num_edges)
     factory = make_sampler_factory(cfg.sampler, cfg.fanouts, cfg.layer_sizes)
-    step_fn = make_gnn_train_step(apply_fn, opt_cfg, cfg.use_kernel)
+    labor_cfg = labor.config_for(cfg.sampler, cfg.fanouts) if cfg.fused else None
+    if labor_cfg is not None:
+        fused_step = make_fused_train_step(apply_fn, opt_cfg, labor_cfg, caps,
+                                           cfg.use_kernel)
+    else:
+        step_fn = make_gnn_train_step(apply_fn, opt_cfg, cfg.use_kernel)
 
     start_step = 0
     saver = None
@@ -125,11 +184,40 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
             params, opt_state = state["params"], state["opt"]
             start_step = last
 
+    if len(ds.train_idx) < cfg.batch_size:
+        raise ValueError(
+            f"batch_size {cfg.batch_size} exceeds the {len(ds.train_idx)}"
+            "-vertex train split (SeedBatches drops partial batches)")
     batches = SeedBatches(ds.train_idx, cfg.batch_size, seed=cfg.seed)
     stats = LoaderStats()
-    history: List[Dict[str, float]] = []
+    # metrics stay on device during the loop (no per-step host sync);
+    # floatified once after the last step.
+    device_history: List[Dict[str, Any]] = []
     key = jax.random.key(cfg.seed + 1)
     epoch_iter = iter(batches.epoch())
+    ledger = OverflowLedger(stats)
+
+    def replay_fused(seeds, sample_key, hist_idx, caps_then):
+        """Re-run an overflowed (device-side no-op) batch until its flags
+        clear, doubling caps whenever the current schedule is the one
+        that overflowed; rebinds the fused step closure. Returns the
+        replayed step's metrics."""
+        nonlocal caps, fused_step, params, opt_state
+        for _ in range(cfg.max_replay_retries + 1):
+            if caps is caps_then:
+                stats.overflow_retries += 1
+                caps = double_caps(caps)
+                fused_step = make_fused_train_step(apply_fn, opt_cfg,
+                                                   labor_cfg, caps,
+                                                   cfg.use_kernel)
+            params, opt_state, m = fused_step(params, opt_state, g, feats,
+                                              labels_all, seeds, sample_key)
+            if hist_idx is not None:
+                device_history[hist_idx] = {**device_history[hist_idx], **m}
+            if not bool(jnp.any(m["overflow"])):
+                return m
+            caps_then = caps
+        raise RuntimeError("sampling overflow persisted after cap doubling")
 
     t0 = time.time()
     for step in range(start_step, cfg.steps):
@@ -139,18 +227,45 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
             epoch_iter = iter(batches.epoch())
             seeds = next(epoch_iter)
         key, sk = jax.random.split(key)
-        blocks, caps = sample_with_retry(factory, g, seeds, sk, caps, stats)
-        bf = gather_feats(feats, blocks[-1])
-        lab = labels_all[jnp.where(seeds >= 0, seeds, 0)]
-        params, opt_state, m = step_fn(params, opt_state, blocks, bf, lab)
-        if history_metrics:
-            rec = {"step": step + 1, "loss": float(m["loss"]), "acc": float(m["acc"]),
-                   "sampled_v": int(blocks[-1].num_next),
-                   "sampled_e": int(sum(int(b.num_edges) for b in blocks))}
-            history.append(rec)
+        if labor_cfg is not None:
+            params, opt_state, m = fused_step(params, opt_state, g, feats,
+                                              labels_all, seeds, sk)
+            hist_idx = len(device_history) if history_metrics else None
+            if history_metrics:
+                device_history.append({"step": step + 1, **m})
+            # poll the PREVIOUS batch's flags (already retired — free)
+            due = ledger.record((seeds, sk, hist_idx, caps), m["overflow"])
+            if due is not None:
+                replay_fused(*due)
+        else:
+            blocks, caps = sample_with_retry(factory, g, seeds, sk, caps, stats)
+            bf = gather_feats(feats, blocks[-1])
+            lab = labels_all[jnp.where(seeds >= 0, seeds, 0)]
+            params, opt_state, m = step_fn(params, opt_state, blocks, bf, lab)
+            if history_metrics:
+                device_history.append({
+                    "step": step + 1, "loss": m["loss"], "acc": m["acc"],
+                    "sampled_v": blocks[-1].num_next,
+                    "sampled_e": sum(b.num_edges for b in blocks)})
         if saver and (step + 1) % cfg.ckpt_every == 0:
+            if labor_cfg is not None:
+                # resolve the just-dispatched batch before persisting:
+                # if it overflowed its update was gated off on device and
+                # would otherwise be replayed only after the save
+                due = ledger.flush()
+                if due is not None:
+                    m = replay_fused(*due)
             saver.save(step + 1, {"params": params, "opt": opt_state},
                        meta={"loss": float(m["loss"])})
+    due = ledger.flush()
+    if due is not None:
+        replay_fused(*due)
+    wall = time.time() - t0
+    history: List[Dict[str, float]] = [
+        {"step": int(r["step"]), "loss": float(r["loss"]),
+         "acc": float(r["acc"]), "sampled_v": int(r["sampled_v"]),
+         "sampled_e": int(r["sampled_e"])}
+        for r in device_history]
     if saver:
         saver.save(cfg.steps, {"params": params, "opt": opt_state})
         saver.wait()
@@ -158,7 +273,7 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
         "params": params,
         "history": history,
         "stats": stats,
-        "wall_time": time.time() - t0,
+        "wall_time": wall,
     }
 
 

@@ -16,6 +16,8 @@ from repro.optim import adam
 
 ARCH_IDS = sorted(cfgreg.ARCHS)
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.mark.parametrize("arch", ARCH_IDS)
 def test_forward_and_train_step(arch):

@@ -1,7 +1,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core.cs_solve import solve_cs, solve_cs_weighted
 
@@ -30,6 +31,34 @@ def test_uniform_pi_closed_form():
     c = solve_cs(pi, slot, deg, 4, len(degs), mask)
     expect = np.array([4 / 5, 4 / 17, 4 / 100, 1.0])  # d=3 <= k=4 -> exact
     np.testing.assert_allclose(np.asarray(c), expect, rtol=1e-5)
+
+
+def test_warm_start_above_fixed_point_recovers():
+    """Regression: a c_init large enough to clip every edge of a seed
+    used to collapse the eq. 16 iteration to 0 and then NaN; the solver
+    must bisect down and land on the cold-start solution."""
+    pi = jnp.asarray([0.9, 0.95], jnp.float32)
+    slot = jnp.asarray([0, 0], jnp.int32)
+    deg = jnp.asarray([2], jnp.int32)
+    mask = jnp.asarray([True, True])
+    cold = solve_cs(pi, slot, deg, 1, 1, mask)
+    warm = solve_cs(pi, slot, deg, 1, 1, mask,
+                    c_init=jnp.asarray([2.0], jnp.float32))
+    assert np.isfinite(np.asarray(warm)).all()
+    np.testing.assert_allclose(np.asarray(warm), np.asarray(cold), rtol=1e-4)
+
+
+def test_warm_start_matches_cold():
+    rng = np.random.default_rng(7)
+    degs = [6, 30, 3, 50]
+    pi, slot, mask, deg = _flat_segments(degs, rng)
+    cold = solve_cs(pi, slot, deg, 5, len(degs), mask)
+    # warm-start from a perturbed previous solution
+    for scale in (0.5, 1.0, 3.0):
+        warm = solve_cs(pi, slot, deg, 5, len(degs), mask,
+                        c_init=cold * scale)
+        np.testing.assert_allclose(np.asarray(warm), np.asarray(cold),
+                                   rtol=1e-3)
 
 
 def test_eq14_satisfied_nonuniform():

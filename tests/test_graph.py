@@ -35,6 +35,37 @@ def test_reverse_roundtrip():
     np.testing.assert_array_equal(np.asarray(g.indices), np.asarray(g2.indices))
 
 
+def test_reverse_preserves_weights():
+    """Regression: reverse() used to drop graph.weights on the COO
+    round-trip, silently turning a weighted graph uniform."""
+    rng = np.random.default_rng(3)
+    src = rng.integers(0, 30, 120)
+    dst = rng.integers(0, 30, 120)
+    w = rng.uniform(0.1, 2.0, 120).astype(np.float32)
+    g = from_coo(src, dst, 30, weights=w)
+    gr = reverse(g)
+    assert gr.weights is not None
+    assert gr.num_edges == g.num_edges
+    # weight of reversed edge (s -> t) equals weight of original (t -> s)
+    def edge_weights(graph):
+        indptr = np.asarray(graph.indptr)
+        indices = np.asarray(graph.indices)
+        ws = np.asarray(graph.weights)
+        out = {}
+        for v in range(graph.num_vertices):
+            for e in range(indptr[v], indptr[v + 1]):
+                out[(int(indices[e]), v)] = float(ws[e])
+        return out
+    fwd = edge_weights(g)
+    rev = edge_weights(gr)
+    assert rev == {(d, s): w for (s, d), w in fwd.items()}
+    # double reverse is the identity, weights included
+    g2 = reverse(gr)
+    np.testing.assert_array_equal(np.asarray(g.indptr), np.asarray(g2.indptr))
+    np.testing.assert_array_equal(np.asarray(g.indices), np.asarray(g2.indices))
+    np.testing.assert_allclose(np.asarray(g.weights), np.asarray(g2.weights))
+
+
 def test_expand_seed_edges_matches_numpy():
     rng = np.random.default_rng(1)
     src = rng.integers(0, 40, 300)

@@ -144,6 +144,43 @@ def test_sample_with_salt_matches_config(ds):
                                   np.asarray(blocks2[0].src))
 
 
+def test_fast_solve_matches_solver(ds):
+    """Cross-validate the closed-form / warm-started c_s fast path
+    against the original cold-start iterative solver: identical sampled
+    sets for uniform pi, near-identical for importance iterations."""
+    import dataclasses
+    from repro.core.labor import sample_with_salts, layer_salts
+
+    from repro.core.labor import CONVERGE
+
+    g, B = ds.graph, 128
+    caps = _caps(ds, B, (10, 10))
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
+    small_caps = _caps(ds, 64, (10,))
+    small_seeds = pad_seeds(jnp.asarray(ds.train_idx[:64]), 64)
+    cases = [
+        (LaborConfig(fanouts=(10, 10)), caps, seeds),
+        (LaborConfig(fanouts=(10, 10), importance_iters=1), caps, seeds),
+        (LaborConfig(fanouts=(10, 10), per_edge_rng=True, exact_k=True),
+         caps, seeds),
+        # labor-*: the heaviest warm-start user (every solve inside the
+        # convergence while_loop starts from the previous iterate)
+        (LaborConfig(fanouts=(10,), importance_iters=CONVERGE),
+         small_caps, small_seeds),
+    ]
+    for cfg, ccaps, cseeds in cases:
+        salts = layer_salts(cfg, jax.random.key(5))
+        fast = sample_with_salts(cfg, ccaps, g, cseeds, salts)
+        slow = sample_with_salts(dataclasses.replace(cfg, fast_solve=False),
+                                 ccaps, g, cseeds, salts)
+        for bf, bs in zip(fast, slow):
+            nf, ns_ = int(bf.num_edges), int(bs.num_edges)
+            assert nf > 0 and np.isfinite(np.asarray(bf.weight)).all(), cfg
+            # solver converges to within 1e-6 of the closed form, so the
+            # included edge sets may differ only on knife-edge draws
+            assert abs(nf - ns_) <= max(2, 0.01 * ns_), (cfg, nf, ns_)
+
+
 def test_jit_sampling(ds):
     """The whole multi-layer sampler must be jittable."""
     g, B = ds.graph, 32

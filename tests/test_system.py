@@ -9,6 +9,8 @@ import pytest
 from repro.graph import paper_dataset
 from repro.runtime.trainer import GNNTrainConfig, evaluate_gnn, train_gnn
 
+pytestmark = pytest.mark.slow
+
 
 @pytest.fixture(scope="module")
 def ds():
