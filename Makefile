@@ -1,14 +1,19 @@
 # Test tiers. `make tier1` is the fast suite CI gates on (minutes);
 # `make test` is everything, including the >1-min end-to-end runs.
+# `make smoke` is CI's sampler-parity gate: bit-exact fused-vs-unfused
+# training parity for every registered sampler.
 PYTEST = PYTHONPATH=src python -m pytest -q
 
-.PHONY: tier1 test bench-fused
+.PHONY: tier1 test smoke bench-fused
 
 tier1:
 	$(PYTEST) -m "not slow"
 
 test:
 	$(PYTEST)
+
+smoke:
+	PYTHONPATH=src python benchmarks/fused_step.py --smoke
 
 bench-fused:
 	PYTHONPATH=src python benchmarks/fused_step.py --scale 0.01 --steps 10

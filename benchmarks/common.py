@@ -7,14 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import (
-    labor_sampler,
-    ladies_sampler,
-    neighbor_sampler,
-    pad_seeds,
-    pladies_sampler,
-    suggest_caps,
-)
+from repro.core import pad_seeds, samplers, suggest_caps
 from repro.graph import paper_dataset
 
 # CPU-budget scales per dataset (keep |E| ~ 10^5 so 1-core runs are quick)
@@ -34,15 +27,16 @@ def make_caps(ds, batch, fanouts, safety=2.5):
 
 
 def sampler_zoo(fanouts, caps, layer_sizes=None):
+    """Paper-table display names -> registry samplers."""
     zoo = {
-        "NS": neighbor_sampler(fanouts, caps),
-        "LABOR-0": labor_sampler(fanouts, caps, 0),
-        "LABOR-1": labor_sampler(fanouts, caps, 1),
-        "LABOR-*": labor_sampler(fanouts, caps, "*"),
+        "NS": samplers.get("ns", fanouts, caps),
+        "LABOR-0": samplers.get("labor-0", fanouts, caps),
+        "LABOR-1": samplers.get("labor-1", fanouts, caps),
+        "LABOR-*": samplers.get("labor-*", fanouts, caps),
     }
     if layer_sizes is not None:
-        zoo["LADIES"] = ladies_sampler(layer_sizes, caps)
-        zoo["PLADIES"] = pladies_sampler(layer_sizes, caps)
+        zoo["LADIES"] = samplers.get("ladies", layer_sizes, caps)
+        zoo["PLADIES"] = samplers.get("pladies", layer_sizes, caps)
     return zoo
 
 
@@ -55,7 +49,7 @@ def layer_counts(ds, sampler, batch, trials=5, seed=0):
         seeds_np = rng.choice(ds.train_idx, size=batch, replace=False)
         seeds = pad_seeds(jnp.asarray(seeds_np), batch)
         t0 = time.perf_counter()
-        blocks = sampler.sample(g, seeds, jax.random.key(1000 + t))
+        blocks = sampler.sample_with_key(g, seeds, jax.random.key(1000 + t))
         jax.block_until_ready(blocks[-1].next_seeds)
         times.append(time.perf_counter() - t0)
         vs.append([int(b.num_next) for b in blocks])

@@ -1,8 +1,9 @@
-"""Fused one-program train step vs. the unfused pipelines.
+"""Fused one-program train step vs. the unfused pipelines — for EVERY
+registered sampler (the LABOR family, LADIES, PLADIES, full, ...).
 
-For each sampler (ns / labor-0 / labor-*) this times steady-state
-training steps (compile excluded) on the synthetic products graph and
-reports steps/sec plus sampled-vertices/step for three pipelines:
+For each sampler this times steady-state training steps (compile
+excluded) on the synthetic products graph and reports steps/sec plus
+sampled-vertices/step for up to three pipelines:
 
   * fused: one XLA dispatch per step — sampling + gather + fwd/bwd +
     Adam with donated buffers and async overflow flags
@@ -10,32 +11,37 @@ reports steps/sec plus sampled-vertices/step for three pipelines:
   * unfused: the three-dispatch modern baseline — jitted sampling,
     eager overflow poll, feature gather, jitted train step (the
     ``--no-fused`` trainer path)
-  * legacy: the pre-fusion pipeline — op-by-op eager sampling with the
-    cold-start iterative c_s solver (``fast_solve=False``) and the
-    per-batch host sync; this is what ``train_gnn`` did before the
-    fused-step refactor
+  * legacy (LABOR family only): the pre-fusion pipeline — op-by-op
+    eager sampling with the cold-start iterative c_s solver
+    (``fast_solve=False``) and the per-batch host sync; this is what
+    ``train_gnn`` did before the fused-step refactor
 
-``speedup`` is fused vs. the legacy baseline; ``speedup_vs_unfused``
-isolates the pure pipeline effect with identical sampler math.
+``speedup`` is fused vs. the legacy baseline (null for samplers with no
+legacy pipeline); ``speedup_vs_unfused`` isolates the pure pipeline
+effect with identical sampler math.
 
 ``--check-parity`` additionally trains 10 steps from the same init on
 the fused and unfused paths and verifies bit-exact parameter equality.
+``--smoke`` runs a fast CI gate: bit-exact fused-vs-unfused parity for
+every registered sampler on a small synthetic graph, nonzero exit on
+any mismatch.
 
   PYTHONPATH=src python benchmarks/fused_step.py --scale 0.01 --steps 10
+  PYTHONPATH=src python benchmarks/fused_step.py --smoke
 """
 from __future__ import annotations
 
 import argparse
 import dataclasses
 import json
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import labor
-from repro.core.interface import suggest_caps
+from repro.core import labor, samplers
 from repro.data.gnn_loader import SeedBatches
 from repro.graph import paper_dataset
 from repro.models import gnn as gnn_models
@@ -49,25 +55,18 @@ def _fresh_state(key, in_dim, hidden, n_cls, n_layers, opt_cfg):
 
 
 def bench_sampler(ds, name, *, fanouts, batch_size, hidden, steps,
-                  cap_safety, check_parity=False, seed=0):
+                  cap_safety, layer_sizes=None, check_parity=False, seed=0):
     g = ds.graph
     feats = jnp.asarray(ds.features)
     labels_all = jnp.asarray(ds.labels)
     n_cls = int(ds.labels.max()) + 1
-    labor_cfg = labor.config_for(name, fanouts)
-    if labor_cfg is None:
-        raise SystemExit(
-            f"unsupported sampler {name!r}: this benchmark covers the "
-            "LABOR family only (ns, labor-<i>, labor-*)")
-    legacy_cfg = dataclasses.replace(labor_cfg, fast_solve=False)
-    caps = suggest_caps(batch_size, fanouts, g.num_edges / g.num_vertices,
-                        ds.max_in_degree, safety=cap_safety,
-                        num_vertices=g.num_vertices, num_edges=g.num_edges)
+    sampler = samplers.from_dataset(name, ds, batch_size=batch_size,
+                                    fanouts=fanouts, layer_sizes=layer_sizes,
+                                    safety=cap_safety)
     opt_cfg = adam.AdamConfig(lr=1e-3)
     seeds = next(iter(SeedBatches(ds.train_idx, batch_size, seed=seed).epoch()))
     key = jax.random.key(seed + 1)
-    salts_for = lambda i: labor.layer_salts(labor_cfg,
-                                            jax.random.fold_in(key, i + 1))
+    salts_for = lambda i: sampler.spec.salts(jax.random.fold_in(key, i + 1))
     fresh = lambda: _fresh_state(jax.random.key(seed), feats.shape[1], hidden,
                                  n_cls, len(fanouts), opt_cfg)
     step_fn = trainer_lib.make_gnn_train_step(gnn_models.gcn_apply, opt_cfg)
@@ -90,15 +89,15 @@ def bench_sampler(ds, name, *, fanouts, batch_size, hidden, steps,
 
     # fused: one dispatch, donated buffers, async overflow flags
     fused_step = trainer_lib.make_fused_train_step(
-        gnn_models.gcn_apply, opt_cfg, labor_cfg, caps)
+        gnn_models.gcn_apply, opt_cfg, sampler)
 
     def fused_once(params, opt, i):
         return fused_step(params, opt, g, feats, labels_all, seeds,
                           jax.random.fold_in(key, i + 1))
 
     # unfused: jitted sampling + eager overflow sync + separate step
-    jit_sample = jax.jit(lambda graph, s, salts: labor.sample_with_salts(
-        labor_cfg, caps, graph, s, salts))
+    jit_sample = jax.jit(lambda graph, s, salts: sampler.sample(graph, s,
+                                                                salts))
 
     def pipeline_once(sample):
         def once(params, opt, i):
@@ -109,68 +108,124 @@ def bench_sampler(ds, name, *, fanouts, batch_size, hidden, steps,
             return step_fn(params, opt, blocks, bf, lab)
         return once
 
-    # legacy: op-by-op eager sampling + cold-start iterative c_s solver
-    def legacy_sample(graph, s, salts):
-        return labor.sample_with_salts(legacy_cfg, caps, graph, s, salts)
-
     fused_sps, fused_v = time_loop(fused_once)
     unfused_sps, _ = time_loop(pipeline_once(jit_sample))
-    legacy_sps, _ = time_loop(pipeline_once(legacy_sample))
 
     out = {
         "sampler": name,
         "fused_steps_per_sec": round(fused_sps, 3),
         "unfused_steps_per_sec": round(unfused_sps, 3),
-        "legacy_steps_per_sec": round(legacy_sps, 3),
-        "speedup": round(fused_sps / legacy_sps, 2),
         "speedup_vs_unfused": round(fused_sps / unfused_sps, 2),
         "sampled_vertices_per_step": round(fused_v, 1),
     }
 
+    # legacy: op-by-op eager sampling + cold-start iterative c_s solver
+    # (only the LABOR family has a pre-fusion pipeline to compare with)
+    if isinstance(sampler, labor.LaborSampler):
+        legacy_cfg = dataclasses.replace(sampler.config, fast_solve=False)
+
+        def legacy_sample(graph, s, salts):
+            return labor.sample_with_salts(legacy_cfg, sampler.caps, graph,
+                                           s, salts)
+
+        legacy_sps, _ = time_loop(pipeline_once(legacy_sample))
+        out["legacy_steps_per_sec"] = round(legacy_sps, 3)
+        out["speedup"] = round(fused_sps / legacy_sps, 2)
+    else:
+        out["legacy_steps_per_sec"] = None
+        out["speedup"] = None
+
     if check_parity:
-        from repro.runtime.trainer import GNNTrainConfig, train_gnn
-        cfg = GNNTrainConfig(hidden=hidden, fanouts=fanouts, sampler=name,
-                             batch_size=batch_size, steps=10, lr=1e-3,
-                             seed=seed, cap_safety=cap_safety)
-        rf = train_gnn(ds, cfg, history_metrics=False)
-        ru = train_gnn(ds, dataclasses.replace(cfg, fused=False),
-                       history_metrics=False)
-        out["parity_bit_exact"] = all(
-            bool((np.asarray(a) == np.asarray(b)).all())
-            for a, b in zip(jax.tree.leaves(rf["params"]),
-                            jax.tree.leaves(ru["params"])))
+        out["parity_bit_exact"] = _parity(ds, name, fanouts=fanouts,
+                                          batch_size=batch_size,
+                                          hidden=hidden,
+                                          layer_sizes=layer_sizes,
+                                          cap_safety=cap_safety, seed=seed)
     return out
+
+
+def _parity(ds, name, *, fanouts, batch_size, hidden, cap_safety,
+            layer_sizes=None, steps=10, seed=0):
+    """Bit-exact parameter equality: fused vs unfused training."""
+    from repro.runtime.trainer import GNNTrainConfig, train_gnn
+    cfg = GNNTrainConfig(hidden=hidden, fanouts=fanouts, sampler=name,
+                         layer_sizes=layer_sizes, batch_size=batch_size,
+                         steps=steps, lr=1e-3, seed=seed,
+                         cap_safety=cap_safety)
+    rf = train_gnn(ds, cfg, history_metrics=False)
+    ru = train_gnn(ds, dataclasses.replace(cfg, fused=False),
+                   history_metrics=False)
+    return all(
+        bool((np.asarray(a) == np.asarray(b)).all())
+        for a, b in zip(jax.tree.leaves(rf["params"]),
+                        jax.tree.leaves(ru["params"])))
+
+
+def smoke(seed=0):
+    """CI gate: fused-vs-unfused bit-exact parity for EVERY registered
+    sampler on a small synthetic graph. Exits nonzero on any mismatch."""
+    from repro.graph.generators import DatasetSpec, generate
+    ds = generate(DatasetSpec("mini", 2000, 12.0, 16, 5, 0.5, 0.2, 0.6, 1000),
+                  seed=seed)
+    failures = []
+    for name in samplers.list_samplers():
+        ok = _parity(ds, name, fanouts=(4, 3), batch_size=48, hidden=16,
+                     cap_safety=3.0, steps=4, seed=seed)
+        print(json.dumps({"sampler": name, "parity_bit_exact": ok}),
+              flush=True)
+        if not ok:
+            failures.append(name)
+    if failures:
+        print(f"PARITY FAILURES: {', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
+    print(f"parity OK for all {len(tuple(samplers.list_samplers()))} "
+          "registered samplers")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dataset", default="products")
     ap.add_argument("--scale", type=float, default=0.01)
-    ap.add_argument("--samplers", default="ns,labor-0,labor-*")
+    ap.add_argument("--samplers", default="ns,labor-0,labor-*,ladies,pladies")
     ap.add_argument("--fanouts", default="10,10")
+    ap.add_argument("--layer-sizes", default=None,
+                    help="per-layer budgets for the ladies family "
+                         "(default: batch_size * fanout)")
     ap.add_argument("--batch-size", type=int, default=256)
     ap.add_argument("--hidden", type=int, default=256)
     ap.add_argument("--steps", type=int, default=10)
     ap.add_argument("--cap-safety", type=float, default=2.0)
     ap.add_argument("--check-parity", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast all-sampler parity gate for CI")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    if args.smoke:
+        smoke(seed=args.seed)
+        return
+
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    layer_sizes = (tuple(int(x) for x in args.layer_sizes.split(","))
+                   if args.layer_sizes else None)
     ds = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
     rows = []
     for name in args.samplers.split(","):
         row = bench_sampler(ds, name, fanouts=fanouts,
                             batch_size=args.batch_size, hidden=args.hidden,
                             steps=args.steps, cap_safety=args.cap_safety,
+                            layer_sizes=layer_sizes,
                             check_parity=args.check_parity, seed=args.seed)
         rows.append(row)
         print(json.dumps(row), flush=True)
-    geo = float(np.exp(np.mean([np.log(r["speedup"]) for r in rows])))
+    legacy_speedups = [r["speedup"] for r in rows if r["speedup"]]
+    geo = (float(np.exp(np.mean([np.log(s) for s in legacy_speedups])))
+           if legacy_speedups else None)
     print(json.dumps({
         "dataset": args.dataset, "scale": args.scale,
         "batch_size": args.batch_size, "fanouts": fanouts,
-        "speedup_geomean_fused_vs_legacy_baseline": round(geo, 2),
+        "speedup_geomean_fused_vs_legacy_baseline":
+            round(geo, 2) if geo else None,
         "results": rows}, indent=1))
 
 

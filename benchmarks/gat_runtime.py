@@ -44,7 +44,7 @@ def run(dataset="yelp", iters=4):
             seeds_np = rng.choice(ds.train_idx, size=BATCH, replace=False)
             from repro.core import pad_seeds
             seeds = pad_seeds(jnp.asarray(seeds_np), BATCH)
-            blocks = smp.sample(ds.graph, seeds, jax.random.key(t))
+            blocks = smp.sample_with_key(ds.graph, seeds, jax.random.key(t))
             bf = gather_feats(feats, blocks[-1])
             lab_b = labels[jnp.where(seeds >= 0, seeds, 0)]
             t0 = time.perf_counter()

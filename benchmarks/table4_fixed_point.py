@@ -4,7 +4,7 @@ decreasing, most of the win in iteration 1 (§4.3, §A.5)."""
 from __future__ import annotations
 
 from benchmarks.common import layer_counts, load, make_caps
-from repro.core import labor_sampler, neighbor_sampler
+from repro.core import samplers
 
 FANOUTS = (10, 10, 10)
 BATCH = 256
@@ -16,11 +16,11 @@ def run(datasets=("reddit", "products", "yelp", "flickr"), trials=4):
         ds = load(name)
         caps = make_caps(ds, BATCH, FANOUTS)
         row = {"dataset": name}
-        v, _, _ = layer_counts(ds, neighbor_sampler(FANOUTS, caps), BATCH,
+        v, _, _ = layer_counts(ds, samplers.get("ns", FANOUTS, caps), BATCH,
                                trials=trials)
         row["NS"] = v[-1]
         for it in (0, 1, 2, 3, "*"):
-            smp = labor_sampler(FANOUTS, caps, it)
+            smp = samplers.get(f"labor-{it}", FANOUTS, caps)
             v, _, _ = layer_counts(ds, smp, BATCH, trials=trials)
             row[str(it)] = v[-1]
         rows.append(row)

@@ -21,8 +21,13 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--compression", default="none",
                     choices=["none", "bf16", "int8"])
+    ap.add_argument("--sampler", default="labor-0",
+                    help="any repro.core.samplers registry entry")
     ap.add_argument("--steps", type=int, default=8)
     args = ap.parse_args()
+
+    from repro.core import samplers
+    samplers.resolve(args.sampler)   # validate before building the mesh
 
     from repro.configs.labor_gcn import GNNWorkloadConfig
     from repro.graph.generators import DatasetSpec, generate
@@ -43,6 +48,7 @@ def main():
         avg_degree=g.num_edges / g.num_vertices,
         feature_dim=32, num_classes=8, hidden=64, num_layers=2,
         fanouts=(5, 5), global_batch=512, cap_safety=3.0,
+        sampler=args.sampler,
         grad_compression=args.compression)
     step, specs, param_specs, meta = build_gnn_train_step(mesh, cfg)
     print(f"local batch {meta['local_batch']}, feature peer cap "

@@ -1,15 +1,23 @@
 """LABOR — the paper's primary contribution as a composable JAX module.
 
 Public API:
-  LaborSampler / labor_sampler(..)      LABOR-0 / -1 / -i / -*   (paper §3.2)
+  Sampler / SamplerSpec                 the sampler protocol (one API from
+                                        trainer to serving)
+  samplers.register/get/list_samplers   the sampler registry
+  samplers.from_dataset(..)             name + graph stats -> Sampler
+  LaborSampler / labor_sampler(..)      LABOR-0 / -1 / -i / -* / -d (§3.2)
   neighbor_sampler(..)                  Neighbor Sampling baseline
   LadiesSampler / ladies_sampler(..)    LADIES baseline (Zou et al. 2019)
   pladies_sampler(..)                   PLADIES                  (paper §3.1)
+  samplers.FullSampler                  full-neighbor exact inference
   SampledLayer, LayerCaps, suggest_caps static-shape block interface
 """
 from repro.core.interface import (
     LayerCaps,
     SampledLayer,
+    Sampler,
+    SamplerSpec,
+    build_block,
     double_caps,
     overflow_flags,
     pad_seeds,
@@ -20,7 +28,6 @@ from repro.core.labor import (
     CONVERGE,
     LaborConfig,
     LaborSampler,
-    config_for,
     labor_sampler,
     layer_salts,
     neighbor_sampler,
@@ -34,11 +41,13 @@ from repro.core.ladies import (
     pladies_sampler,
     sample_layer_ladies,
 )
+from repro.core import samplers
 
 __all__ = [
     "CONVERGE", "LaborConfig", "LaborSampler", "LadiesConfig", "LadiesSampler",
-    "LayerCaps", "SampledLayer", "config_for", "double_caps", "labor_sampler",
-    "ladies_sampler", "layer_salts", "neighbor_sampler", "overflow_flags",
-    "pad_seeds", "pladies_sampler", "sample_layer", "sample_layer_ladies",
-    "sample_with_salts", "sampled_counts", "suggest_caps",
+    "LayerCaps", "SampledLayer", "Sampler", "SamplerSpec", "build_block",
+    "double_caps", "labor_sampler", "ladies_sampler", "layer_salts",
+    "neighbor_sampler", "overflow_flags", "pad_seeds", "pladies_sampler",
+    "sample_layer", "sample_layer_ladies", "sample_with_salts",
+    "sampled_counts", "samplers", "suggest_caps",
 ]

@@ -1,4 +1,4 @@
-"""Sampler interfaces and the static-shape sampled-block pytree.
+"""The ``Sampler`` protocol and the static-shape sampled-block pytree.
 
 A ``SampledLayer`` is the TPU-friendly analogue of a DGL message-flow
 block: every buffer has a static cap so the whole multi-layer sampling +
@@ -13,14 +13,26 @@ Layout conventions:
     a model can take residuals/self-features as ``H_prev[:num_seeds]``.
   * edges are compacted post-sampling: src/dst_slot/src_slot/weight are
     aligned, padded with -1 / 0.
+
+Every sampler — NS, the LABOR family, LADIES/PLADIES, full-neighbor —
+implements the :class:`Sampler` protocol: a frozen, hashable
+:class:`SamplerSpec` (name, per-layer budgets, static caps, salt
+schedule) plus a pure ``sample(graph, seeds, salts) -> [SampledLayer]``
+that traces inside any enclosing program. The registry in
+``repro.core.samplers`` is the one construction path from trainer to
+serving.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+
+from repro.core import rng as rng_lib
+from repro.core.cs_solve import _segment_sum
 
 
 @jax.tree_util.register_dataclass
@@ -142,3 +154,181 @@ def pad_seeds(seeds: jax.Array, cap: int) -> jax.Array:
         seeds.astype(jnp.int32),
         jnp.full((cap - n,), -1, jnp.int32),
     ])
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerSpec:
+    """Frozen, hashable description of a configured sampler.
+
+    Attributes:
+      name:     registry name (``ns``, ``labor-0``, ``ladies``, ...).
+      budgets:  per-layer budget, outermost first — the fanout ``k`` for
+                neighbor-style samplers, the layer size ``n`` for the
+                ladies family, a cap-sizing hint for ``full``.
+      caps:     static buffer schedule, one :class:`LayerCaps` per layer.
+                Caps live HERE (not on sampler configs): overflow retry
+                is ``sampler.with_caps(double_caps(sampler.caps))``.
+      shared_salts: one salt reused across layers (§A.8 layer
+                dependency) instead of an independent salt per layer.
+    """
+    name: str
+    budgets: tuple
+    caps: tuple
+    shared_salts: bool = False
+
+    def __post_init__(self):
+        object.__setattr__(self, "budgets",
+                           tuple(int(b) for b in self.budgets))
+        object.__setattr__(self, "caps", tuple(self.caps))
+        if len(self.caps) != len(self.budgets):
+            raise ValueError(
+                f"spec {self.name!r}: {len(self.budgets)} budgets but "
+                f"{len(self.caps)} LayerCaps — need one cap per layer")
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.caps)
+
+    def salts(self, key: jax.Array) -> jax.Array:
+        """Per-layer uint32 salt schedule from a PRNG key (traceable)."""
+        return rng_lib.layer_salts_from_key(key, self.num_layers,
+                                            shared=self.shared_salts)
+
+    def salts_from_uint32(self, salt: jax.Array) -> jax.Array:
+        """Salt schedule from a raw uint32 (shard_map-friendly)."""
+        return rng_lib.layer_salts_from_uint32(salt, self.num_layers,
+                                               shared=self.shared_salts)
+
+    def with_caps(self, caps: Sequence[LayerCaps]) -> "SamplerSpec":
+        return dataclasses.replace(self, caps=tuple(caps))
+
+
+@dataclasses.dataclass(frozen=True)
+class Sampler:
+    """Protocol base for every sampler: a frozen spec + a pure trace.
+
+    Subclasses implement :meth:`sample`; everything else (cap
+    management, salt derivation, the jitted standalone entry point) is
+    shared. Instances are hashable and compare by value, so they can be
+    closed over by — or passed as static arguments to — jitted
+    programs, with one compilation per (sampler, caps) pair.
+    """
+    spec: SamplerSpec
+
+    @property
+    def name(self) -> str:
+        return self.spec.name
+
+    @property
+    def caps(self) -> tuple:
+        return self.spec.caps
+
+    @property
+    def num_layers(self) -> int:
+        return self.spec.num_layers
+
+    def sample(self, graph, seeds: jax.Array,
+               salts: jax.Array) -> list:
+        """Multi-layer sampling from an explicit per-layer salt schedule
+        (uint32[num_layers]). Pure and fully traceable — this is the
+        entry point fused train/infer steps inline, with ``salts`` as a
+        dynamic argument so recompilation never happens across steps.
+        Returns blocks, batch (outermost) layer first."""
+        raise NotImplementedError
+
+    def with_caps(self, caps: Sequence[LayerCaps]) -> "Sampler":
+        """Clone with a new static cap schedule (same sampling math)."""
+        return dataclasses.replace(self, spec=self.spec.with_caps(caps))
+
+    def sample_with_key(self, graph, seeds: jax.Array,
+                        key: jax.Array) -> list:
+        """Standalone jitted sampling from a PRNG key. Runs the same
+        trace as :meth:`sample` (cached per sampler value), so
+        standalone blocks are bit-identical to blocks sampled inside a
+        fused program with the same key."""
+        return _sample_jit(self, graph, seeds, self.spec.salts(key))
+
+    def sample_with_salt(self, graph, seeds: jax.Array,
+                         salt: jax.Array) -> list:
+        """Unjitted trace from a raw uint32 salt — for use inside an
+        enclosing shard_map/jit where key objects are awkward."""
+        return self.sample(graph, seeds, self.spec.salts_from_uint32(salt))
+
+
+@partial(jax.jit, static_argnames=("sampler",))
+def _sample_jit(sampler: Sampler, graph, seeds, salts):
+    return sampler.sample(graph, seeds, salts)
+
+
+def build_block(num_vertices: int, seeds: jax.Array, exp: dict,
+                include: jax.Array, inv_p: jax.Array,
+                caps: LayerCaps) -> SampledLayer:
+    """Shared epilogue of every sampler: from per-edge inclusion
+    decisions over an expanded seed neighborhood to a finished
+    :class:`SampledLayer`.
+
+    Hajek-normalizes ``inv_p`` (1/p_ts per expanded edge; values outside
+    ``include`` are ignored) into edge weights (Algorithm 1), compacts
+    included edges into the static edge buffer, builds ``next_seeds =
+    [seeds ; sorted unique new srcs]``, maps sources to slots, and
+    raises the overflow flag if any static cap was exceeded.
+    """
+    S = seeds.shape[0]
+    src, slot, mask = exp["src"], exp["seed_slot"], exp["mask"]
+    safe_slot = jnp.clip(slot, 0, S - 1)
+
+    # Hajek weights (Algorithm 1): A'_ts = (1/p_ts) / sum_{t'} 1/p_t's
+    inv_p = jnp.where(include, inv_p, 0.0)
+    w = _segment_sum(inv_p, jnp.where(include, slot, -1), S)
+    weight_full = jnp.where(include, inv_p / jnp.maximum(w[safe_slot], 1e-20),
+                            0.0)
+
+    # Compact sampled edges into the static edge_cap buffer.
+    num_sampled = jnp.sum(include.astype(jnp.int32))
+    sel = jnp.nonzero(include, size=caps.edge_cap, fill_value=0)[0]
+    emask = jnp.arange(caps.edge_cap) < jnp.minimum(num_sampled, caps.edge_cap)
+    e_src = jnp.where(emask, src[sel], -1)
+    e_dst_slot = jnp.where(emask, slot[sel], -1)
+    e_weight = jnp.where(emask, weight_full[sel], 0.0)
+
+    # next_seeds = [seeds ; sorted unique sampled srcs not already seeds]
+    V = num_vertices
+    seed_member = jnp.zeros((V,), jnp.bool_).at[jnp.where(seeds >= 0, seeds, 0)].set(
+        seeds >= 0, mode="drop"
+    )
+    samp_member = jnp.zeros((V,), jnp.bool_).at[jnp.where(emask, e_src, 0)].set(
+        emask, mode="drop"
+    )
+    new_member = samp_member & ~seed_member
+    num_new = jnp.sum(new_member.astype(jnp.int32))
+    new_cap = caps.vertex_cap - S
+    if new_cap <= 0:
+        raise ValueError("vertex_cap must exceed seed buffer size")
+    new_vs = jnp.nonzero(new_member, size=new_cap, fill_value=-1)[0].astype(jnp.int32)
+    next_seeds = jnp.concatenate([seeds.astype(jnp.int32), new_vs])
+
+    # src -> slot in next_seeds
+    pos = jnp.full((V,), -1, jnp.int32).at[jnp.where(next_seeds >= 0, next_seeds, 0)].set(
+        jnp.arange(caps.vertex_cap, dtype=jnp.int32), mode="drop"
+    )
+    e_src_slot = jnp.where(emask, pos[jnp.where(emask, e_src, 0)], -1)
+
+    num_seeds = jnp.sum((seeds >= 0).astype(jnp.int32))
+    overflow = (
+        (exp["total"] > caps.expand_cap)
+        | (num_sampled > caps.edge_cap)
+        | (num_new > new_cap)
+    )
+    return SampledLayer(
+        seeds=seeds.astype(jnp.int32),
+        next_seeds=next_seeds,
+        src=e_src,
+        dst_slot=e_dst_slot,
+        src_slot=e_src_slot,
+        weight=e_weight,
+        edge_mask=emask,
+        num_seeds=num_seeds,
+        num_next=num_seeds + num_new,
+        num_edges=num_sampled,
+        overflow=overflow,
+    )

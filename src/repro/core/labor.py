@@ -16,15 +16,15 @@ repro/graph/csr.py::expand_seed_edges).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import rng as rng_lib
-from repro.core.cs_solve import solve_cs, solve_cs_weighted, _segment_sum
-from repro.core.interface import LayerCaps, SampledLayer, pad_seeds
+from repro.core.cs_solve import solve_cs, solve_cs_weighted
+from repro.core.interface import (LayerCaps, SampledLayer, Sampler,
+                                  SamplerSpec, build_block)
 from repro.graph.csr import Graph, expand_seed_edges
 
 CONVERGE = -1  # importance_iters value for LABOR-*
@@ -217,59 +217,10 @@ def sample_layer(
     else:
         include = mask & (r < c_e * pi_e)
 
-    # Hajek weights (Algorithm 1): A'_ts = (1/p_ts) / sum_{t'} 1/p_t's
-    inv_p = jnp.where(include, 1.0 / jnp.maximum(prob, 1e-20), 0.0)
-    w = _segment_sum(inv_p, jnp.where(include, slot, -1), S)
-    weight_full = jnp.where(include, inv_p / jnp.maximum(w[safe_slot], 1e-20), 0.0)
-
-    # Compact sampled edges into the static edge_cap buffer.
-    num_sampled = jnp.sum(include.astype(jnp.int32))
-    sel = jnp.nonzero(include, size=caps.edge_cap, fill_value=0)[0]
-    emask = jnp.arange(caps.edge_cap) < jnp.minimum(num_sampled, caps.edge_cap)
-    e_src = jnp.where(emask, src[sel], -1)
-    e_dst_slot = jnp.where(emask, slot[sel], -1)
-    e_weight = jnp.where(emask, weight_full[sel], 0.0)
-
-    # next_seeds = [seeds ; sorted unique sampled srcs not already seeds]
-    seed_member = jnp.zeros((V,), jnp.bool_).at[jnp.where(seeds >= 0, seeds, 0)].set(
-        seeds >= 0, mode="drop"
-    )
-    samp_member = jnp.zeros((V,), jnp.bool_).at[jnp.where(emask, e_src, 0)].set(
-        emask, mode="drop"
-    )
-    new_member = samp_member & ~seed_member
-    num_new = jnp.sum(new_member.astype(jnp.int32))
-    new_cap = caps.vertex_cap - S
-    if new_cap <= 0:
-        raise ValueError("vertex_cap must exceed seed buffer size")
-    new_vs = jnp.nonzero(new_member, size=new_cap, fill_value=-1)[0].astype(jnp.int32)
-    next_seeds = jnp.concatenate([seeds.astype(jnp.int32), new_vs])
-
-    # src -> slot in next_seeds
-    pos = jnp.full((V,), -1, jnp.int32).at[jnp.where(next_seeds >= 0, next_seeds, 0)].set(
-        jnp.arange(caps.vertex_cap, dtype=jnp.int32), mode="drop"
-    )
-    e_src_slot = jnp.where(emask, pos[jnp.where(emask, e_src, 0)], -1)
-
-    num_seeds = jnp.sum((seeds >= 0).astype(jnp.int32))
-    overflow = (
-        (exp["total"] > caps.expand_cap)
-        | (num_sampled > caps.edge_cap)
-        | (num_new > new_cap)
-    )
-    return SampledLayer(
-        seeds=seeds.astype(jnp.int32),
-        next_seeds=next_seeds,
-        src=e_src,
-        dst_slot=e_dst_slot,
-        src_slot=e_src_slot,
-        weight=e_weight,
-        edge_mask=emask,
-        num_seeds=num_seeds,
-        num_next=num_seeds + num_new,
-        num_edges=num_sampled,
-        overflow=overflow,
-    )
+    # Hajek normalization + edge compaction + next_seeds construction is
+    # the epilogue every sampler shares (core.interface.build_block).
+    return build_block(V, seeds, exp, include,
+                       1.0 / jnp.maximum(prob, 1e-20), caps)
 
 
 def layer_salts(cfg: LaborConfig, key: jax.Array) -> jax.Array:
@@ -277,16 +228,9 @@ def layer_salts(cfg: LaborConfig, key: jax.Array) -> jax.Array:
 
     Stacked as uint32[num_layers] so the whole schedule can be passed as
     one device array into a fused (sampling traced inside jit) train
-    step. ``layer_dependency`` broadcasts the base salt (§A.8).
-    """
-    n = len(cfg.fanouts)
-    if cfg.layer_dependency:
-        base = rng_lib.salt_from_key(key)
-        return jnp.broadcast_to(base, (n,))
-    return jnp.stack([
-        rng_lib.salt_from_key(jax.random.fold_in(key, layer))
-        for layer in range(n)
-    ])
+    step. ``layer_dependency`` broadcasts the base salt (§A.8)."""
+    return rng_lib.layer_salts_from_key(key, len(cfg.fanouts),
+                                        shared=cfg.layer_dependency)
 
 
 def sample_with_salts(cfg: LaborConfig, caps: Sequence[LayerCaps],
@@ -314,32 +258,45 @@ def sample_with_salts(cfg: LaborConfig, caps: Sequence[LayerCaps],
     return blocks
 
 
-@partial(jax.jit, static_argnames=("cfg", "caps"))
-def _sample_with_salts_jit(cfg: LaborConfig, caps, graph, seeds, salts):
-    return sample_with_salts(cfg, caps, graph, seeds, salts)
+def _labor_name(cfg: LaborConfig) -> str:
+    """Canonical registry name for a LABOR-family config."""
+    if cfg.per_edge_rng:
+        return "ns"
+    if cfg.layer_dependency and cfg.importance_iters == 0:
+        return "labor-d"
+    if cfg.importance_iters == CONVERGE:
+        return "labor-*"
+    return f"labor-{cfg.importance_iters}"
 
 
-class LaborSampler:
-    """Multi-layer LABOR-i sampler (paper Algorithm 1 over l layers)."""
+@dataclasses.dataclass(frozen=True)
+class LaborSampler(Sampler):
+    """Multi-layer LABOR-i sampler (paper Algorithm 1 over l layers) on
+    the :class:`~repro.core.interface.Sampler` protocol. Construct via
+    :meth:`build`, :func:`labor_sampler`/:func:`neighbor_sampler`, or
+    the registry (``repro.core.samplers.get``)."""
+    config: LaborConfig = None
 
-    def __init__(self, config: LaborConfig, caps: Sequence[LayerCaps]):
+    @classmethod
+    def build(cls, config: LaborConfig, caps: Sequence[LayerCaps],
+              name: Optional[str] = None) -> "LaborSampler":
         if len(caps) != len(config.fanouts):
             raise ValueError("need one LayerCaps per fanout")
-        self.config = dataclasses.replace(config,
-                                          fanouts=tuple(config.fanouts))
-        self.caps = list(caps)
+        config = dataclasses.replace(config, fanouts=tuple(config.fanouts))
+        spec = SamplerSpec(name=name or _labor_name(config),
+                           budgets=config.fanouts, caps=tuple(caps),
+                           shared_salts=config.layer_dependency)
+        return cls(spec=spec, config=config)
 
-    def sample(self, graph: Graph, seeds: jax.Array, key: jax.Array) -> list[SampledLayer]:
-        """seeds: int32[B] (padded with -1 allowed). Returns blocks, batch
-        (outermost) layer first.
+    def with_caps(self, caps: Sequence[LayerCaps]) -> "LaborSampler":
+        if len(caps) != len(self.config.fanouts):
+            raise ValueError("need one LayerCaps per fanout")
+        return super().with_caps(caps)
 
-        The multi-layer loop is jitted as one program (cached per
-        (config, caps) pair), which keeps the standalone sampler
-        bit-identical to the sampling subgraph traced inside the fused
-        train step."""
-        salts = layer_salts(self.config, key)
-        return _sample_with_salts_jit(self.config, tuple(self.caps), graph,
-                                      seeds, salts)
+    def sample(self, graph: Graph, seeds: jax.Array,
+               salts: jax.Array) -> list[SampledLayer]:
+        return sample_with_salts(self.config, self.spec.caps, graph, seeds,
+                                 salts)
 
 
 def sample_with_salt(cfg: LaborConfig, caps: Sequence[LayerCaps],
@@ -348,31 +305,9 @@ def sample_with_salt(cfg: LaborConfig, caps: Sequence[LayerCaps],
     """Multi-layer sampling from a raw uint32 salt (no PRNG key object) —
     used inside shard_map where keys are awkward to thread. Layer salts
     are derived by remixing unless layer_dependency is set."""
-    salt = jnp.asarray(salt).astype(jnp.uint32)
-    n = len(cfg.fanouts)
-    if cfg.layer_dependency:
-        salts = jnp.broadcast_to(salt, (n,))
-    else:
-        salts = jnp.stack([
-            rng_lib._mix(salt + jnp.uint32(0x9E3779B9) * jnp.uint32(layer + 1))
-            for layer in range(n)
-        ])
+    salts = rng_lib.layer_salts_from_uint32(salt, len(cfg.fanouts),
+                                            shared=cfg.layer_dependency)
     return sample_with_salts(cfg, caps, graph, seeds, salts)
-
-
-def config_for(name: str, fanouts: Sequence[int],
-               layer_dependency: bool = False) -> Optional[LaborConfig]:
-    """LaborConfig for a sampler name (``ns`` / ``labor-<i>`` / ``labor-*``),
-    or None if the name is not a LABOR-family sampler (e.g. ladies)."""
-    if name == "ns":
-        return LaborConfig(fanouts=tuple(fanouts), importance_iters=0,
-                           per_edge_rng=True, exact_k=True)
-    if name.startswith("labor-"):
-        variant = name.split("-", 1)[1]
-        iters = CONVERGE if variant == "*" else int(variant)
-        return LaborConfig(fanouts=tuple(fanouts), importance_iters=iters,
-                           layer_dependency=layer_dependency)
-    return None
 
 
 def neighbor_sampler(fanouts: Sequence[int], caps: Sequence[LayerCaps],
@@ -380,7 +315,7 @@ def neighbor_sampler(fanouts: Sequence[int], caps: Sequence[LayerCaps],
     """Vanilla Neighbor Sampling (Hamilton et al. 2017) as the degenerate
     LABOR configuration the paper identifies: per-edge randomness, uniform
     pi; ``exact=True`` takes exactly min(k, d_s) neighbors."""
-    return LaborSampler(
+    return LaborSampler.build(
         LaborConfig(fanouts=tuple(fanouts), importance_iters=0,
                     per_edge_rng=True, exact_k=exact),
         caps,
@@ -391,7 +326,7 @@ def labor_sampler(fanouts: Sequence[int], caps: Sequence[LayerCaps],
                   variant: int | str = 0, layer_dependency: bool = False) -> LaborSampler:
     """LABOR-i factory. variant: 0, 1, 2, ... or '*' for convergence."""
     iters = CONVERGE if variant in ("*", CONVERGE) else int(variant)
-    return LaborSampler(
+    return LaborSampler.build(
         LaborConfig(fanouts=tuple(fanouts), importance_iters=iters,
                     layer_dependency=layer_dependency),
         caps,

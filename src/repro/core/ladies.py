@@ -13,18 +13,23 @@ restricted to the seeds:  p_t  ∝  sum_{s in S, t->s} 1/d_s^2.
 
 Blocks carry ALL edges from sampled vertices into the seeds, which is
 what makes LADIES-style methods edge-inefficient (paper Table 2).
+
+Randomness is salt-based (stateless hashes of a per-layer uint32 salt,
+see repro.core.rng), the same scheme as the LABOR family — so both
+samplers trace inside the fused one-program train step and the
+standalone path stays bit-identical to the fused path.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import rng as rng_lib
-from repro.core.cs_solve import _segment_sum
-from repro.core.interface import LayerCaps, SampledLayer
+from repro.core.interface import (LayerCaps, SampledLayer, Sampler,
+                                  SamplerSpec, build_block)
 from repro.graph.csr import Graph, expand_seed_edges
 
 
@@ -71,31 +76,31 @@ def _waterfill_lambda(p: jax.Array, n: int, iters: int = 50) -> jax.Array:
 def sample_layer_ladies(
     graph: Graph,
     seeds: jax.Array,
-    key: jax.Array,
+    salt: jax.Array,
     n: int,
     caps: LayerCaps,
     poisson: bool = False,
 ) -> SampledLayer:
+    """One LADIES/PLADIES layer from a uint32 ``salt`` (fully traceable)."""
     S = seeds.shape[0]
     V = graph.num_vertices
     exp = expand_seed_edges(graph, seeds, caps.expand_cap)
     src, slot, mask = exp["src"], exp["seed_slot"], exp["mask"]
     safe_src = jnp.where(mask, src, 0)
-    safe_slot = jnp.clip(slot, 0, S - 1)
 
     p = _layer_probs(graph, exp, V)
 
     if poisson:
         lam = _waterfill_lambda(p, n)
         pi = jnp.minimum(1.0, lam * p)                      # sum pi = n
-        r = rng_lib.hash_uniform(rng_lib.salt_from_key(key), jnp.arange(V))
+        r = rng_lib.hash_uniform(salt, jnp.arange(V))
         member = (r < pi) & (p > 0)
         inv_pi = jnp.where(member, 1.0 / jnp.maximum(pi, 1e-20), 0.0)
     else:
         # n draws with replacement via inverse CDF, deduplicated.
         total = jnp.maximum(jnp.sum(p), 1e-20)
         cdf = jnp.cumsum(p / total)
-        u = jax.random.uniform(key, (n,))
+        u = rng_lib.hash_uniform(salt, jnp.arange(n))
         draws = jnp.searchsorted(cdf, u).astype(jnp.int32)
         draws = jnp.clip(draws, 0, V - 1)
         member = jnp.zeros((V,), jnp.bool_).at[draws].set(True)
@@ -105,52 +110,7 @@ def sample_layer_ladies(
 
     # block edges: every edge t->s with t sampled
     include = mask & member[safe_src]
-    inv_p_e = inv_pi[safe_src]
-    w = _segment_sum(jnp.where(include, inv_p_e, 0.0), jnp.where(include, slot, -1), S)
-    weight_full = jnp.where(include, inv_p_e / jnp.maximum(w[safe_slot], 1e-20), 0.0)
-
-    num_sampled = jnp.sum(include.astype(jnp.int32))
-    sel = jnp.nonzero(include, size=caps.edge_cap, fill_value=0)[0]
-    emask = jnp.arange(caps.edge_cap) < jnp.minimum(num_sampled, caps.edge_cap)
-    e_src = jnp.where(emask, src[sel], -1)
-    e_dst_slot = jnp.where(emask, slot[sel], -1)
-    e_weight = jnp.where(emask, weight_full[sel], 0.0)
-
-    seed_member = jnp.zeros((V,), jnp.bool_).at[jnp.where(seeds >= 0, seeds, 0)].set(
-        seeds >= 0, mode="drop"
-    )
-    # next seeds: seeds first, then sampled vertices that appear in an edge
-    used = jnp.zeros((V,), jnp.bool_).at[jnp.where(emask, e_src, 0)].set(emask, mode="drop")
-    new_member = used & ~seed_member
-    num_new = jnp.sum(new_member.astype(jnp.int32))
-    new_cap = caps.vertex_cap - S
-    new_vs = jnp.nonzero(new_member, size=new_cap, fill_value=-1)[0].astype(jnp.int32)
-    next_seeds = jnp.concatenate([seeds.astype(jnp.int32), new_vs])
-
-    pos = jnp.full((V,), -1, jnp.int32).at[jnp.where(next_seeds >= 0, next_seeds, 0)].set(
-        jnp.arange(caps.vertex_cap, dtype=jnp.int32), mode="drop"
-    )
-    e_src_slot = jnp.where(emask, pos[jnp.where(emask, e_src, 0)], -1)
-
-    num_seeds = jnp.sum((seeds >= 0).astype(jnp.int32))
-    overflow = (
-        (exp["total"] > caps.expand_cap)
-        | (num_sampled > caps.edge_cap)
-        | (num_new > new_cap)
-    )
-    return SampledLayer(
-        seeds=seeds.astype(jnp.int32),
-        next_seeds=next_seeds,
-        src=e_src,
-        dst_slot=e_dst_slot,
-        src_slot=e_src_slot,
-        weight=e_weight,
-        edge_mask=emask,
-        num_seeds=num_seeds,
-        num_next=num_seeds + num_new,
-        num_edges=num_sampled,
-        overflow=overflow,
-    )
+    return build_block(V, seeds, exp, include, inv_pi[safe_src], caps)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,29 +119,48 @@ class LadiesConfig:
     poisson: bool = False        # True => PLADIES
 
 
-class LadiesSampler:
-    def __init__(self, config: LadiesConfig, caps: Sequence[LayerCaps]):
+@dataclasses.dataclass(frozen=True)
+class LadiesSampler(Sampler):
+    """LADIES/PLADIES on the :class:`~repro.core.interface.Sampler`
+    protocol — salt-based, so it traces inside fused programs exactly
+    like the LABOR family."""
+    config: LadiesConfig = None
+
+    @classmethod
+    def build(cls, config: LadiesConfig, caps: Sequence[LayerCaps],
+              name: Optional[str] = None) -> "LadiesSampler":
         if len(caps) != len(config.layer_sizes):
             raise ValueError("need one LayerCaps per layer size")
-        self.config = config
-        self.caps = list(caps)
+        config = dataclasses.replace(config,
+                                     layer_sizes=tuple(config.layer_sizes))
+        spec = SamplerSpec(name=name or ("pladies" if config.poisson
+                                         else "ladies"),
+                           budgets=config.layer_sizes, caps=tuple(caps))
+        return cls(spec=spec, config=config)
 
-    def sample(self, graph: Graph, seeds: jax.Array, key: jax.Array) -> list[SampledLayer]:
+    def with_caps(self, caps: Sequence[LayerCaps]) -> "LadiesSampler":
+        if len(caps) != len(self.config.layer_sizes):
+            raise ValueError("need one LayerCaps per layer size")
+        return super().with_caps(caps)
+
+    def sample(self, graph: Graph, seeds: jax.Array,
+               salts: jax.Array) -> list[SampledLayer]:
         blocks = []
         cur = seeds
-        for layer, (n, caps) in enumerate(zip(self.config.layer_sizes, self.caps)):
-            blk = sample_layer_ladies(
-                graph, cur, jax.random.fold_in(key, layer), n, caps,
-                poisson=self.config.poisson,
-            )
+        for layer, (n, caps) in enumerate(zip(self.config.layer_sizes,
+                                              self.spec.caps)):
+            blk = sample_layer_ladies(graph, cur, salts[layer], n, caps,
+                                      poisson=self.config.poisson)
             blocks.append(blk)
             cur = blk.next_seeds
         return blocks
 
 
 def ladies_sampler(layer_sizes, caps):
-    return LadiesSampler(LadiesConfig(tuple(layer_sizes), poisson=False), caps)
+    return LadiesSampler.build(LadiesConfig(tuple(layer_sizes), poisson=False),
+                               caps)
 
 
 def pladies_sampler(layer_sizes, caps):
-    return LadiesSampler(LadiesConfig(tuple(layer_sizes), poisson=True), caps)
+    return LadiesSampler.build(LadiesConfig(tuple(layer_sizes), poisson=True),
+                               caps)

@@ -64,3 +64,33 @@ def salt_from_key(key: jax.Array) -> jax.Array:
     """Fold a jax PRNG key down to a uint32 salt for the hashes above."""
     data = jax.random.key_data(key).reshape(-1).astype(jnp.uint32)
     return _mix(data[0] ^ _mix(data[-1]))
+
+
+def layer_salts_from_key(key: jax.Array, num_layers: int,
+                         shared: bool = False) -> jax.Array:
+    """Per-layer uint32 salts (uint32[num_layers]) from a PRNG key.
+
+    ``shared=True`` broadcasts one base salt across layers — the paper's
+    layer-dependent mode (§A.8), where every layer reuses the same r_t.
+    Fully traceable, so a fused train step can derive the whole schedule
+    inside its program from a dynamic key argument."""
+    if shared:
+        return jnp.broadcast_to(salt_from_key(key), (num_layers,))
+    return jnp.stack([
+        salt_from_key(jax.random.fold_in(key, layer))
+        for layer in range(num_layers)
+    ])
+
+
+def layer_salts_from_uint32(salt: jax.Array, num_layers: int,
+                            shared: bool = False) -> jax.Array:
+    """Per-layer salts from a raw uint32 (no PRNG key object) — used
+    inside shard_map where key types are awkward to thread. Layer salts
+    are derived by remixing unless ``shared`` is set."""
+    salt = jnp.asarray(salt).astype(jnp.uint32)
+    if shared:
+        return jnp.broadcast_to(salt, (num_layers,))
+    return jnp.stack([
+        _mix(salt + jnp.uint32(0x9E3779B9) * jnp.uint32(layer + 1))
+        for layer in range(num_layers)
+    ])

@@ -1,0 +1,236 @@
+"""Sampler registry: one namespace, one construction path, every
+sampler fused.
+
+The paper positions LABOR as a drop-in replacement for Neighbor
+Sampling with the same fanout hyperparameter — i.e. samplers are
+interchangeable components. This module makes that interchangeability
+first-class: every sampler is a registry entry built through the same
+:class:`~repro.core.interface.Sampler` protocol, so the trainer, the
+eval loop, the distributed step, the serving path, and every benchmark
+consume the same object and any registered sampler traces inside the
+fused one-program train step.
+
+  from repro.core import samplers
+  sampler = samplers.from_dataset("labor-0", ds, batch_size=1024,
+                                  fanouts=(10, 10, 10))
+  blocks = sampler.sample_with_key(graph, seeds, key)     # standalone
+  blocks = sampler.sample(graph, seeds, salts)            # in a trace
+
+Registered entries (plus ``labor-<i>`` for any i >= 0):
+
+  ns        vanilla Neighbor Sampling (LABOR degenerate case, §3.2/§A.3)
+  labor-0   LABOR with uniform pi (the paper's default)
+  labor-1   one importance fixed-point iteration
+  labor-*   iterate importance sampling to convergence (§4.3)
+  labor-d   layer-dependent LABOR-0: r_t reused across layers (§A.8)
+  ladies    LADIES baseline (Zou et al. 2019)
+  pladies   Poisson LADIES (paper §3.1)
+  full      full neighborhood, cap-bounded — exact inference/serving
+
+Adding a sampler:
+
+  1. implement the protocol (subclass ``Sampler``; a pure
+     ``sample(graph, seeds, salts)`` built on ``build_block``),
+  2. ``samplers.register(name, builder, doc=...)`` where
+     ``builder(budgets, caps) -> Sampler``.
+
+Nothing else: the fused train step, overflow replay, eval, serving, and
+the parity test suite (tests/test_sampler_api.py) pick the entry up
+from the registry.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.interface import (LayerCaps, SampledLayer, Sampler,
+                                  SamplerSpec, build_block, suggest_caps)
+from repro.core.labor import CONVERGE, LaborConfig, LaborSampler
+from repro.core.ladies import LadiesConfig, LadiesSampler
+from repro.graph.csr import Graph, expand_seed_edges
+
+
+@dataclasses.dataclass(frozen=True)
+class FullSampler(Sampler):
+    """Full-neighborhood "sampler": every in-edge of every seed, layer by
+    layer, cap-bounded. Deterministic (salts are ignored), Hajek weights
+    reduce to 1/d_s — i.e. the exact row-normalized aggregation — which
+    makes it the registry entry for exact inference and serving."""
+
+    def sample(self, graph: Graph, seeds: jax.Array,
+               salts: jax.Array) -> list[SampledLayer]:
+        del salts  # deterministic: include everything
+        blocks = []
+        cur = seeds
+        for caps in self.spec.caps:
+            exp = expand_seed_edges(graph, cur, caps.expand_cap)
+            inv_p = jnp.ones((caps.expand_cap,), jnp.float32)  # p_ts = 1
+            blk = build_block(graph.num_vertices, cur, exp, exp["mask"],
+                              inv_p, caps)
+            blocks.append(blk)
+            cur = blk.next_seeds
+        return blocks
+
+
+class UnknownSamplerError(ValueError):
+    """Raised for a sampler name the registry cannot resolve."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RegistryEntry:
+    name: str
+    builder: Callable          # (budgets, caps) -> Sampler
+    doc: str = ""
+    budget_kind: str = "fanouts"   # "fanouts" | "layer_sizes"
+    dense: bool = False            # caps must hold full neighborhoods
+
+
+_REGISTRY: dict = {}
+
+
+def register(name: str, builder: Callable, *, doc: str = "",
+             budget_kind: str = "fanouts", dense: bool = False,
+             overwrite: bool = False) -> Callable:
+    """Register ``builder(budgets, caps) -> Sampler`` under ``name``."""
+    if budget_kind not in ("fanouts", "layer_sizes"):
+        raise ValueError(f"bad budget_kind {budget_kind!r}")
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"sampler {name!r} already registered")
+    _REGISTRY[name] = RegistryEntry(name=name, builder=builder, doc=doc,
+                                    budget_kind=budget_kind, dense=dense)
+    return builder
+
+
+def list_samplers() -> tuple:
+    """Registered sampler names (``labor-<i>`` also resolves for any i)."""
+    return tuple(_REGISTRY)
+
+
+def describe() -> list:
+    """(name, doc) pairs for --list-samplers style output."""
+    return [(e.name, e.doc) for e in _REGISTRY.values()]
+
+
+def resolve(name: str) -> RegistryEntry:
+    """Entry for ``name``; supports the ``labor-<i>`` family for any i.
+
+    Raises :class:`UnknownSamplerError` (with the full registry listing)
+    for anything else — at the API boundary, not deep in a factory.
+    """
+    entry = _REGISTRY.get(name)
+    if entry is not None:
+        return entry
+    m = re.fullmatch(r"labor-(\d+)", name)
+    if m:
+        iters = int(m.group(1))
+        return RegistryEntry(
+            name=name, builder=_labor_builder(name, iters),
+            doc=f"LABOR with {iters} importance fixed-point iteration(s)")
+    raise UnknownSamplerError(
+        f"unknown sampler {name!r}; registered: "
+        f"{', '.join(list_samplers())} (plus labor-<i> for any i >= 0)")
+
+
+def get(name: str, budgets: Sequence[int],
+        caps: Sequence[LayerCaps]) -> Sampler:
+    """Build a registered sampler from explicit budgets + caps.
+
+    ``budgets`` are per-layer fanouts for neighbor-style entries and
+    per-layer sizes for the ladies family (see each entry's
+    ``budget_kind``)."""
+    entry = resolve(name)
+    return entry.builder(tuple(int(b) for b in budgets), tuple(caps))
+
+
+def from_graph_stats(name: str, *, batch_size: int, fanouts: Sequence[int],
+                     avg_degree: float, max_degree: int,
+                     num_vertices: Optional[int] = None,
+                     num_edges: Optional[int] = None,
+                     layer_sizes: Optional[Sequence[int]] = None,
+                     safety: float = 2.0) -> Sampler:
+    """Build a sampler with its cap schedule derived from graph stats.
+
+    This is the single cap-management path: ``suggest_caps`` sizes the
+    static buffers from fanout geometry (full-neighborhood geometry for
+    ``dense`` entries like ``full``), the ladies family takes
+    ``layer_sizes`` as budgets (default ``batch_size * k`` per layer),
+    and overflow retry later goes through ``Sampler.with_caps``.
+    """
+    entry = resolve(name)
+    fanouts = tuple(int(k) for k in fanouts)
+    cap_fanouts = (tuple(int(max_degree) for _ in fanouts) if entry.dense
+                   else fanouts)
+    caps = suggest_caps(batch_size, cap_fanouts, avg_degree, max_degree,
+                        safety=safety, num_vertices=num_vertices,
+                        num_edges=num_edges)
+    if entry.budget_kind == "layer_sizes":
+        budgets = (tuple(int(n) for n in layer_sizes)
+                   if layer_sizes is not None
+                   else tuple(batch_size * k for k in fanouts))
+        if len(budgets) != len(fanouts):
+            raise ValueError(
+                f"sampler {name!r}: {len(budgets)} layer_sizes for "
+                f"{len(fanouts)} layers")
+    else:
+        budgets = fanouts
+    return entry.builder(budgets, tuple(caps))
+
+
+def from_dataset(name: str, ds, *, batch_size: int, fanouts: Sequence[int],
+                 layer_sizes: Optional[Sequence[int]] = None,
+                 safety: float = 2.0) -> Sampler:
+    """:func:`from_graph_stats` with the stats read off a GraphDataset."""
+    g = ds.graph
+    return from_graph_stats(
+        name, batch_size=batch_size, fanouts=fanouts,
+        avg_degree=g.num_edges / g.num_vertices,
+        max_degree=ds.max_in_degree,
+        num_vertices=g.num_vertices, num_edges=g.num_edges,
+        layer_sizes=layer_sizes, safety=safety)
+
+
+def _labor_builder(name: str, iters: int, **kw) -> Callable:
+    def build(budgets, caps):
+        return LaborSampler.build(
+            LaborConfig(fanouts=budgets, importance_iters=iters, **kw),
+            caps, name=name)
+    return build
+
+
+def _ladies_builder(name: str, poisson: bool) -> Callable:
+    def build(budgets, caps):
+        return LadiesSampler.build(LadiesConfig(budgets, poisson=poisson),
+                                   caps, name=name)
+    return build
+
+
+register("ns", _labor_builder("ns", 0, per_edge_rng=True, exact_k=True),
+         doc="vanilla Neighbor Sampling: per-edge randomness, exactly "
+             "min(k, d) neighbors (LABOR degenerate case, §3.2/§A.3)")
+register("labor-0", _labor_builder("labor-0", 0),
+         doc="LABOR with uniform pi — the paper's default (§3.2)")
+register("labor-1", _labor_builder("labor-1", 1),
+         doc="LABOR with one importance fixed-point iteration (§4.3)")
+register("labor-*", _labor_builder("labor-*", CONVERGE),
+         doc="LABOR iterated to importance-sampling convergence (§4.3)")
+register("labor-d", _labor_builder("labor-d", 0, layer_dependency=True),
+         doc="layer-dependent LABOR-0: one salt shared across layers so "
+             "r_t is reused and |V^3| shrinks further (§A.8)")
+register("ladies", _ladies_builder("ladies", False),
+         budget_kind="layer_sizes",
+         doc="LADIES baseline (Zou et al. 2019): n vertices per layer, "
+             "with-replacement inverse-CDF draws")
+register("pladies", _ladies_builder("pladies", True),
+         budget_kind="layer_sizes",
+         doc="Poisson LADIES (§3.1): water-filled inclusion probs, "
+             "E[|layer|] = n, unbiased by construction")
+register("full",
+         lambda budgets, caps: FullSampler(
+             SamplerSpec(name="full", budgets=budgets, caps=caps)),
+         dense=True,
+         doc="full neighborhood, cap-bounded — exact (zero-variance) "
+             "aggregation for inference/serving")

@@ -15,7 +15,7 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Callable, Iterator, Optional
+from typing import Iterator, Optional
 
 import jax
 import jax.numpy as jnp
@@ -95,24 +95,25 @@ class PrefetchIterator:
             return item
 
 
-def sample_with_retry(sampler_factory: Callable, graph, seeds, key, caps,
+def sample_with_retry(sampler, graph, seeds, key,
                       stats: Optional[LoaderStats] = None, max_retries: int = 3):
-    """Run sampler; on overflow double all caps and retry (new
-    specialization compiles once per cap schedule).
+    """Run a :class:`~repro.core.interface.Sampler`; on overflow double
+    its cap schedule (``sampler.with_caps``) and retry (one jit
+    specialization per cap schedule). Returns ``(blocks, sampler)`` where
+    the returned sampler carries the possibly-doubled caps — callers
+    thread it forward so later batches start from the grown schedule.
 
     This is the *eager* protocol: it forces a device->host sync on every
     batch to read the overflow flags before the optimizer step may run.
     The fused pipeline uses :class:`OverflowLedger` instead, which defers
     the check by one step so dispatch never stalls."""
-    cur = list(caps)
     for attempt in range(max_retries + 1):
-        sampler = sampler_factory(cur)
-        blocks = sampler.sample(graph, seeds, key)
+        blocks = sampler.sample_with_key(graph, seeds, key)
         if not any(bool(b.overflow) for b in blocks):
-            return blocks, cur
+            return blocks, sampler
         if stats is not None:
             stats.overflow_retries += 1
-        cur = double_caps(cur)
+        sampler = sampler.with_caps(double_caps(sampler.caps))
     raise RuntimeError("sampling overflow persisted after cap doubling")
 
 

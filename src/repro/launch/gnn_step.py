@@ -25,8 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.labor_gcn import GNNWorkloadConfig
-from repro.core import labor
-from repro.core.interface import LayerCaps, suggest_caps
+from repro.core import samplers as sampler_registry
 from repro.distributed import compression as comp
 from repro.distributed.feature_exchange import exchange_features
 from repro.graph.csr import Graph
@@ -34,13 +33,23 @@ from repro.models import gnn as gnn_models
 from repro.optim import adam
 
 
+def _sampler_for(cfg: GNNWorkloadConfig, local_batch: int):
+    """Registry sampler sized for the device-local batch — the same
+    construction path as the single-host trainer, so registry entries
+    with layer-size budgets (ladies family) or dense cap geometry
+    (full) come out correctly configured here too."""
+    max_deg = int(min(cfg.avg_degree * 64, cfg.num_vertices - 1))
+    return sampler_registry.from_graph_stats(
+        cfg.sampler, batch_size=local_batch, fanouts=cfg.fanouts,
+        avg_degree=cfg.avg_degree, max_degree=max_deg,
+        num_vertices=cfg.num_vertices,
+        num_edges=int(cfg.num_vertices * cfg.avg_degree),
+        safety=cfg.cap_safety)
+
+
 def derive_caps(cfg: GNNWorkloadConfig, num_devices: int):
     local_batch = max(cfg.global_batch // num_devices, 8)
-    max_deg = int(min(cfg.avg_degree * 64, cfg.num_vertices - 1))
-    caps = suggest_caps(local_batch, cfg.fanouts, cfg.avg_degree, max_deg,
-                        safety=cfg.cap_safety, num_vertices=cfg.num_vertices,
-                        num_edges=int(cfg.num_vertices * cfg.avg_degree))
-    return local_batch, caps
+    return local_batch, list(_sampler_for(cfg, local_batch).caps)
 
 
 def build_gnn_train_step(mesh, cfg: GNNWorkloadConfig):
@@ -53,7 +62,9 @@ def build_gnn_train_step(mesh, cfg: GNNWorkloadConfig):
     num_devices = 1
     for a in axes:
         num_devices *= mesh.shape[a]
-    local_batch, caps = derive_caps(cfg, num_devices)
+    local_batch = max(cfg.global_batch // num_devices, 8)
+    sampler = _sampler_for(cfg, local_batch)
+    caps = list(sampler.caps)
     v_pad = -(-cfg.num_vertices // num_devices) * num_devices
     v_local = v_pad // num_devices
     t_cap = caps[-1].vertex_cap
@@ -62,23 +73,11 @@ def build_gnn_train_step(mesh, cfg: GNNWorkloadConfig):
     comp_cfg = comp.CompressionConfig(cfg.grad_compression)
     opt_cfg = adam.AdamConfig(lr=1e-3)
 
-    if cfg.sampler == "ns":
-        iters = 0
-    elif cfg.sampler == "labor-*":
-        iters = labor.CONVERGE
-    else:
-        iters = int(cfg.sampler.split("-")[1])
-    sampler_cfg = labor.LaborConfig(
-        fanouts=cfg.fanouts,
-        importance_iters=iters,
-        per_edge_rng=cfg.sampler == "ns",
-    )
-
     def local_step(params, opt_state, err, indptr, indices, features,
                    seeds, labels, salt):
         # shard_map local views: features (v_local, F), seeds (local_batch,)
         graph = Graph(indptr=indptr, indices=indices)
-        blocks = labor.sample_with_salt(sampler_cfg, caps, graph, seeds, salt)
+        blocks = sampler.sample_with_salt(graph, seeds, salt)
         feats, ovf = exchange_features(features, blocks[-1].next_seeds,
                                        axes, peer_cap)
 

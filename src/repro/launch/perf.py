@@ -170,23 +170,18 @@ def measure_gnn_provisioned(mesh, sampler):
     products-like graph, then lower at production scale."""
     import jax.numpy as jnp
     import numpy as np
-    from repro.core import (labor_sampler, neighbor_sampler, pad_seeds,
-                            suggest_caps)
+    from repro.core import pad_seeds, samplers
     from repro.graph import paper_dataset
 
     ds = paper_dataset("products", scale=0.003, seed=0, feature_dim=8)
     g = ds.graph
     B = 128
-    caps = suggest_caps(B, (10, 10, 10), g.num_edges / g.num_vertices,
-                        ds.max_in_degree, safety=2.5,
-                        num_vertices=g.num_vertices, num_edges=g.num_edges)
-    smp = (neighbor_sampler((10, 10, 10), caps) if sampler == "ns"
-           else labor_sampler((10, 10, 10), caps,
-                              "*" if sampler == "labor-*" else 0))
+    smp = samplers.from_dataset(sampler, ds, batch_size=B,
+                                fanouts=(10, 10, 10), safety=2.5)
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
     sizes = []
     for t in range(3):
-        blocks = smp.sample(g, seeds, jax.random.key(t))
+        blocks = smp.sample_with_key(g, seeds, jax.random.key(t))
         sizes.append([int(b.num_next) for b in blocks])
     v3 = float(np.mean([s[-1] for s in sizes]))
     # safety relative to the measured need: 1.3x measured |V^3| per seed

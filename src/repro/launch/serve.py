@@ -1,5 +1,15 @@
-"""Batched decode serving driver (CPU-scale demo of the serve_step the
-dry-run lowers at production scale).
+"""Serving drivers.
+
+GNN node-classification serving (the paper's workload): batched requests
+answered by a fused sample+gather+forward program built from the same
+registry ``Sampler`` the trainer uses — ``full`` gives exact
+(full-neighborhood) inference, any other entry gives sampled inference:
+
+  PYTHONPATH=src python -m repro.launch.serve --workload gnn \
+      --dataset products --scale 0.01 --sampler full --requests 16
+
+LM batched decode (CPU-scale demo of the serve_step the dry-run lowers
+at production scale):
 
   PYTHONPATH=src python -m repro.launch.serve --arch stablelm-1.6b \
       --reduce --batch 4 --prompt-len 32 --gen 16
@@ -7,19 +17,89 @@ dry-run lowers at production scale).
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="stablelm-1.6b")
-    ap.add_argument("--reduce", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
-    ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+def serve_gnn(args):
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
 
+    from repro.core import samplers
+    from repro.core.interface import double_caps, pad_seeds
+    from repro.graph import paper_dataset
+    from repro.models import gnn as gnn_models
+    from repro.runtime import checkpoint as ckpt_lib
+    from repro.runtime.trainer import make_fused_infer_step
+
+    ds = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
+    g = ds.graph
+    feats = jnp.asarray(ds.features)
+    labels = np.asarray(ds.labels)
+    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    n_cls = int(ds.labels.max()) + 1
+
+    init_fn, apply_fn = gnn_models.MODELS[args.model]
+    params = init_fn(jax.random.key(args.seed), ds.features.shape[1],
+                     args.hidden, n_cls, len(fanouts))
+    if args.ckpt_dir:
+        last = ckpt_lib.latest_step(args.ckpt_dir)
+        if last is not None:
+            params = ckpt_lib.restore(args.ckpt_dir, last,
+                                      {"params": params})["params"]
+
+    # the same registry object + overflow protocol as training: double
+    # caps via with_caps and rebuild the fused program (rare, amortized)
+    sampler = samplers.from_dataset(args.sampler, ds, batch_size=args.batch,
+                                    fanouts=fanouts, safety=2.0)
+    infer = make_fused_infer_step(apply_fn, sampler)
+
+    idx = ds.val_idx
+    key = jax.random.key(args.seed + 1)
+    latencies, correct, total, timed_nodes = [], 0, 0, 0
+    for r in range(args.requests):
+        lo = (r * args.batch) % max(len(idx) - args.batch, 1)
+        chunk = idx[lo:lo + args.batch]
+        seeds = pad_seeds(jnp.asarray(chunk), args.batch)
+        key, sk = jax.random.split(key)
+        t0 = time.perf_counter()
+        logits, ovf = infer(params, g, feats, seeds, sk)
+        for _ in range(4):                      # overflow: grow and retry
+            if not bool(jnp.any(ovf)):
+                break
+            sampler = sampler.with_caps(double_caps(sampler.caps))
+            infer = make_fused_infer_step(apply_fn, sampler)
+            logits, ovf = infer(params, g, feats, seeds, sk)
+        if bool(jnp.any(ovf)):
+            # same contract as sample_with_retry/replay_fused: never
+            # score logits from a cap-truncated neighborhood
+            raise RuntimeError("sampling overflow persisted after cap "
+                               "doubling while serving")
+        pred = np.asarray(jnp.argmax(logits, -1))
+        lat = time.perf_counter() - t0
+        valid = np.asarray(seeds >= 0)
+        if r > 0:                               # exclude compile
+            latencies.append(lat)
+            timed_nodes += int(valid.sum())
+        correct += int(((pred == labels[np.asarray(jnp.where(seeds >= 0, seeds, 0))])
+                        & valid).sum())
+        total += int(valid.sum())
+    lat_ms = np.array(latencies) * 1e3 if latencies else np.array([0.0])
+    nodes_per_sec = (round(timed_nodes / (float(np.sum(lat_ms)) / 1e3), 1)
+                     if latencies else None)
+    print(json.dumps({
+        "sampler": sampler.name,
+        "exact": sampler.name == "full",
+        "requests": args.requests, "batch": args.batch,
+        "latency_ms_p50": round(float(np.percentile(lat_ms, 50)), 2),
+        "latency_ms_p99": round(float(np.percentile(lat_ms, 99)), 2),
+        "nodes_per_sec": nodes_per_sec,
+        "accuracy": round(correct / max(total, 1), 4),
+    }, indent=1))
+
+
+def serve_lm(args):
     import jax
     import jax.numpy as jnp
     from repro import configs as cfgreg
@@ -62,6 +142,36 @@ def main():
           f"decoded {B}x{G} in {dt:.2f}s "
           f"({B * (G - 1) / max(dt, 1e-9):.1f} tok/s)")
     print("sample:", toks[0, :12].tolist())
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=["lm", "gnn"], default="lm")
+    # lm
+    ap.add_argument("--arch", default="stablelm-1.6b")
+    ap.add_argument("--reduce", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen", type=int, default=16)
+    # gnn
+    ap.add_argument("--dataset", default="products")
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--sampler", default="full",
+                    help="any registered sampler; 'full' = exact inference")
+    ap.add_argument("--model", default="gcn")
+    ap.add_argument("--fanouts", default="10,10,10")
+    ap.add_argument("--hidden", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    if args.workload == "gnn":
+        from repro.core import samplers
+        samplers.resolve(args.sampler)   # fail fast on unknown names
+        serve_gnn(args)
+    else:
+        serve_lm(args)
 
 
 if __name__ == "__main__":

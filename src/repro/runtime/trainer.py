@@ -13,9 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import labor, ladies as ladies_lib
-from repro.core.interface import (LayerCaps, double_caps, overflow_flags,
-                                  pad_seeds, sampled_counts, suggest_caps)
+from repro.core import samplers as sampler_registry
+from repro.core.interface import (Sampler, double_caps, overflow_flags,
+                                  pad_seeds, sampled_counts)
 from repro.data.gnn_loader import (LoaderStats, OverflowLedger, SeedBatches,
                                    sample_with_retry)
 from repro.graph.generators import GraphDataset
@@ -24,31 +24,14 @@ from repro.optim import adam
 from repro.runtime import checkpoint as ckpt_lib
 
 
-def make_sampler_factory(name: str, fanouts, layer_sizes=None):
-    """name: ns | labor-0 | labor-1 | labor-* | ladies | pladies."""
-    def factory(caps):
-        labor_cfg = labor.config_for(name, fanouts)
-        if labor_cfg is not None:
-            # same config object the fused step traces with — keeping the
-            # fused and unfused paths on one source of truth is what the
-            # bit-exact parity contract rests on
-            return labor.LaborSampler(labor_cfg, caps)
-        if name == "ladies":
-            return ladies_lib.ladies_sampler(layer_sizes, caps)
-        if name == "pladies":
-            return ladies_lib.pladies_sampler(layer_sizes, caps)
-        raise ValueError(name)
-    return factory
-
-
 @dataclasses.dataclass
 class GNNTrainConfig:
     model: str = "gcn"                  # gcn | sage | gatv2
     hidden: int = 256
     num_layers: int = 0                 # 0 -> len(fanouts)
     fanouts: tuple = (10, 10, 10)
-    sampler: str = "labor-0"
-    layer_sizes: Optional[tuple] = None  # for (p)ladies
+    sampler: str = "labor-0"             # any repro.core.samplers entry
+    layer_sizes: Optional[tuple] = None  # (p)ladies budgets; None -> default
     batch_size: int = 1000
     lr: float = 1e-3
     steps: int = 200
@@ -60,9 +43,17 @@ class GNNTrainConfig:
     cap_safety: float = 2.0
     use_kernel: bool = False
     # fuse sampling + gather + fwd/bwd + Adam into one XLA program with
-    # donated buffers (LABOR-family samplers only; ladies falls back)
+    # donated buffers — every registered sampler traces inside it
     fused: bool = True
     max_replay_retries: int = 3
+
+
+def build_sampler(ds: GraphDataset, cfg: GNNTrainConfig) -> Sampler:
+    """The one sampler construction path: registry entry + caps derived
+    from the dataset's graph stats (train and eval share it)."""
+    return sampler_registry.from_dataset(
+        cfg.sampler, ds, batch_size=cfg.batch_size, fanouts=cfg.fanouts,
+        layer_sizes=cfg.layer_sizes, safety=cfg.cap_safety)
 
 
 def _gnn_loss_fn(apply_fn, params, blocks, feats, labels, use_kernel):
@@ -100,10 +91,12 @@ def gather_feats(features: jax.Array, block) -> jax.Array:
 
 
 def make_fused_train_step(apply_fn, opt_cfg: adam.AdamConfig,
-                          labor_cfg: labor.LaborConfig, caps, use_kernel=False):
-    """One-dispatch train step: multi-layer LABOR sampling, feature
-    gather, forward/backward and the Adam update fused into a single
-    jitted XLA program with donated parameter/optimizer buffers.
+                          sampler: Sampler, use_kernel=False):
+    """One-dispatch train step: multi-layer sampling, feature gather,
+    forward/backward and the Adam update fused into a single jitted XLA
+    program with donated parameter/optimizer buffers. ``sampler`` is any
+    :class:`~repro.core.interface.Sampler` — every registry entry (NS,
+    the LABOR family, LADIES/PLADIES, full) traces inside the program.
 
     The step never syncs on overflow. Instead the parameter update is
     *gated*: if any layer overflowed its static caps, params/opt_state
@@ -114,16 +107,14 @@ def make_fused_train_step(apply_fn, opt_cfg: adam.AdamConfig,
     Signature: step(params, opt_state, graph, features, labels_all,
     seeds, key) -> (params, opt_state, metrics). ``key`` is a jax PRNG
     key — a dynamic argument, so steps never respecialize on the PRNG
-    state, and the per-layer salt schedule (:func:`labor.layer_salts`)
-    is derived inside the traced program rather than as per-step host
+    state, and the per-layer salt schedule (``sampler.spec.salts``) is
+    derived inside the traced program rather than as per-step host
     micro-dispatches.
     """
-    caps = list(caps)
 
     @partial(jax.jit, donate_argnums=(0, 1))
     def step(params, opt_state, graph, features, labels_all, seeds, key):
-        salts = labor.layer_salts(labor_cfg, key)
-        blocks = labor.sample_with_salts(labor_cfg, caps, graph, seeds, salts)
+        blocks = sampler.sample(graph, seeds, sampler.spec.salts(key))
         feats = gather_feats(features, blocks[-1])
         labels = labels_all[jnp.where(seeds >= 0, seeds, 0)]
         (loss, acc), grads = jax.value_and_grad(
@@ -144,6 +135,31 @@ def make_fused_train_step(apply_fn, opt_cfg: adam.AdamConfig,
     return step
 
 
+def make_fused_infer_step(apply_fn, sampler: Sampler, use_kernel=False):
+    """One-dispatch serving step: sampling + feature gather + forward in
+    a single jitted program — the serving-side counterpart of
+    :func:`make_fused_train_step`, consuming the same sampler object.
+
+    Signature: infer(params, graph, features, seeds, key) ->
+    (logits, overflow_flags). With the ``full`` registry entry the
+    logits are exact (full-neighborhood aggregation); with any other
+    entry this is sampled inference. Overflow handling is the caller's
+    usual protocol: double caps via ``sampler.with_caps`` and rebuild.
+    """
+
+    @jax.jit
+    def infer(params, graph, features, seeds, key):
+        blocks = sampler.sample(graph, seeds, sampler.spec.salts(key))
+        feats = gather_feats(features, blocks[-1])
+        if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
+            logits = apply_fn(params, blocks, feats, use_kernel=use_kernel)
+        else:
+            logits = apply_fn(params, blocks, feats)
+        return logits, overflow_flags(blocks)
+
+    return infer
+
+
 def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
               log_every: int = 50, history_metrics: bool = True) -> Dict[str, Any]:
     """Full GNN training with auto-resume. Returns metrics history."""
@@ -161,14 +177,9 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
     opt_cfg = adam.AdamConfig(lr=cfg.lr)
     opt_state = adam.init_state(params, opt_cfg)
 
-    avg_deg = g.num_edges / g.num_vertices
-    caps = suggest_caps(cfg.batch_size, cfg.fanouts, avg_deg, ds.max_in_degree,
-                        safety=cfg.cap_safety, num_vertices=g.num_vertices,
-                        num_edges=g.num_edges)
-    factory = make_sampler_factory(cfg.sampler, cfg.fanouts, cfg.layer_sizes)
-    labor_cfg = labor.config_for(cfg.sampler, cfg.fanouts) if cfg.fused else None
-    if labor_cfg is not None:
-        fused_step = make_fused_train_step(apply_fn, opt_cfg, labor_cfg, caps,
+    sampler = build_sampler(ds, cfg)
+    if cfg.fused:
+        fused_step = make_fused_train_step(apply_fn, opt_cfg, sampler,
                                            cfg.use_kernel)
     else:
         step_fn = make_gnn_train_step(apply_fn, opt_cfg, cfg.use_kernel)
@@ -197,26 +208,25 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
     epoch_iter = iter(batches.epoch())
     ledger = OverflowLedger(stats)
 
-    def replay_fused(seeds, sample_key, hist_idx, caps_then):
+    def replay_fused(seeds, sample_key, hist_idx, sampler_then):
         """Re-run an overflowed (device-side no-op) batch until its flags
-        clear, doubling caps whenever the current schedule is the one
-        that overflowed; rebinds the fused step closure. Returns the
-        replayed step's metrics."""
-        nonlocal caps, fused_step, params, opt_state
+        clear, doubling caps (``Sampler.with_caps``) whenever the current
+        schedule is the one that overflowed; rebinds the fused step
+        closure. Returns the replayed step's metrics."""
+        nonlocal sampler, fused_step, params, opt_state
         for _ in range(cfg.max_replay_retries + 1):
-            if caps is caps_then:
+            if sampler is sampler_then:
                 stats.overflow_retries += 1
-                caps = double_caps(caps)
+                sampler = sampler.with_caps(double_caps(sampler.caps))
                 fused_step = make_fused_train_step(apply_fn, opt_cfg,
-                                                   labor_cfg, caps,
-                                                   cfg.use_kernel)
+                                                   sampler, cfg.use_kernel)
             params, opt_state, m = fused_step(params, opt_state, g, feats,
                                               labels_all, seeds, sample_key)
             if hist_idx is not None:
                 device_history[hist_idx] = {**device_history[hist_idx], **m}
             if not bool(jnp.any(m["overflow"])):
                 return m
-            caps_then = caps
+            sampler_then = sampler
         raise RuntimeError("sampling overflow persisted after cap doubling")
 
     t0 = time.time()
@@ -227,18 +237,18 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
             epoch_iter = iter(batches.epoch())
             seeds = next(epoch_iter)
         key, sk = jax.random.split(key)
-        if labor_cfg is not None:
+        if cfg.fused:
             params, opt_state, m = fused_step(params, opt_state, g, feats,
                                               labels_all, seeds, sk)
             hist_idx = len(device_history) if history_metrics else None
             if history_metrics:
                 device_history.append({"step": step + 1, **m})
             # poll the PREVIOUS batch's flags (already retired — free)
-            due = ledger.record((seeds, sk, hist_idx, caps), m["overflow"])
+            due = ledger.record((seeds, sk, hist_idx, sampler), m["overflow"])
             if due is not None:
                 replay_fused(*due)
         else:
-            blocks, caps = sample_with_retry(factory, g, seeds, sk, caps, stats)
+            blocks, sampler = sample_with_retry(sampler, g, seeds, sk, stats)
             bf = gather_feats(feats, blocks[-1])
             lab = labels_all[jnp.where(seeds >= 0, seeds, 0)]
             params, opt_state, m = step_fn(params, opt_state, blocks, bf, lab)
@@ -248,7 +258,7 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
                     "sampled_v": blocks[-1].num_next,
                     "sampled_e": sum(b.num_edges for b in blocks)})
         if saver and (step + 1) % cfg.ckpt_every == 0:
-            if labor_cfg is not None:
+            if cfg.fused:
                 # resolve the just-dispatched batch before persisting:
                 # if it overflowed its update was gated off on device and
                 # would otherwise be replayed only after the save
@@ -285,11 +295,8 @@ def evaluate_gnn(ds: GraphDataset, params, cfg: GNNTrainConfig,
     labels_all = jnp.asarray(ds.labels)
     cfg = dataclasses.replace(cfg, num_layers=len(cfg.fanouts))
     _, apply_fn = gnn_models.MODELS[cfg.model]
-    avg_deg = g.num_edges / g.num_vertices
-    caps = suggest_caps(cfg.batch_size, cfg.fanouts, avg_deg, ds.max_in_degree,
-                        safety=cfg.cap_safety, num_vertices=g.num_vertices,
-                        num_edges=g.num_edges)
-    factory = make_sampler_factory(cfg.sampler, cfg.fanouts, cfg.layer_sizes)
+    # same construction path as training: registry entry + derived caps
+    sampler = build_sampler(ds, cfg)
     key = key if key is not None else jax.random.key(1234)
     correct = total = 0
     for i in range(batches):
@@ -299,7 +306,7 @@ def evaluate_gnn(ds: GraphDataset, params, cfg: GNNTrainConfig,
         chunk = idx[lo:lo + cfg.batch_size]
         seeds = pad_seeds(jnp.asarray(chunk), cfg.batch_size)
         key, sk = jax.random.split(key)
-        blocks, caps = sample_with_retry(factory, g, seeds, sk, caps)
+        blocks, sampler = sample_with_retry(sampler, g, seeds, sk)
         bf = gather_feats(feats, blocks[-1])
         if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
             logits = apply_fn(params, blocks, bf, use_kernel=cfg.use_kernel)

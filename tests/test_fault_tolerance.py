@@ -48,12 +48,11 @@ def _train_with_preemption(ds, cfg, preemptor):
     cluster's SIGTERM arriving mid-training)."""
     import jax
     import jax.numpy as jnp
-    from repro.core.interface import suggest_caps
     from repro.data.gnn_loader import SeedBatches, sample_with_retry
     from repro.optim import adam
     from repro.models import gnn as gnn_models
-    from repro.runtime.trainer import (gather_feats, make_gnn_train_step,
-                                       make_sampler_factory)
+    from repro.runtime.trainer import (build_sampler, gather_feats,
+                                       make_gnn_train_step)
 
     g = ds.graph
     feats = jnp.asarray(ds.features)
@@ -63,11 +62,7 @@ def _train_with_preemption(ds, cfg, preemptor):
                      cfg.hidden, int(ds.labels.max()) + 1, len(cfg.fanouts))
     opt_cfg = adam.AdamConfig(lr=cfg.lr)
     opt_state = adam.init_state(params, opt_cfg)
-    caps = suggest_caps(cfg.batch_size, cfg.fanouts,
-                        g.num_edges / g.num_vertices, ds.max_in_degree,
-                        safety=cfg.cap_safety, num_vertices=g.num_vertices,
-                        num_edges=g.num_edges)
-    factory = make_sampler_factory(cfg.sampler, cfg.fanouts)
+    sampler = build_sampler(ds, cfg)
     step_fn = make_gnn_train_step(apply_fn, opt_cfg)
 
     saver = ck.AsyncSaver(cfg.ckpt_dir)
@@ -88,7 +83,7 @@ def _train_with_preemption(ds, cfg, preemptor):
             it = iter(batches.epoch())
             seeds = next(it)
         key, sk = jax.random.split(key)
-        blocks, caps = sample_with_retry(factory, g, seeds, sk, caps)
+        blocks, sampler = sample_with_retry(sampler, g, seeds, sk)
         bf = gather_feats(feats, blocks[-1])
         lab = labels_all[jnp.where(seeds >= 0, seeds, 0)]
         params, opt_state, m = step_fn(params, opt_state, blocks, bf, lab)

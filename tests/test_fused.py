@@ -72,12 +72,14 @@ def test_overflow_replay_async_path(ds):
         np.testing.assert_allclose(a, b, atol=2e-2)
 
 
-def test_ladies_falls_back_to_unfused(ds):
-    """Non-LABOR samplers cannot trace inside the fused step; the
-    trainer must fall back rather than fail with fused=True (default)."""
+def test_ladies_runs_fused(ds):
+    """The ladies family is salt-based like LABOR and traces inside the
+    fused one-program step — no unfused fallback branch exists anymore
+    (the full per-sampler parity matrix lives in test_sampler_api.py)."""
     cfg = GNNTrainConfig(model="sage", hidden=16, fanouts=(4,),
                          sampler="ladies", layer_sizes=(128,),
                          batch_size=64, steps=3, lr=3e-3, seed=0,
                          cap_safety=3.0)
     r = train_gnn(ds, cfg)
     assert len(r["history"]) == 3
+    assert r["stats"].overflow_replays == 0

@@ -86,7 +86,7 @@ def test_model_aggregate_uses_kernel():
     ds = paper_dataset("flickr", scale=0.02, seed=3, feature_dim=24)
     caps = [LayerCaps(4096, 2048, 1024)]
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:64]), 64)
-    blk = labor_sampler((5,), caps, 0).sample(ds.graph, seeds,
+    blk = labor_sampler((5,), caps, 0).sample_with_key(ds.graph, seeds,
                                               jax.random.key(0))[0]
     h = jnp.asarray(np.random.default_rng(0).normal(
         size=(blk.next_cap, 24)), jnp.float32)

@@ -59,7 +59,7 @@ def test_fixed_point_monotone(ds):
         smp = labor_sampler((10,), caps, variant)
         tot = 0
         for t in range(5):
-            blk = smp.sample(g, seeds, jax.random.key(t))[0]
+            blk = smp.sample_with_key(g, seeds, jax.random.key(t))[0]
             tot += int(blk.num_next)
         sizes.append(tot / 5)
     assert sizes[0] >= sizes[1] >= sizes[2] - 1 and sizes[2] >= sizes[4] - 2, sizes
@@ -76,8 +76,8 @@ def test_labor_beats_ns_vertex_count(ds):
     n_ns = n_l0 = 0
     for t in range(5):
         key = jax.random.key(t)
-        n_ns += int(ns.sample(g, seeds, key)[-1].num_next)
-        n_l0 += int(l0.sample(g, seeds, key)[-1].num_next)
+        n_ns += int(ns.sample_with_key(g, seeds, key)[-1].num_next)
+        n_l0 += int(l0.sample_with_key(g, seeds, key)[-1].num_next)
     assert n_l0 < n_ns  # correlated sampling -> fewer unique vertices
 
 
@@ -86,8 +86,8 @@ def test_exact_k_mode(ds):
     g, B, k = ds.graph, 64, 5
     caps = _caps(ds, B, (k,))
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
-    smp = LaborSampler(LaborConfig(fanouts=(k,), exact_k=True), caps)
-    blk = smp.sample(g, seeds, jax.random.key(0))[0]
+    smp = LaborSampler.build(LaborConfig(fanouts=(k,), exact_k=True), caps)
+    blk = smp.sample_with_key(g, seeds, jax.random.key(0))[0]
     degs = np.asarray(g.in_degree(seeds))
     counts = np.zeros(B, np.int64)
     np.add.at(counts, np.asarray(blk.dst_slot)[np.asarray(blk.edge_mask)], 1)
@@ -98,7 +98,7 @@ def test_hajek_weights_sum_to_one(ds):
     g, B = ds.graph, 64
     caps = _caps(ds, B, (10,))
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
-    blk = labor_sampler((10,), caps, "*").sample(g, seeds, jax.random.key(1))[0]
+    blk = labor_sampler((10,), caps, "*").sample_with_key(g, seeds, jax.random.key(1))[0]
     w = np.zeros(B)
     m = np.asarray(blk.edge_mask)
     np.add.at(w, np.asarray(blk.dst_slot)[m], np.asarray(blk.weight)[m])
@@ -110,12 +110,12 @@ def test_layer_dependency_reuses_randomness(ds):
     g, B = ds.graph, 32
     caps = _caps(ds, B, (5, 5))
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
-    dep = LaborSampler(LaborConfig(fanouts=(5, 5), layer_dependency=True), caps)
-    blocks = dep.sample(g, seeds, jax.random.key(0))
+    dep = LaborSampler.build(LaborConfig(fanouts=(5, 5), layer_dependency=True), caps)
+    blocks = dep.sample_with_key(g, seeds, jax.random.key(0))
     # with layer dependency, a vertex sampled in layer 1 that is also a
     # neighbor in layer 2 re-uses r_t -> layers overlap more than indep.
-    indep = LaborSampler(LaborConfig(fanouts=(5, 5)), caps)
-    blocks_i = indep.sample(g, seeds, jax.random.key(0))
+    indep = LaborSampler.build(LaborConfig(fanouts=(5, 5)), caps)
+    blocks_i = indep.sample_with_key(g, seeds, jax.random.key(0))
     def overlap(blocks):
         l1 = set(np.asarray(blocks[0].next_seeds).tolist()) - {-1}
         l2 = set(np.asarray(blocks[1].next_seeds).tolist()) - {-1}
@@ -129,7 +129,7 @@ def test_overflow_flag():
     from repro.core.interface import LayerCaps
     tiny = [LayerCaps(expand_cap=128, edge_cap=128, vertex_cap=96)]
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
-    blk = labor_sampler((10,), tiny, 0).sample(g, seeds, jax.random.key(0))[0]
+    blk = labor_sampler((10,), tiny, 0).sample_with_key(g, seeds, jax.random.key(0))[0]
     assert bool(blk.overflow)
 
 

@@ -36,7 +36,7 @@ def test_pladies_expected_vertices(ds):
     caps = _caps(ds, B, 1)
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
     smp = pladies_sampler((n,), caps)
-    sizes = [int(smp.sample(g, seeds, jax.random.key(t))[0].num_next) - B
+    sizes = [int(smp.sample_with_key(g, seeds, jax.random.key(t))[0].num_next) - B
              for t in range(20)]
     # allow overlap of T with seeds to push a little below n
     assert abs(np.mean(sizes) - n) < 0.15 * n, np.mean(sizes)
@@ -46,7 +46,7 @@ def test_ladies_unique_at_most_n(ds):
     g, B, n = ds.graph, 128, 300
     caps = _caps(ds, B, 1)
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
-    blk = ladies_sampler((n,), caps).sample(g, seeds, jax.random.key(0))[0]
+    blk = ladies_sampler((n,), caps).sample_with_key(g, seeds, jax.random.key(0))[0]
     assert int(blk.num_next) - int(blk.num_seeds) <= n
 
 
@@ -72,9 +72,9 @@ def test_ladies_edges_exceed_labor_edges(ds):
     g, B = ds.graph, 128
     caps = _caps(ds, B, 1)
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
-    lab = labor_sampler((10,), caps, 0).sample(g, seeds, jax.random.key(0))[0]
+    lab = labor_sampler((10,), caps, 0).sample_with_key(g, seeds, jax.random.key(0))[0]
     n_match = int(lab.num_next) - B  # match vertex budgets (paper method)
-    lad = ladies_sampler((max(n_match, 1),), caps).sample(
+    lad = ladies_sampler((max(n_match, 1),), caps).sample_with_key(
         g, seeds, jax.random.key(0))[0]
     # per sampled vertex, LADIES brings more edges
     e_per_v_lad = int(lad.num_edges) / max(int(lad.num_next) - B, 1)
@@ -86,7 +86,7 @@ def test_pladies_weights_hajek(ds):
     g, B = ds.graph, 64
     caps = _caps(ds, B, 1)
     seeds = pad_seeds(jnp.asarray(ds.train_idx[:B]), B)
-    blk = pladies_sampler((300,), caps).sample(g, seeds, jax.random.key(2))[0]
+    blk = pladies_sampler((300,), caps).sample_with_key(g, seeds, jax.random.key(2))[0]
     w = np.zeros(B)
     m = np.asarray(blk.edge_mask)
     np.add.at(w, np.asarray(blk.dst_slot)[m], np.asarray(blk.weight)[m])
