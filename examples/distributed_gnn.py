@@ -1,7 +1,8 @@
-"""Distributed GNN training demo: the production shard_map data path on
-8 simulated devices — partitioned features, per-device LABOR sampling
-with hash-shared randomness, feature all-to-all, gradient all-reduce
-(optionally int8-compressed).
+"""Distributed GNN training demo: the partition-aware TrainEngine on 8
+simulated devices — destination-owned partitioned CSR (no replicated
+topology), per-layer seed routing, partition-local LABOR with
+hash-shared randomness, feature/hidden all-to-alls, gradient all-reduce
+(optionally int8-compressed). See docs/distributed.md.
 
   PYTHONPATH=src python examples/distributed_gnn.py [--compression int8]
 """
@@ -29,56 +30,53 @@ def main():
     from repro.core import samplers
     samplers.resolve(args.sampler)   # validate before building the mesh
 
-    from repro.configs.labor_gcn import GNNWorkloadConfig
+    from repro.core.interface import pad_seeds
     from repro.graph.generators import DatasetSpec, generate
-    from repro.launch.gnn_step import build_gnn_train_step
     from repro.launch.mesh import make_mesh
     from repro.models import gnn as gnn_models
     from repro.optim import adam
-    from repro.distributed import compression as comp
+    from repro.runtime.engine import TrainEngine
 
-    mesh = make_mesh((8,), ("data",))
+    P = 8
+    mesh = make_mesh((P,), ("data",))
     spec = DatasetSpec("demo", 8192, 16.0, 32, 8, 0.5, 0.2, 0.6, 4000)
     ds = generate(spec, seed=0)
     g = ds.graph
     print(f"graph |V|={g.num_vertices} |E|={g.num_edges}; mesh={dict(mesh.shape)}")
 
-    cfg = GNNWorkloadConfig(
-        num_vertices=g.num_vertices,
-        avg_degree=g.num_edges / g.num_vertices,
-        feature_dim=32, num_classes=8, hidden=64, num_layers=2,
-        fanouts=(5, 5), global_batch=512, cap_safety=3.0,
-        sampler=args.sampler,
-        grad_compression=args.compression)
-    step, specs, param_specs, meta = build_gnn_train_step(mesh, cfg)
-    print(f"local batch {meta['local_batch']}, feature peer cap "
-          f"{meta['peer_cap']}")
+    global_batch = 512
+    fanouts = (5, 5)
+    # one construction path for every scale: registry caps sized for the
+    # DEVICE-LOCAL batch, per-peer all-to-all caps riding along
+    sampler = samplers.from_dataset(
+        args.sampler, ds, batch_size=global_batch // P, fanouts=fanouts,
+        safety=3.0, num_parts=P)
+    engine = TrainEngine(sampler, gnn_models.gcn_apply,
+                         adam.AdamConfig(lr=5e-3), mesh=mesh,
+                         grad_compression=args.compression)
+    print(f"local batch {global_batch // P}, per-peer all-to-all caps "
+          f"{list(sampler.spec.peer_caps)}")
 
-    params = gnn_models.gcn_init(jax.random.key(0), 32, cfg.hidden,
-                                 cfg.num_classes, cfg.num_layers)
-    opt_cfg = adam.AdamConfig(lr=5e-3)
-    opt = adam.init_state(params, opt_cfg)
-    err = comp.init_error_state(params, comp.CompressionConfig(args.compression))
+    data = engine.make_data_from_dataset(ds)
+    params = gnn_models.gcn_init(jax.random.key(0), 32, 64, 8, len(fanouts))
+    state = engine.init_state(params)
 
-    feats = np.zeros((meta["v_pad"], 32), np.float32)
-    feats[:g.num_vertices] = ds.features
-    E = int(cfg.num_vertices * cfg.avg_degree)
-    idx = np.zeros(E, np.int32)
-    real = np.asarray(g.indices)[:E]
-    idx[:real.size] = real
     rng = np.random.default_rng(0)
-    jit_step = jax.jit(step)
+    key = jax.random.key(100)
     for t in range(args.steps):
-        seeds = rng.choice(ds.train_idx, size=cfg.global_batch, replace=False)
-        labels = ds.labels[seeds]
-        params, opt, err, m = jit_step(
-            params, opt, err, jnp.asarray(g.indptr), jnp.asarray(idx),
-            jnp.asarray(feats), jnp.asarray(seeds.astype(np.int32)),
-            jnp.asarray(labels), jnp.uint32(100 + t))
+        seeds = pad_seeds(jnp.asarray(rng.choice(
+            ds.train_idx, size=global_batch, replace=False).astype(np.int32)),
+            global_batch)
+        key, sk = jax.random.split(key)
+        params, state, m = engine.step(params, state, data, seeds, sk, tag=t)
         print(f"step {t}: loss={float(m['loss']):.4f} "
-              f"sampled_V={int(m['sampled_vertices'])} "
-              f"sampled_E={int(m['sampled_edges'])} "
-              f"overflow={int(m['overflow'])}")
+              f"acc={float(m['acc']):.3f} "
+              f"sampled_V={int(m['sampled_v'])} "
+              f"sampled_E={int(m['sampled_e'])} "
+              f"overflow={int(jnp.any(m['overflow']))}")
+    params, state, _ = engine.flush(params, state, data)
+    print(f"overflow replays: {engine.stats.overflow_replays}, "
+          f"cap doublings: {engine.stats.overflow_retries}")
 
 
 if __name__ == "__main__":

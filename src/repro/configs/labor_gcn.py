@@ -25,9 +25,10 @@ class GNNWorkloadConfig:
     fanouts: Tuple[int, ...] = (10, 10, 10)
     sampler: str = "labor-0"
     global_batch: int = 32768              # seeds per step across the mesh
-    # static caps per DEVICE-LOCAL batch, derived in launch/gnn_dryrun
+    # safety for the registry-derived static caps (LayerCaps AND the
+    # per-peer all-to-all schedule), sized per DEVICE-LOCAL batch by
+    # launch/gnn_step.build_gnn_engine
     cap_safety: float = 1.6
-    feature_peer_cap_safety: float = 2.0
     grad_compression: str = "none"          # none | bf16 | int8
     dtype: str = "float32"
 

@@ -95,10 +95,31 @@ def double_caps(caps: Sequence[LayerCaps]) -> list[LayerCaps]:
     """The overflow-retry schedule: double every buffer of every layer.
 
     One jit specialization exists per cap schedule, so doubling (rather
-    than fitting exactly) keeps the number of recompiles logarithmic."""
+    than fitting exactly) keeps the number of recompiles logarithmic.
+    Samplers carrying distributed per-peer all-to-all caps should be
+    grown with :meth:`Sampler.doubled`, which doubles those too."""
     return [dataclasses.replace(c, expand_cap=c.expand_cap * 2,
                                 edge_cap=c.edge_cap * 2,
                                 vertex_cap=c.vertex_cap * 2) for c in caps]
+
+
+def suggest_peer_caps(batch_size: int, caps: Sequence[LayerCaps],
+                      num_parts: int, safety: float = 2.0) -> tuple:
+    """Per-peer all-to-all slot counts for the partition-aware engine.
+
+    ``peer_caps[i]`` bounds how many ids one device may address to one
+    peer in an all-to-all keyed on frontier buffer ``i``: buffer 0 is
+    the device-local seed batch, buffer ``l + 1`` is layer ``l``'s
+    ``next_seeds`` buffer (``caps[l].vertex_cap``). The same schedule
+    covers seed routing, hidden-state exchange, and the feature fetch —
+    every collective the distributed step issues. Ids spread over
+    owners ~uniformly (modulo partition of hash-scale vertex ids), so
+    mean/num_parts plus slack concentrates like the LayerCaps geometry.
+    """
+    sizes = [batch_size] + [c.vertex_cap for c in caps]
+    return tuple(
+        _round_up(int(t / num_parts * safety) + 6 * int(t ** 0.5) + 16, 8)
+        for t in sizes)
 
 
 def suggest_caps(
@@ -170,11 +191,19 @@ class SamplerSpec:
                 is ``sampler.with_caps(double_caps(sampler.caps))``.
       shared_salts: one salt reused across layers (§A.8 layer
                 dependency) instead of an independent salt per layer.
+      peer_caps: optional per-peer all-to-all slot schedule for the
+                partition-aware distributed engine (length num_layers+1,
+                see :func:`suggest_peer_caps`); ``None`` on samplers
+                built without a partition count. Overflow replay doubles
+                them alongside the LayerCaps (:meth:`Sampler.doubled`),
+                so a feature-exchange overflow heals through the same
+                doubled-caps protocol as a sampling overflow.
     """
     name: str
     budgets: tuple
     caps: tuple
     shared_salts: bool = False
+    peer_caps: Optional[tuple] = None
 
     def __post_init__(self):
         object.__setattr__(self, "budgets",
@@ -184,6 +213,14 @@ class SamplerSpec:
             raise ValueError(
                 f"spec {self.name!r}: {len(self.budgets)} budgets but "
                 f"{len(self.caps)} LayerCaps — need one cap per layer")
+        if self.peer_caps is not None:
+            object.__setattr__(self, "peer_caps",
+                               tuple(int(c) for c in self.peer_caps))
+            if len(self.peer_caps) != len(self.caps) + 1:
+                raise ValueError(
+                    f"spec {self.name!r}: peer_caps must have "
+                    f"num_layers + 1 = {len(self.caps) + 1} entries "
+                    f"(got {len(self.peer_caps)})")
 
     @property
     def num_layers(self) -> int:
@@ -200,7 +237,17 @@ class SamplerSpec:
                                                shared=self.shared_salts)
 
     def with_caps(self, caps: Sequence[LayerCaps]) -> "SamplerSpec":
+        """New LayerCaps schedule; ``peer_caps`` are left untouched (use
+        :meth:`doubled` for the overflow-retry growth of both)."""
         return dataclasses.replace(self, caps=tuple(caps))
+
+    def doubled(self) -> "SamplerSpec":
+        """The overflow-retry step: every LayerCaps buffer and every
+        per-peer all-to-all cap doubled."""
+        peer = (None if self.peer_caps is None
+                else tuple(c * 2 for c in self.peer_caps))
+        return dataclasses.replace(self, caps=tuple(double_caps(self.caps)),
+                                   peer_caps=peer)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -239,6 +286,33 @@ class Sampler:
     def with_caps(self, caps: Sequence[LayerCaps]) -> "Sampler":
         """Clone with a new static cap schedule (same sampling math)."""
         return dataclasses.replace(self, spec=self.spec.with_caps(caps))
+
+    def doubled(self) -> "Sampler":
+        """The one overflow-retry idiom: LayerCaps AND per-peer
+        all-to-all caps doubled, sampling math unchanged. Single-host
+        call sites that predate peer caps (`with_caps(double_caps(...))`)
+        remain equivalent when ``spec.peer_caps is None``."""
+        return dataclasses.replace(self, spec=self.spec.doubled())
+
+    def sample_layer_partitioned(self, graph, seeds: jax.Array,
+                                 salt: jax.Array, layer: int, *,
+                                 seed_rows: jax.Array, num_vertices: int,
+                                 axis_name=None):
+        """One sampling layer against a partition-local CSR, inside the
+        distributed engine's shard_map body.
+
+        ``seeds`` are GLOBAL vertex ids owned by this partition (so the
+        stateless hash r_t — and therefore the sampled set — matches the
+        single-device trace bit-exactly); ``seed_rows`` maps each seed to
+        its row in the partition-local ``graph`` (local id = v // P);
+        ``num_vertices`` is the GLOBAL vertex count for the dense
+        membership epilogue; ``axis_name`` names the mesh axis for the
+        cross-partition reductions batch-global samplers need (LABOR
+        importance pmax, LADIES column-norm psum). Returns one
+        :class:`SampledLayer` in global-id space."""
+        raise NotImplementedError(
+            f"sampler {self.name!r} does not implement the "
+            "partition-local sampling path of the distributed engine")
 
     def sample_with_key(self, graph, seeds: jax.Array,
                         key: jax.Array) -> list:

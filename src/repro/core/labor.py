@@ -67,6 +67,8 @@ def run_importance_iterations(
     converge_tol: float = 1e-4,
     converge_max_iters: int = 30,
     fast_solve: bool = True,
+    num_vertices: Optional[int] = None,
+    axis_name=None,
 ):
     """Fixed-point iterations on pi (eq. 18): pi_t <- pi_t * max_{t->s} c_s.
 
@@ -78,14 +80,29 @@ def run_importance_iterations(
     importance iterations. ``fast_solve=False`` reproduces the original
     cold-start iterative solver on every call — kept as the benchmark
     baseline and for solver cross-validation.
+
+    Inside the distributed engine's shard_map body each partition holds
+    only its owned seeds, so the eq. 18 max over destinations is
+    completed with a cross-partition ``pmax`` (``axis_name``). Because
+    max commutes exactly in floating point, the resulting dense pi — and
+    hence every inclusion decision — is bit-identical to the
+    single-device trace; c_s solves stay partition-local (per-seed).
+    ``num_vertices`` overrides the dense-state size with the GLOBAL
+    vertex count when ``graph`` is a partition-local CSR.
     """
-    V = graph.num_vertices
+    V = num_vertices if num_vertices is not None else graph.num_vertices
     src, slot, mask, deg = exp["src"], exp["seed_slot"], exp["mask"], exp["deg"]
 
     def c_of(pi, c_prev=None):
         pi_e = pi[jnp.where(mask, src, 0)]
         return solve_cs(pi_e, slot, deg, k, num_seeds, mask,
                         c_init=c_prev if fast_solve else None)
+
+    def fac_of(c):
+        fac = _scatter_max_c(c[jnp.clip(slot, 0, num_seeds - 1)], src, mask, V)
+        if axis_name is not None:
+            fac = jax.lax.pmax(fac, axis_name)
+        return fac
 
     pi = jnp.ones((V,), jnp.float32)
     if importance_iters == 0:
@@ -108,7 +125,7 @@ def run_importance_iterations(
 
     def one_step(pi, c_prev=None):
         c = c_of(pi, c_prev)
-        fac = _scatter_max_c(c[jnp.clip(slot, 0, num_seeds - 1)], src, mask, V)
+        fac = fac_of(c)
         pi_new = jnp.where(fac > 0, pi * fac, pi)
         return pi_new, c
 
@@ -120,8 +137,7 @@ def run_importance_iterations(
 
     # LABOR-*: iterate until relative change in E[|T|] < tol (paper §4.3).
     def cost(pi, c):
-        fac = _scatter_max_c(c[jnp.clip(slot, 0, num_seeds - 1)], src, mask, V)
-        return _expected_num_sampled(pi, fac)
+        return _expected_num_sampled(pi, fac_of(c))
 
     def body(state):
         pi, c_prev, prev_cost, _, i = state
@@ -180,11 +196,23 @@ def sample_layer(
     converge_tol: float = 1e-4,
     converge_max_iters: int = 30,
     fast_solve: bool = True,
+    seed_rows: Optional[jax.Array] = None,
+    num_vertices: Optional[int] = None,
+    axis_name=None,
 ) -> SampledLayer:
-    """One layer of LABOR-i sampling for padded ``seeds`` (int32[S], -1 pad)."""
+    """One layer of LABOR-i sampling for padded ``seeds`` (int32[S], -1 pad).
+
+    ``seed_rows``/``num_vertices``/``axis_name`` are the partition-local
+    mode of the distributed engine: seeds stay GLOBAL ids (so the
+    stateless r_t hash matches the single-device trace bit-exactly)
+    while CSR rows are looked up at ``seed_rows`` in a partition-local
+    ``graph``; dense per-vertex state spans the global ``num_vertices``;
+    the eq. 18 importance max is completed across partitions over
+    ``axis_name``."""
     S = seeds.shape[0]
-    V = graph.num_vertices
-    exp = expand_seed_edges(graph, seeds, caps.expand_cap)
+    V = num_vertices if num_vertices is not None else graph.num_vertices
+    exp = expand_seed_edges(graph, seeds, caps.expand_cap,
+                            seed_rows=seed_rows)
     src, slot, mask, deg = exp["src"], exp["seed_slot"], exp["mask"], exp["deg"]
     safe_src = jnp.where(mask, src, 0)
     safe_slot = jnp.clip(slot, 0, S - 1)
@@ -193,6 +221,7 @@ def sample_layer(
         pi, c = run_importance_iterations(
             graph, exp, k, S, importance_iters, converge_tol,
             converge_max_iters, fast_solve=fast_solve,
+            num_vertices=V, axis_name=axis_name,
         )
         pi_e = pi[safe_src]
     else:
@@ -297,6 +326,23 @@ class LaborSampler(Sampler):
                salts: jax.Array) -> list[SampledLayer]:
         return sample_with_salts(self.config, self.spec.caps, graph, seeds,
                                  salts)
+
+    def sample_layer_partitioned(self, graph: Graph, seeds: jax.Array,
+                                 salt: jax.Array, layer: int, *,
+                                 seed_rows: jax.Array, num_vertices: int,
+                                 axis_name=None) -> SampledLayer:
+        cfg = self.config
+        return sample_layer(
+            graph, seeds, salt, cfg.fanouts[layer], self.spec.caps[layer],
+            importance_iters=cfg.importance_iters,
+            per_edge_rng=cfg.per_edge_rng,
+            exact_k=cfg.exact_k,
+            converge_tol=cfg.converge_tol,
+            converge_max_iters=cfg.converge_max_iters,
+            fast_solve=cfg.fast_solve,
+            seed_rows=seed_rows, num_vertices=num_vertices,
+            axis_name=axis_name,
+        )
 
 
 def sample_with_salt(cfg: LaborConfig, caps: Sequence[LayerCaps],

@@ -80,15 +80,28 @@ def sample_layer_ladies(
     n: int,
     caps: LayerCaps,
     poisson: bool = False,
+    seed_rows: Optional[jax.Array] = None,
+    num_vertices: Optional[int] = None,
+    axis_name=None,
 ) -> SampledLayer:
-    """One LADIES/PLADIES layer from a uint32 ``salt`` (fully traceable)."""
+    """One LADIES/PLADIES layer from a uint32 ``salt`` (fully traceable).
+
+    In the distributed engine's partition-local mode (``seed_rows``/
+    ``num_vertices``/``axis_name``, see ``Sampler.sample_layer_partitioned``)
+    each partition contributes its owned seeds' column-norm terms and a
+    cross-partition ``psum`` completes the batch-global p_t; the draws
+    themselves hash dense global vertex ids, so every partition keeps an
+    identical view of the sampled layer."""
     S = seeds.shape[0]
-    V = graph.num_vertices
-    exp = expand_seed_edges(graph, seeds, caps.expand_cap)
+    V = num_vertices if num_vertices is not None else graph.num_vertices
+    exp = expand_seed_edges(graph, seeds, caps.expand_cap,
+                            seed_rows=seed_rows)
     src, slot, mask = exp["src"], exp["seed_slot"], exp["mask"]
     safe_src = jnp.where(mask, src, 0)
 
     p = _layer_probs(graph, exp, V)
+    if axis_name is not None:
+        p = jax.lax.psum(p, axis_name)
 
     if poisson:
         lam = _waterfill_lambda(p, n)
@@ -154,6 +167,16 @@ class LadiesSampler(Sampler):
             blocks.append(blk)
             cur = blk.next_seeds
         return blocks
+
+    def sample_layer_partitioned(self, graph: Graph, seeds: jax.Array,
+                                 salt: jax.Array, layer: int, *,
+                                 seed_rows: jax.Array, num_vertices: int,
+                                 axis_name=None) -> SampledLayer:
+        return sample_layer_ladies(
+            graph, seeds, salt, self.config.layer_sizes[layer],
+            self.spec.caps[layer], poisson=self.config.poisson,
+            seed_rows=seed_rows, num_vertices=num_vertices,
+            axis_name=axis_name)
 
 
 def ladies_sampler(layer_sizes, caps):

@@ -48,7 +48,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.interface import (LayerCaps, SampledLayer, Sampler,
-                                  SamplerSpec, build_block, suggest_caps)
+                                  SamplerSpec, build_block, suggest_caps,
+                                  suggest_peer_caps)
 from repro.core.labor import CONVERGE, LaborConfig, LaborSampler
 from repro.core.ladies import LadiesConfig, LadiesSampler
 from repro.graph.csr import Graph, expand_seed_edges
@@ -74,6 +75,17 @@ class FullSampler(Sampler):
             blocks.append(blk)
             cur = blk.next_seeds
         return blocks
+
+    def sample_layer_partitioned(self, graph: Graph, seeds: jax.Array,
+                                 salt: jax.Array, layer: int, *,
+                                 seed_rows: jax.Array, num_vertices: int,
+                                 axis_name=None) -> SampledLayer:
+        del salt, axis_name  # deterministic and per-seed: no collectives
+        caps = self.spec.caps[layer]
+        exp = expand_seed_edges(graph, seeds, caps.expand_cap,
+                                seed_rows=seed_rows)
+        inv_p = jnp.ones((caps.expand_cap,), jnp.float32)
+        return build_block(num_vertices, seeds, exp, exp["mask"], inv_p, caps)
 
 
 class UnknownSamplerError(ValueError):
@@ -151,14 +163,20 @@ def from_graph_stats(name: str, *, batch_size: int, fanouts: Sequence[int],
                      num_vertices: Optional[int] = None,
                      num_edges: Optional[int] = None,
                      layer_sizes: Optional[Sequence[int]] = None,
-                     safety: float = 2.0) -> Sampler:
+                     safety: float = 2.0,
+                     num_parts: Optional[int] = None) -> Sampler:
     """Build a sampler with its cap schedule derived from graph stats.
 
     This is the single cap-management path: ``suggest_caps`` sizes the
     static buffers from fanout geometry (full-neighborhood geometry for
     ``dense`` entries like ``full``), the ladies family takes
     ``layer_sizes`` as budgets (default ``batch_size * k`` per layer),
-    and overflow retry later goes through ``Sampler.with_caps``.
+    and overflow retry later goes through ``Sampler.doubled``.
+
+    ``num_parts`` sizes the distributed engine's per-peer all-to-all
+    caps (``spec.peer_caps``, see :func:`suggest_peer_caps`) alongside
+    the LayerCaps, with ``batch_size`` read as the DEVICE-LOCAL seed
+    batch; overflow replay then doubles both schedules together.
     """
     entry = resolve(name)
     fanouts = tuple(int(k) for k in fanouts)
@@ -177,12 +195,18 @@ def from_graph_stats(name: str, *, batch_size: int, fanouts: Sequence[int],
                 f"{len(fanouts)} layers")
     else:
         budgets = fanouts
-    return entry.builder(budgets, tuple(caps))
+    sampler = entry.builder(budgets, tuple(caps))
+    if num_parts is not None:
+        peer = suggest_peer_caps(batch_size, caps, num_parts, safety=safety)
+        sampler = dataclasses.replace(
+            sampler, spec=dataclasses.replace(sampler.spec, peer_caps=peer))
+    return sampler
 
 
 def from_dataset(name: str, ds, *, batch_size: int, fanouts: Sequence[int],
                  layer_sizes: Optional[Sequence[int]] = None,
-                 safety: float = 2.0) -> Sampler:
+                 safety: float = 2.0,
+                 num_parts: Optional[int] = None) -> Sampler:
     """:func:`from_graph_stats` with the stats read off a GraphDataset."""
     g = ds.graph
     return from_graph_stats(
@@ -190,7 +214,7 @@ def from_dataset(name: str, ds, *, batch_size: int, fanouts: Sequence[int],
         avg_degree=g.num_edges / g.num_vertices,
         max_degree=ds.max_in_degree,
         num_vertices=g.num_vertices, num_edges=g.num_edges,
-        layer_sizes=layer_sizes, safety=safety)
+        layer_sizes=layer_sizes, safety=safety, num_parts=num_parts)
 
 
 def _labor_builder(name: str, iters: int, **kw) -> Callable:

@@ -33,7 +33,14 @@ class LoaderStats:
 
 
 class SeedBatches:
-    """Shuffled, padded seed batches over training vertices."""
+    """Shuffled, padded seed batches over training vertices.
+
+    Every yielded batch — including the ``drop_last=False`` remainder —
+    has the full static ``batch_size`` shape (-1 padding), so one jit
+    specialization serves an entire run; a ``rem``-shaped tail batch
+    would force a fresh compile on the last batch of every epoch
+    (tests/test_data.py::test_seed_batches_remainder_keeps_static_shape).
+    """
 
     def __init__(self, train_idx: np.ndarray, batch_size: int, seed: int = 0,
                  drop_last: bool = True):
@@ -124,10 +131,15 @@ class OverflowLedger:
     block the Python thread on the in-flight XLA program and re-introduce
     the host round-trip the fusion removed. Instead the step *gates* its
     parameter update on the stacked overflow flags (an overflowed batch
-    is a device-side no-op) and returns the flags as a device array. The
-    trainer records each batch here and polls the flags one step late —
-    by then the program has retired, so reading the scalar costs nothing
-    — and replays the skipped batch with doubled caps.
+    is a device-side no-op) and returns the flags as a device array.
+
+    The ledger is owned by :class:`repro.runtime.engine.TrainEngine`,
+    which records each batch here, polls the flags one step late — by
+    then the program has retired, so reading the scalar costs nothing —
+    and replays the skipped batch with doubled caps. On a mesh the
+    polled flag vector also carries the distributed step's all-to-all
+    overflow (seed routing, feature/hidden exchange), so one protocol
+    heals every static cap in the program.
     """
 
     def __init__(self, stats: Optional[LoaderStats] = None):

@@ -29,24 +29,37 @@ def _round_up(x: int, m: int) -> int:
 
 
 def request_layout(ids: jax.Array, num_parts: int, per_peer_cap: int,
-                   v_local: int):
+                   v_local: int, owner_mode: str = "range"):
     """Group padded global ids (-1 pad) by owner into (P, cap) with the
     originating position so responses can be scattered back.
+
+    ``owner_mode`` selects the partition convention: ``"range"`` is
+    jax's contiguous array sharding (owner = v // V_local, row = v %
+    V_local); ``"mod"`` is the destination-owned modulo partitioning of
+    ``repro.graph.partition`` (owner = v % P, row = v // P) that the
+    partition-aware engine uses for features, labels, and hidden
+    states.
 
     Returns (req_ids (P,cap) int32 local row ids, req_pos (P,cap) int32
     positions into ``ids``, overflow bool[]).
     """
     T = ids.shape[0]
     valid = ids >= 0
-    owner = jnp.where(valid, jnp.minimum(ids // v_local, num_parts - 1),
-                      num_parts)
+    if owner_mode == "mod":
+        owner = jnp.where(valid, ids % num_parts, num_parts)
+    elif owner_mode == "range":
+        owner = jnp.where(valid, jnp.minimum(ids // v_local, num_parts - 1),
+                          num_parts)
+    else:
+        raise ValueError(f"unknown owner_mode {owner_mode!r}")
     # rank of each id within its owner group
     oh = jax.nn.one_hot(owner, num_parts + 1, dtype=jnp.int32)
     rank = (jnp.cumsum(oh, axis=0) - oh)[jnp.arange(T), owner]
     overflow = jnp.any(jnp.where(valid, rank, 0) >= per_peer_cap)
     slot = jnp.where(valid & (rank < per_peer_cap),
                      owner * per_peer_cap + rank, num_parts * per_peer_cap)
-    local_row = jnp.where(valid, ids - owner * v_local, -1)
+    row = ids // num_parts if owner_mode == "mod" else ids - owner * v_local
+    local_row = jnp.where(valid, row, -1)
     req_ids = jnp.full((num_parts * per_peer_cap + 1,), -1, jnp.int32)
     req_ids = req_ids.at[slot].set(local_row.astype(jnp.int32),
                                    mode="drop")[:-1].reshape(num_parts, per_peer_cap)
@@ -57,16 +70,19 @@ def request_layout(ids: jax.Array, num_parts: int, per_peer_cap: int,
 
 
 def exchange_features(local_feats: jax.Array, ids: jax.Array, axis_name: str,
-                      per_peer_cap: int) -> Tuple[jax.Array, jax.Array]:
+                      per_peer_cap: int,
+                      owner_mode: str = "range") -> Tuple[jax.Array, jax.Array]:
     """Inside shard_map: fetch feature rows for global ``ids`` (-1 pad).
 
-    local_feats: (V_local, F) this device's owned rows.
+    local_feats: (V_local, F) this device's owned rows (see
+    ``request_layout`` for the two ownership conventions).
     Returns (feats (T, F), overflow bool[]).
     """
     P = compat.axis_size(axis_name)
     T = ids.shape[0]
     V_local, F = local_feats.shape
-    req_ids, req_pos, overflow = request_layout(ids, P, per_peer_cap, V_local)
+    req_ids, req_pos, overflow = request_layout(ids, P, per_peer_cap, V_local,
+                                                owner_mode=owner_mode)
 
     # send my requests to owners; receive others' requests for my rows
     incoming = jax.lax.all_to_all(req_ids[None], axis_name, split_axis=1,

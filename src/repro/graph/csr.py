@@ -109,13 +109,20 @@ def reverse(graph: Graph) -> Graph:
 
 
 @partial(jax.jit, static_argnames=("edge_cap",))
-def expand_seed_edges(graph: Graph, seeds: jax.Array, edge_cap: int):
+def expand_seed_edges(graph: Graph, seeds: jax.Array, edge_cap: int,
+                      seed_rows: Optional[jax.Array] = None):
     """Edge-centric CSR expansion with a static edge budget.
 
     Given padded ``seeds`` (int32[S], padding = -1), produce flat edge
     buffers of length ``edge_cap`` describing every in-edge of every valid
     seed, laid out segment-contiguously (all edges of seed 0, then seed 1,
     ...).
+
+    ``seed_rows`` optionally maps each seed to its CSR row (default: the
+    seed id itself). The distributed engine passes local row ids
+    (``v // num_parts``) here so sampling runs against a partition-local
+    CSR while seeds — and the ``src`` ids the partitioned CSR stores —
+    stay in global-id space.
 
     Returns a dict with (all int32[edge_cap] unless noted):
       seed_slot: index into ``seeds`` for each edge (edge's destination)
@@ -131,7 +138,7 @@ def expand_seed_edges(graph: Graph, seeds: jax.Array, edge_cap: int):
     """
     S = seeds.shape[0]
     valid = seeds >= 0
-    safe_seeds = jnp.where(valid, seeds, 0)
+    safe_seeds = jnp.where(valid, seeds if seed_rows is None else seed_rows, 0)
     deg = jnp.where(valid, graph.indptr[safe_seeds + 1] - graph.indptr[safe_seeds], 0)
     seg_start = jnp.cumsum(deg) - deg  # exclusive prefix sum
     total = jnp.sum(deg)

@@ -180,18 +180,21 @@ def lower_lm_cell(arch: str, shape_name: str, mesh, *, seq_shard_cache=True,
 
 
 def lower_gnn_cell(arch: str, mesh):
-    from repro.launch.gnn_step import build_gnn_train_step
+    from repro.launch.gnn_step import abstract_param_state, build_gnn_engine
     cfg = cfgreg.get_config(arch)
     chips = 1
     for a in mesh.axis_names:
         chips *= mesh.shape[a]
-    step, specs, param_specs, meta = build_gnn_train_step(mesh, cfg)
-    pspec, ospec, espec = param_specs()
-    ins = specs()
+    engine, meta = build_gnn_engine(mesh, cfg)
+    pspec, ospec, espec = abstract_param_state(engine, cfg)
+    ins = engine.abstract_inputs(
+        global_batch=meta["global_batch"], num_vertices=cfg.num_vertices,
+        num_edges=int(cfg.num_vertices * cfg.avg_degree),
+        feature_dim=cfg.feature_dim)
     with compat.mesh_context(mesh):
         args = (pspec, ospec, espec, ins["indptr"], ins["indices"],
-                ins["features"], ins["seeds"], ins["labels"], ins["salt"])
-        lowered = jax.jit(step).lower(*args)
+                ins["features"], ins["labels"], ins["seeds"], ins["key"])
+        lowered = engine.step_fn.lower(*args)
         compiled = lowered.compile()
     # GCN "model flops": 3 layers x (agg + dense) over sampled graph; use
     # dense-update flops of the expected sampled sizes (fanout geometry)

@@ -1,14 +1,15 @@
-"""Distributed GNN train step (the paper's workload at production scale).
+"""Distributed GNN launch glue (the paper's workload at production scale).
 
-shard_map over the whole mesh (all axes fused into one data-parallel
-axis for the GNN — a 3-layer/hidden-256 GCN has no use for TP, noted in
-DESIGN.md): every device samples its local seed batch with LABOR against
-the replicated graph topology, fetches features for the sampled vertices
-from the vertex-partitioned feature array with a fixed-capacity
-all-to-all pair, runs GCN fwd/bwd locally, and all-reduces gradients
-(optionally compressed). Because r_t is a stateless hash of the GLOBAL
-vertex id, LABOR's cross-seed correlation holds across devices with zero
-extra communication.
+The step itself lives in :class:`repro.runtime.engine.TrainEngine` —
+the same partition-aware fused program the single-host trainer lowers,
+here sized from a :class:`~repro.configs.labor_gcn.GNNWorkloadConfig`:
+destination-owned partitioned CSR (no replicated topology), per-layer
+seed routing, partition-local LABOR with the global-id hash r_t,
+fixed-capacity feature/hidden all-to-alls, compressed gradient
+all-reduce. This module only derives the device-local batch, builds the
+sampler through the registry (``from_graph_stats`` — the ONE cap
+construction path, per-peer all-to-all caps included), and provides
+abstract parameter/optimizer specs for AOT lowering (launch/perf.py).
 
 LABOR's vertex-efficiency (paper Table 2: ~7x fewer |V^3| on dense
 graphs) multiplies directly into the feature all-to-all bytes — the
@@ -16,155 +17,69 @@ dominant §Roofline collective term of this workload.
 """
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
 from typing import Tuple
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.labor_gcn import GNNWorkloadConfig
 from repro.core import samplers as sampler_registry
 from repro.distributed import compression as comp
-from repro.distributed.feature_exchange import exchange_features
-from repro.graph.csr import Graph
 from repro.models import gnn as gnn_models
 from repro.optim import adam
+from repro.runtime.engine import TrainEngine
 
 
-def _sampler_for(cfg: GNNWorkloadConfig, local_batch: int):
-    """Registry sampler sized for the device-local batch — the same
-    construction path as the single-host trainer, so registry entries
-    with layer-size budgets (ladies family) or dense cap geometry
-    (full) come out correctly configured here too."""
+def build_gnn_engine(mesh, cfg: GNNWorkloadConfig,
+                     lr: float = 1e-3) -> Tuple[TrainEngine, dict]:
+    """TrainEngine for ``cfg`` on ``mesh`` + launch metadata.
+
+    All cap geometry — LayerCaps and the per-peer all-to-all schedule —
+    comes from the sampler registry, sized for the device-local batch.
+    """
+    num_devices = 1
+    for a in mesh.axis_names:
+        num_devices *= mesh.shape[a]
+    local_batch = max(cfg.global_batch // num_devices, 8)
     max_deg = int(min(cfg.avg_degree * 64, cfg.num_vertices - 1))
-    return sampler_registry.from_graph_stats(
+    sampler = sampler_registry.from_graph_stats(
         cfg.sampler, batch_size=local_batch, fanouts=cfg.fanouts,
         avg_degree=cfg.avg_degree, max_degree=max_deg,
         num_vertices=cfg.num_vertices,
         num_edges=int(cfg.num_vertices * cfg.avg_degree),
-        safety=cfg.cap_safety)
+        safety=cfg.cap_safety, num_parts=num_devices)
+    engine = TrainEngine(sampler, gnn_models.gcn_apply,
+                         adam.AdamConfig(lr=lr), mesh=mesh,
+                         grad_compression=cfg.grad_compression)
+    meta = dict(
+        local_batch=local_batch,
+        global_batch=local_batch * num_devices,
+        caps=list(sampler.caps),
+        peer_caps=list(sampler.spec.peer_caps),
+        num_devices=num_devices,
+        v_local=-(-cfg.num_vertices // num_devices),
+    )
+    return engine, meta
 
 
-def derive_caps(cfg: GNNWorkloadConfig, num_devices: int):
-    local_batch = max(cfg.global_batch // num_devices, 8)
-    return local_batch, list(_sampler_for(cfg, local_batch).caps)
-
-
-def build_gnn_train_step(mesh, cfg: GNNWorkloadConfig):
-    """Returns (step_fn, input_specs, param_specs) for jit/lower.
-
-    step(params, opt_state, err_state, indptr, indices, features, seeds,
-         labels, salt) -> (params, opt_state, err_state, metrics)
-    """
-    axes = tuple(mesh.axis_names)
-    num_devices = 1
-    for a in axes:
-        num_devices *= mesh.shape[a]
-    local_batch = max(cfg.global_batch // num_devices, 8)
-    sampler = _sampler_for(cfg, local_batch)
-    caps = list(sampler.caps)
-    v_pad = -(-cfg.num_vertices // num_devices) * num_devices
-    v_local = v_pad // num_devices
-    t_cap = caps[-1].vertex_cap
-    peer_cap = max(int(t_cap / num_devices * cfg.feature_peer_cap_safety), 16)
-    peer_cap = -(-peer_cap // 8) * 8
-    comp_cfg = comp.CompressionConfig(cfg.grad_compression)
-    opt_cfg = adam.AdamConfig(lr=1e-3)
-
-    def local_step(params, opt_state, err, indptr, indices, features,
-                   seeds, labels, salt):
-        # shard_map local views: features (v_local, F), seeds (local_batch,)
-        graph = Graph(indptr=indptr, indices=indices)
-        blocks = sampler.sample_with_salt(graph, seeds, salt)
-        feats, ovf = exchange_features(features, blocks[-1].next_seeds,
-                                       axes, peer_cap)
-
-        def loss_fn(p):
-            logits = gnn_models.gcn_apply(p, blocks, feats)
-            valid = blocks[0].seeds >= 0
-            safe = jnp.where(valid, labels, 0)
-            lse = jax.nn.logsumexp(logits, axis=-1)
-            gold = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
-            nll = jnp.where(valid, lse - gold, 0.0)
-            return jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
-
-        loss, grads = jax.value_and_grad(loss_fn)(params)
-        grads, err = comp.compressed_mean(grads, err, comp_cfg, axes)
-        params, opt_state, m = adam.apply_updates(params, grads, opt_state,
-                                                  opt_cfg)
-        loss = jax.lax.pmean(loss, axes)
-        metrics = {
-            "loss": loss,
-            "sampled_vertices": jax.lax.psum(blocks[-1].num_next, axes),
-            "sampled_edges": jax.lax.psum(
-                sum(b.num_edges for b in blocks), axes),
-            "overflow": jax.lax.pmax(
-                jnp.maximum(ovf.astype(jnp.int32),
-                            jnp.max(jnp.stack([b.overflow.astype(jnp.int32)
-                                               for b in blocks]))), axes),
-        }
-        return params, opt_state, err, metrics
-
-    rep = P()  # replicated
-    ax = axes if len(axes) > 1 else axes[0]
-    in_specs = (rep, rep, rep, rep, rep, P(ax, None), P(ax), P(ax), rep)
-    out_specs = (rep, rep, rep, rep)
-
-    from jax.experimental.shard_map import shard_map
-
-    def step(params, opt_state, err, indptr, indices, features, seeds, labels,
-             salt):
-        def body(params, opt_state, err, indptr, indices, features, seeds,
-                 labels, salt):
-            return local_step(params, opt_state, err, indptr, indices,
-                              features, seeds, labels, salt)
-        return shard_map(body, mesh=mesh,
-                         in_specs=in_specs, out_specs=out_specs,
-                         check_rep=False)(
-            params, opt_state, err, indptr, indices, features, seeds, labels,
-            salt)
-
-    def specs():
-        F = cfg.feature_dim
-        E = int(cfg.num_vertices * cfg.avg_degree)
-        def sds(shape, dtype, spec):
-            return jax.ShapeDtypeStruct(shape, dtype,
-                                        sharding=NamedSharding(mesh, spec))
-        gb = local_batch * num_devices
-        return dict(
-            indptr=sds((cfg.num_vertices + 1,), jnp.int32, rep),
-            indices=sds((E,), jnp.int32, rep),
-            features=sds((v_pad, F), jnp.float32, P(ax, None)),
-            seeds=sds((gb,), jnp.int32, P(ax)),
-            labels=sds((gb,), jnp.int32, P(ax)),
-            salt=jax.ShapeDtypeStruct((), jnp.uint32),
-        )
-
-    def param_specs():
-        shapes = jax.eval_shape(
-            lambda: gnn_models.gcn_init(jax.random.key(0), cfg.feature_dim,
-                                        cfg.hidden, cfg.num_classes,
-                                        cfg.num_layers))
-        rep_sh = NamedSharding(mesh, rep)
-        pspec = jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep_sh),
-            shapes)
-        opt = jax.eval_shape(lambda p: adam.init_state(p, opt_cfg), shapes)
-        ospec = jax.tree.map(
-            lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep_sh),
-            opt)
-        if comp_cfg.mode == "none":
-            espec = None
-        else:
-            errs = jax.eval_shape(
-                lambda p: comp.init_error_state(p, comp_cfg), shapes)
-            espec = jax.tree.map(
-                lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep_sh),
-                errs)
-        return pspec, ospec, espec
-
-    meta = dict(local_batch=local_batch, caps=caps, peer_cap=peer_cap,
-                v_pad=v_pad, v_local=v_local, num_devices=num_devices)
-    return step, specs, param_specs, meta
+def abstract_param_state(engine: TrainEngine, cfg: GNNWorkloadConfig):
+    """Replicated ShapeDtypeStructs for (params, opt_state, err) — the
+    AOT-lowering counterparts of ``TrainEngine.abstract_inputs``."""
+    mesh = engine.mesh
+    rep_sh = NamedSharding(mesh, P())
+    shapes = jax.eval_shape(
+        lambda: gnn_models.gcn_init(jax.random.key(0), cfg.feature_dim,
+                                    cfg.hidden, cfg.num_classes,
+                                    cfg.num_layers))
+    as_rep = lambda tree: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=rep_sh),
+        tree)
+    pspec = as_rep(shapes)
+    ospec = as_rep(jax.eval_shape(
+        lambda p: adam.init_state(p, engine.opt_cfg), shapes))
+    if engine.comp_cfg.mode == "none":
+        espec = None
+    else:
+        espec = as_rep(jax.eval_shape(
+            lambda p: comp.init_error_state(p, engine.comp_cfg), shapes))
+    return pspec, ospec, espec

@@ -81,21 +81,23 @@ def measure_lm(arch, shape_name, mesh, *, cfg_patch=None, n_mb=None):
 
 def measure_gnn(mesh, *, sampler="labor-0", compression="none",
                 cap_safety=1.6):
-    from repro.launch.dryrun import lower_gnn_cell
     import repro.configs.labor_gcn as lg
     cfg = lg.config(sampler=sampler, grad_compression=compression,
                     cap_safety=cap_safety)
     chips = 1
     for a in mesh.axis_names:
         chips *= mesh.shape[a]
-    from repro.launch.gnn_step import build_gnn_train_step
-    step, specs, param_specs, meta = build_gnn_train_step(mesh, cfg)
-    pspec, ospec, espec = param_specs()
-    ins = specs()
+    from repro.launch.gnn_step import abstract_param_state, build_gnn_engine
+    engine, meta = build_gnn_engine(mesh, cfg)
+    pspec, ospec, espec = abstract_param_state(engine, cfg)
+    ins = engine.abstract_inputs(
+        global_batch=meta["global_batch"], num_vertices=cfg.num_vertices,
+        num_edges=int(cfg.num_vertices * cfg.avg_degree),
+        feature_dim=cfg.feature_dim)
     with compat.mesh_context(mesh):
-        lowered = jax.jit(step).lower(
+        lowered = engine.step_fn.lower(
             pspec, ospec, espec, ins["indptr"], ins["indices"],
-            ins["features"], ins["seeds"], ins["labels"], ins["salt"])
+            ins["features"], ins["labels"], ins["seeds"], ins["key"])
         compiled = lowered.compile()
     f, b, w = _cost_of(compiled)
     terms = rl.roofline_terms(f, b, w.wire_bytes, w.by_kind, chips=chips)
@@ -104,7 +106,7 @@ def measure_gnn(mesh, *, sampler="labor-0", compression="none",
                          + ma.output_size_in_bytes
                          - ma.alias_size_in_bytes) / 2**30
     terms["meta"] = {k: str(v) for k, v in meta.items()
-                     if k in ("local_batch", "peer_cap")}
+                     if k in ("local_batch", "peer_caps")}
     return terms
 
 
@@ -186,7 +188,8 @@ def measure_gnn_provisioned(mesh, sampler):
     v3 = float(np.mean([s[-1] for s in sizes]))
     # safety relative to the measured need: 1.3x measured |V^3| per seed
     per_seed = v3 / B
-    # express as cap_safety so derive_caps provisions ~1.3x measured
+    # express as cap_safety so the registry cap derivation provisions
+    # ~1.3x the measured need
     ns_per_seed = 49.0  # NS fanout-geometry reference at these stats
     safety = 1.6 * max(per_seed / ns_per_seed, 0.05) * 1.0
     terms = measure_gnn(mesh, sampler=sampler, cap_safety=max(safety, 0.2))

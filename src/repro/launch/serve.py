@@ -27,15 +27,14 @@ def serve_gnn(args):
     import numpy as np
 
     from repro.core import samplers
-    from repro.core.interface import double_caps, pad_seeds
+    from repro.core.interface import pad_seeds
     from repro.graph import paper_dataset
     from repro.models import gnn as gnn_models
+    from repro.optim import adam
     from repro.runtime import checkpoint as ckpt_lib
-    from repro.runtime.trainer import make_fused_infer_step
+    from repro.runtime.engine import TrainEngine
 
     ds = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
-    g = ds.graph
-    feats = jnp.asarray(ds.features)
     labels = np.asarray(ds.labels)
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     n_cls = int(ds.labels.max()) + 1
@@ -49,11 +48,13 @@ def serve_gnn(args):
             params = ckpt_lib.restore(args.ckpt_dir, last,
                                       {"params": params})["params"]
 
-    # the same registry object + overflow protocol as training: double
-    # caps via with_caps and rebuild the fused program (rare, amortized)
+    # the engine's fused infer program from the same registry object +
+    # overflow protocol as training: engine.grow() doubles every cap
+    # and rebuilds (rare, amortized)
     sampler = samplers.from_dataset(args.sampler, ds, batch_size=args.batch,
                                     fanouts=fanouts, safety=2.0)
-    infer = make_fused_infer_step(apply_fn, sampler)
+    engine = TrainEngine(sampler, apply_fn, adam.AdamConfig())
+    data = engine.make_data_from_dataset(ds)
 
     idx = ds.val_idx
     key = jax.random.key(args.seed + 1)
@@ -64,15 +65,14 @@ def serve_gnn(args):
         seeds = pad_seeds(jnp.asarray(chunk), args.batch)
         key, sk = jax.random.split(key)
         t0 = time.perf_counter()
-        logits, ovf = infer(params, g, feats, seeds, sk)
+        logits, ovf = engine.infer(params, data, seeds, sk)
         for _ in range(4):                      # overflow: grow and retry
             if not bool(jnp.any(ovf)):
                 break
-            sampler = sampler.with_caps(double_caps(sampler.caps))
-            infer = make_fused_infer_step(apply_fn, sampler)
-            logits, ovf = infer(params, g, feats, seeds, sk)
+            engine.grow()
+            logits, ovf = engine.infer(params, data, seeds, sk)
         if bool(jnp.any(ovf)):
-            # same contract as sample_with_retry/replay_fused: never
+            # same contract as sample_with_retry/engine replay: never
             # score logits from a cap-truncated neighborhood
             raise RuntimeError("sampling overflow persisted after cap "
                                "doubling while serving")
@@ -89,8 +89,8 @@ def serve_gnn(args):
     nodes_per_sec = (round(timed_nodes / (float(np.sum(lat_ms)) / 1e3), 1)
                      if latencies else None)
     print(json.dumps({
-        "sampler": sampler.name,
-        "exact": sampler.name == "full",
+        "sampler": engine.sampler.name,
+        "exact": engine.sampler.name == "full",
         "requests": args.requests, "batch": args.batch,
         "latency_ms_p50": round(float(np.percentile(lat_ms, 50)), 2),
         "latency_ms_p99": round(float(np.percentile(lat_ms, 99)), 2),

@@ -4,6 +4,10 @@ GNN (the paper's workload):
   PYTHONPATH=src python -m repro.launch.train --workload gnn \
       --dataset products --scale 0.01 --sampler labor-0 --steps 200
   PYTHONPATH=src python -m repro.launch.train --list-samplers
+GNN on the partition-aware distributed engine (docs/distributed.md):
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.train --workload gnn \
+      --mesh-devices 4 --batch-size 512 --steps 50
 LM (any assigned arch, reduced or full):
   PYTHONPATH=src python -m repro.launch.train --workload lm \
       --arch gemma2-2b --reduce --steps 50 --batch 8 --seq 256
@@ -59,6 +63,13 @@ def main():
                     default=True,
                     help="one-program sample+train step with donated "
                          "buffers (--no-fused for the eager baseline)")
+    ap.add_argument("--mesh-devices", type=int, default=0,
+                    help="> 0: run the partition-aware distributed engine "
+                         "over this many devices (set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count on CPU)")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "bf16", "int8"],
+                    help="gradient all-reduce compression (mesh only)")
     # lm
     ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--reduce", action="store_true",
@@ -85,7 +96,9 @@ def main():
             sampler=args.sampler, layer_sizes=layer_sizes,
             batch_size=args.batch_size,
             steps=args.steps, lr=args.lr, ckpt_dir=args.ckpt_dir,
-            seed=args.seed, fused=args.fused)
+            seed=args.seed, fused=args.fused,
+            mesh_devices=args.mesh_devices,
+            grad_compression=args.grad_compression)
         out = train_gnn(ds, cfg)
         val = evaluate_gnn(ds, out["params"], cfg, ds.val_idx)
         h = out["history"]

@@ -45,6 +45,19 @@ def gcn_init(key, in_dim: int, hidden: int, out_dim: int, num_layers: int = 3):
     return {"layers": layers}
 
 
+def gcn_layer(p, blk: SampledLayer, h: jax.Array, *, is_last: bool,
+              use_kernel: bool = False) -> jax.Array:
+    """One GCN layer over one sampled block: h over ``blk.next_seeds``
+    in, h over ``blk.seeds`` out. The per-layer granularity is what the
+    distributed engine interleaves with cross-partition hidden-state
+    exchanges; the whole-batch ``gcn_apply`` chains the same function."""
+    agg = B.aggregate(blk, h, use_kernel=use_kernel)          # (S, F_in)
+    z = agg @ p["w"] + p["b"]
+    res = h[: blk.seed_cap] @ p["wr"]                          # seeds prefix
+    h = z + res
+    return h if is_last else jax.nn.relu(h)
+
+
 def gcn_apply(params, blks: Sequence[SampledLayer], feats: jax.Array,
               use_kernel: bool = False) -> jax.Array:
     """feats: features of blocks[-1].next_seeds. Returns logits for
@@ -53,13 +66,8 @@ def gcn_apply(params, blks: Sequence[SampledLayer], feats: jax.Array,
     n_layers = len(params["layers"])
     assert n_layers == len(blks)
     for l, blk in enumerate(reversed(blks)):
-        p = params["layers"][l]
-        agg = B.aggregate(blk, h, use_kernel=use_kernel)      # (S, F_in)
-        z = agg @ p["w"] + p["b"]
-        res = h[: blk.seed_cap] @ p["wr"]                      # seeds prefix
-        h = z + res
-        if l < n_layers - 1:
-            h = jax.nn.relu(h)
+        h = gcn_layer(params["layers"][l], blk, h,
+                      is_last=l == n_layers - 1, use_kernel=use_kernel)
     return h
 
 
@@ -79,16 +87,21 @@ def sage_init(key, in_dim: int, hidden: int, out_dim: int, num_layers: int = 3):
     return {"layers": layers}
 
 
+def sage_layer(p, blk: SampledLayer, h: jax.Array, *, is_last: bool,
+               use_kernel: bool = False) -> jax.Array:
+    agg = B.aggregate(blk, h, use_kernel=use_kernel)
+    self_h = h[: blk.seed_cap]
+    z = jnp.concatenate([self_h, agg], axis=-1) @ p["w"] + p["b"]
+    return z if is_last else jax.nn.relu(z)
+
+
 def sage_apply(params, blks: Sequence[SampledLayer], feats: jax.Array,
                use_kernel: bool = False) -> jax.Array:
     h = feats
     n_layers = len(params["layers"])
     for l, blk in enumerate(reversed(blks)):
-        p = params["layers"][l]
-        agg = B.aggregate(blk, h, use_kernel=use_kernel)
-        self_h = h[: blk.seed_cap]
-        z = jnp.concatenate([self_h, agg], axis=-1) @ p["w"] + p["b"]
-        h = jax.nn.relu(z) if l < n_layers - 1 else z
+        h = sage_layer(params["layers"][l], blk, h,
+                       is_last=l == n_layers - 1, use_kernel=use_kernel)
     return h
 
 
@@ -115,32 +128,38 @@ def gatv2_init(key, in_dim: int, hidden: int, out_dim: int,
     return {"layers": layers}
 
 
+def gatv2_layer(p, blk: SampledLayer, h: jax.Array, *, is_last: bool,
+                use_kernel: bool = False) -> jax.Array:
+    del use_kernel                         # attention path has no kernel
+    H, Ph = p["attn"].shape                # head structure from the params
+    S = blk.seed_cap
+    hs = (h[:S] @ p["ws"]).reshape(S, H, Ph)
+    ht = (h @ p["wt"]).reshape(-1, H, Ph)
+    src = jnp.where(blk.edge_mask, blk.src_slot, 0)
+    dst = jnp.where(blk.edge_mask, blk.dst_slot, 0)
+    e = jax.nn.leaky_relu(hs[dst] + ht[src], 0.2)               # (E,H,Ph)
+    logit = jnp.einsum("ehp,hp->eh", e, p["attn"])
+    logit = jnp.where(blk.edge_mask[:, None], logit, -1e30)
+    # segment softmax over incoming edges of each dst
+    seg = jnp.where(blk.edge_mask, dst, S)
+    mx = jax.ops.segment_max(logit, seg, num_segments=S + 1)[:-1]
+    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    ex = jnp.where(blk.edge_mask[:, None], jnp.exp(logit - mx[dst]), 0.0)
+    den = jax.ops.segment_sum(ex, seg, num_segments=S + 1)[:-1]
+    alpha = ex / jnp.maximum(den[dst], 1e-9)
+    msg = ht[src] * alpha[..., None]                             # (E,H,Ph)
+    out = jax.ops.segment_sum(msg.reshape(-1, H * Ph), seg,
+                              num_segments=S + 1)[:-1]
+    out = out + p["b"]
+    return out if is_last else jax.nn.elu(out)
+
+
 def gatv2_apply(params, blks: Sequence[SampledLayer], feats: jax.Array) -> jax.Array:
     h = feats
     n_layers = len(params["layers"])
     for l, blk in enumerate(reversed(blks)):
-        p = params["layers"][l]
-        H, Ph = p["attn"].shape            # head structure from the params
-        S = blk.seed_cap
-        hs = (h[:S] @ p["ws"]).reshape(S, H, Ph)
-        ht = (h @ p["wt"]).reshape(-1, H, Ph)
-        src = jnp.where(blk.edge_mask, blk.src_slot, 0)
-        dst = jnp.where(blk.edge_mask, blk.dst_slot, 0)
-        e = jax.nn.leaky_relu(hs[dst] + ht[src], 0.2)           # (E,H,Ph)
-        logit = jnp.einsum("ehp,hp->eh", e, p["attn"])
-        logit = jnp.where(blk.edge_mask[:, None], logit, -1e30)
-        # segment softmax over incoming edges of each dst
-        seg = jnp.where(blk.edge_mask, dst, S)
-        mx = jax.ops.segment_max(logit, seg, num_segments=S + 1)[:-1]
-        mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
-        ex = jnp.where(blk.edge_mask[:, None], jnp.exp(logit - mx[dst]), 0.0)
-        den = jax.ops.segment_sum(ex, seg, num_segments=S + 1)[:-1]
-        alpha = ex / jnp.maximum(den[dst], 1e-9)
-        msg = ht[src] * alpha[..., None]                         # (E,H,Ph)
-        out = jax.ops.segment_sum(msg.reshape(-1, H * Ph), seg,
-                                  num_segments=S + 1)[:-1]
-        out = out + p["b"]
-        h = jax.nn.elu(out) if l < n_layers - 1 else out
+        h = gatv2_layer(params["layers"][l], blk, h,
+                        is_last=l == n_layers - 1)
     return h
 
 
@@ -148,4 +167,14 @@ MODELS = {
     "gcn": (gcn_init, gcn_apply),
     "sage": (sage_init, sage_apply),
     "gatv2": (gatv2_init, gatv2_apply),
+}
+
+# per-layer view of each model's apply, keyed by the apply fn itself —
+# the distributed engine interleaves these with hidden-state exchanges
+# (h crosses partitions between layers, so the whole-batch apply cannot
+# run as one local call there)
+LAYER_FNS = {
+    gcn_apply: gcn_layer,
+    sage_apply: sage_layer,
+    gatv2_apply: gatv2_layer,
 }

@@ -138,3 +138,80 @@ def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
 def read_meta(ckpt_dir: str, step: int) -> dict:
     with open(os.path.join(ckpt_dir, f"step_{step:010d}", "meta.json")) as f:
         return json.load(f)
+
+
+def engine_restore_meta(sampler, mesh_devices: int = 0,
+                        grad_compression: str = "none") -> dict:
+    """JSON-serializable record of the jit specialization a training run
+    is using: the full SamplerSpec (name, budgets, LayerCaps — which may
+    have grown through overflow replay — salt schedule, per-peer
+    all-to-all caps) plus the mesh/partition shape and the gradient-
+    compression mode (whose error-feedback state rides in the
+    checkpoint tree). Stored in every checkpoint's meta.json so restore
+    can rebuild the identical program.
+    """
+    spec = sampler.spec
+    return {
+        "sampler": {
+            "name": spec.name,
+            "budgets": list(spec.budgets),
+            "caps": [[c.expand_cap, c.edge_cap, c.vertex_cap]
+                     for c in spec.caps],
+            "shared_salts": bool(spec.shared_salts),
+            "peer_caps": (None if spec.peer_caps is None
+                          else list(spec.peer_caps)),
+        },
+        "mesh_devices": int(mesh_devices),
+        "grad_compression": grad_compression,
+    }
+
+
+def validate_restore_meta(meta: dict, sampler, mesh_devices: int = 0,
+                          grad_compression: str = "none"):
+    """Check a checkpoint's engine metadata against the current run and
+    return the sampler re-capped to the checkpoint's schedule.
+
+    The sampling MATH (registry name, budgets, salt schedule) and the
+    mesh/partition shape must match exactly — silently resuming a
+    labor-0 run with ns, or a 4-partition run on 8, would corrupt the
+    trajectory, so mismatches raise. The cap schedules (LayerCaps +
+    peer_caps) are restored FROM the checkpoint: they may have grown via
+    overflow replay, and re-adopting them reproduces the exact jit
+    specialization instead of re-discovering every overflow.
+
+    Checkpoints predating this metadata (no "sampler" key) pass through
+    unchanged.
+    """
+    from repro.core.interface import LayerCaps
+
+    rec = meta.get("sampler")
+    if rec is None:
+        return sampler
+    spec = sampler.spec
+    problems = []
+    if rec["name"] != spec.name:
+        problems.append(f"sampler {rec['name']!r} != current {spec.name!r}")
+    if tuple(rec["budgets"]) != tuple(spec.budgets):
+        problems.append(f"budgets {rec['budgets']} != current "
+                        f"{list(spec.budgets)}")
+    if bool(rec["shared_salts"]) != bool(spec.shared_salts):
+        problems.append("salt schedule (shared_salts) differs")
+    ckpt_mesh = int(meta.get("mesh_devices", 0))
+    if ckpt_mesh != int(mesh_devices):
+        problems.append(f"mesh/partition shape {ckpt_mesh} devices != "
+                        f"current {int(mesh_devices)}")
+    ckpt_comp = meta.get("grad_compression", "none")
+    if ckpt_comp != grad_compression:
+        problems.append(f"gradient compression {ckpt_comp!r} != current "
+                        f"{grad_compression!r} (error-feedback state "
+                        "would be inconsistent)")
+    if problems:
+        raise ValueError(
+            "checkpoint was trained under a different engine "
+            "specialization — refusing to resume:\n  "
+            + "\n  ".join(problems))
+    caps = tuple(LayerCaps(*c) for c in rec["caps"])
+    peer = None if rec["peer_caps"] is None else tuple(rec["peer_caps"])
+    import dataclasses as _dc
+    return _dc.replace(sampler,
+                       spec=_dc.replace(spec, caps=caps, peer_caps=peer))

@@ -1,0 +1,649 @@
+"""One training engine: the fused sample→gather→fwd/bwd→optimizer step,
+assembled once and shared by single-host training, the partitioned
+multi-device path, and serving.
+
+:class:`TrainEngine` is the only place a GNN train/infer step is built.
+Constructed from ``(sampler, model_apply, optimizer, mesh | None)``:
+
+* ``mesh=None`` lowers to exactly the single-device one-program step of
+  docs/pipeline.md — multi-layer sampling, feature gather, fwd/bwd and
+  the Adam update in one jitted XLA program with donated buffers and the
+  async (gated-update) overflow protocol.
+
+* on a mesh the same iteration runs under ONE ``shard_map`` over the
+  destination-owned modulo partitioning of ``repro.graph.partition``:
+
+    1. **Seed routing.** Each layer's frontier is routed to the owner of
+       each vertex (``v % P``) with a fixed-capacity all-to-all and
+       deduplicated there — so every vertex is sampled exactly once,
+       partition-locally, against the partitioned CSR. No device holds
+       the global topology.
+    2. **Partition-local LABOR.** ``Sampler.sample_layer_partitioned``
+       runs the registry sampler on the owner's local CSR with GLOBAL
+       vertex ids: the stateless hash r_t is a function of the global
+       id, so LABOR's cross-seed correlation — the paper's
+       vertex-efficiency — holds across partitions with zero extra
+       communication, and the union of the per-partition sampled sets is
+       bit-identical to the single-device trace. Batch-global state
+       (importance pi, LADIES column norms) is completed with one
+       pmax/psum per iteration.
+    3. **Feature / hidden exchange.** Input features come from the
+       modulo-partitioned feature array via
+       ``distributed.feature_exchange.exchange_features``; between GNN
+       layers the hidden states cross partitions through the same
+       fixed-capacity all-to-all (owners scatter their outputs into an
+       owned-row buffer, consumers fetch by global id).
+    4. **Gradient all-reduce.** Per-partition gradients are mean-reduced
+       (optionally bf16/int8-compressed with error feedback) and the
+       replicated Adam update is applied identically everywhere.
+
+  Every static cap in the distributed step — LayerCaps AND the per-peer
+  all-to-all caps (``SamplerSpec.peer_caps``) — comes from the sampler
+  registry, and every overflow (sampling, seed routing, feature or
+  hidden exchange) feeds the same stacked flag vector, so one protocol
+  covers them all: the update is gated on device, the engine-owned
+  ledger polls the flags one step late, and the batch is replayed with
+  ``Sampler.doubled`` caps.
+
+The paper connection: LABOR's ~7x reduction in sampled vertices
+(Table 2) multiplies directly into the bytes of every one of these
+all-to-alls — the collective that dominates distributed GNN training.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P_
+
+from repro.core.interface import Sampler, overflow_flags, sampled_counts
+from repro.data.gnn_loader import LoaderStats, OverflowLedger
+from repro.distributed import compression as comp
+from repro.distributed.feature_exchange import (exchange_features,
+                                                request_layout)
+from repro.graph.csr import Graph
+from repro.graph.partition import partition_features, partition_graph
+from repro.models import gnn as gnn_models
+from repro.optim import adam
+
+
+def gather_feats(features: jax.Array, block) -> jax.Array:
+    """Single-host feature gather: rows of the replicated feature matrix
+    for a block's ``next_seeds`` (-1 padding fetches zeros)."""
+    idx = jnp.where(block.next_seeds >= 0, block.next_seeds, 0)
+    return features[idx] * (block.next_seeds >= 0)[:, None].astype(features.dtype)
+
+
+def gnn_loss_fn(apply_fn, params, blocks, feats, labels, use_kernel):
+    """Masked mean NLL + accuracy over a sampled block list."""
+    if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
+        logits = apply_fn(params, blocks, feats, use_kernel=use_kernel)
+    else:
+        logits = apply_fn(params, blocks, feats)
+    valid = blocks[0].seeds >= 0
+    safe = jnp.where(valid, labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
+    nll = jnp.where(valid, lse - gold, 0.0)
+    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
+    acc = jnp.sum((jnp.argmax(logits, -1) == safe) & valid) / jnp.maximum(
+        jnp.sum(valid), 1)
+    return loss, acc
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EngineData:
+    """Step-invariant device inputs, prepared once by
+    :meth:`TrainEngine.make_data`.
+
+    Single-host: ``graph`` is the replicated CSR, ``features``/``labels``
+    the full [V, F]/[V] arrays. Distributed: ``indptr``/``indices`` are
+    the stacked per-partition CSR ([P, max_local_v + 1]/[P, max_local_e],
+    sharded one row per device), ``features``/``labels`` the modulo-
+    partitioned rows ([P * per, F]/[P * per], owner ``v % P`` holding row
+    ``v // P``); ``graph`` is None — no replicated topology exists.
+    """
+    graph: Optional[Graph]
+    indptr: Optional[jax.Array]
+    indices: Optional[jax.Array]
+    features: jax.Array
+    labels: jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EngineState:
+    """Optimizer state plus the gradient-compression error feedback
+    (``err`` is None when compression is off)."""
+    opt: Any
+    err: Any
+
+
+def _flat_axis_index(mesh, axes):
+    """This device's position along the flattened mesh axes (= its
+    partition id), inside shard_map."""
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * mesh.shape[a] + jax.lax.axis_index(a)
+    return idx
+
+
+def _route_to_owners(ids: jax.Array, num_parts: int, per_peer_cap: int,
+                     axis_name, owned_cap: int, v_local: int,
+                     my_part: jax.Array):
+    """Send each padded global id (-1 pad) to its owner (``v % P``) via a
+    fixed-capacity all-to-all and deduplicate there.
+
+    Returns (owned ids int32[owned_cap] — global ids, sorted by local
+    row, -1 pad; owned local rows int32[owned_cap]; owned count int32[];
+    overflow bool[] — send-side per-peer cap or receive-side dedup
+    buffer exceeded, local to this device).
+    """
+    # send side: the same owner-grouping layout as the feature fetch
+    # (request_layout already speaks the modulo convention, and its
+    # local-row payload IS the id in the owner's space)
+    req_rows, _, send_ovf = request_layout(ids, num_parts, per_peer_cap,
+                                           v_local, owner_mode="mod")
+    incoming = jax.lax.all_to_all(
+        req_rows[None], axis_name, split_axis=1, concat_axis=0,
+        tiled=False)[:, 0].reshape(-1)
+    # dedup via dense membership over this partition's owned rows; the
+    # nonzero scan yields owned seeds sorted by local row — an order
+    # that, unlike arrival order, is deterministic across replays
+    rows_in = jnp.where(incoming >= 0, incoming, v_local)
+    member = jnp.zeros((v_local,), jnp.bool_).at[rows_in].set(
+        True, mode="drop")
+    num_owned = jnp.sum(member.astype(jnp.int32))
+    local_rows = jnp.nonzero(member, size=owned_cap, fill_value=-1)[0].astype(
+        jnp.int32)
+    owned = jnp.where(local_rows >= 0,
+                      local_rows * num_parts + my_part, -1).astype(jnp.int32)
+    ovf = send_ovf | (num_owned > owned_cap)
+    return owned, jnp.where(local_rows >= 0, local_rows, 0), num_owned, ovf
+
+
+def _scatter_owned_rows(rows: jax.Array, valid: jax.Array, values: jax.Array,
+                        v_local: int) -> jax.Array:
+    """Scatter per-seed values into a dense (v_local, F) owned-row buffer
+    (the response table of a subsequent modulo all-to-all fetch)."""
+    rows_eff = jnp.where(valid, rows, v_local)  # invalid -> dropped (OOB)
+    out = jnp.zeros((v_local, values.shape[-1]), values.dtype)
+    return out.at[rows_eff].set(values, mode="drop")
+
+
+class TrainEngine:
+    """The one train/infer step builder (see module docstring).
+
+    Usage::
+
+        eng = TrainEngine(sampler, apply_fn, opt_cfg, mesh=mesh_or_None)
+        data = eng.make_data(graph, features, labels)
+        state = eng.init_state(params)
+        for seeds in batches:
+            params, state, m = eng.step(params, state, data, seeds, key)
+        params, state, _ = eng.flush(params, state, data)  # drain ledger
+
+    ``step`` owns the async overflow protocol end to end: it dispatches
+    the fused program, records the device-resident overflow flags in the
+    engine's ledger, polls the PREVIOUS batch's flags (already retired —
+    free), and replays an overflowed batch with ``Sampler.doubled`` caps
+    — sampling-cap and all-to-all-cap overflow alike. Replay metrics
+    are appended to :attr:`replayed` as ``(tag, metrics)`` for callers
+    that keep step-indexed histories.
+
+    On a mesh the sampler must carry ``spec.peer_caps`` (build it with
+    ``samplers.from_graph_stats(..., num_parts=P)`` and the DEVICE-LOCAL
+    batch size); ``model_apply`` must be a registered per-layer model
+    (``repro.models.gnn.LAYER_FNS``).
+    """
+
+    def __init__(self, sampler: Sampler, model_apply: Callable,
+                 opt_cfg: adam.AdamConfig, mesh=None, *,
+                 use_kernel: bool = False, grad_compression: str = "none",
+                 max_replay_retries: int = 3,
+                 stats: Optional[LoaderStats] = None):
+        self.sampler = sampler
+        self.model_apply = model_apply
+        self.opt_cfg = opt_cfg
+        self.mesh = mesh
+        self.use_kernel = use_kernel
+        self.comp_cfg = comp.CompressionConfig(grad_compression)
+        self.max_replay_retries = max_replay_retries
+        self.stats = stats or LoaderStats()
+        self.replayed: List[Tuple[Any, Dict[str, Any]]] = []
+        self._ledger = OverflowLedger(self.stats)
+        self._step = None
+        self._infer = None
+        if mesh is not None:
+            self.axes = tuple(mesh.axis_names)
+            self.num_parts = 1
+            for a in self.axes:
+                self.num_parts *= mesh.shape[a]
+            self._layer_fn = gnn_models.LAYER_FNS.get(model_apply)
+            if self._layer_fn is None:
+                raise ValueError(
+                    "distributed engine needs a per-layer model "
+                    "(repro.models.gnn.LAYER_FNS); got "
+                    f"{getattr(model_apply, '__name__', model_apply)!r}")
+            if sampler.spec.peer_caps is None:
+                raise ValueError(
+                    f"sampler {sampler.name!r} has no per-peer all-to-all "
+                    "caps; build it with samplers.from_graph_stats(..., "
+                    f"num_parts={self.num_parts}) for the distributed "
+                    "engine")
+        else:
+            self.axes = None
+            self.num_parts = 1
+
+    # ------------------------------------------------------------------
+    # state / data preparation
+    # ------------------------------------------------------------------
+
+    def init_state(self, params) -> EngineState:
+        return EngineState(opt=adam.init_state(params, self.opt_cfg),
+                           err=comp.init_error_state(params, self.comp_cfg))
+
+    def make_data(self, graph: Graph, features, labels) -> EngineData:
+        """Stage the step-invariant inputs on device: replicated arrays
+        on a single host, owner-partitioned (graph CSR, feature rows,
+        label rows — all modulo ``v % P``) on a mesh."""
+        if self.mesh is None:
+            return EngineData(graph=graph, indptr=None, indices=None,
+                              features=jnp.asarray(features),
+                              labels=jnp.asarray(labels))
+        if graph.weights is not None:
+            raise NotImplementedError(
+                "the partitioned engine does not thread edge weights yet")
+        P = self.num_parts
+        pg = partition_graph(graph, P)
+        per = -(-graph.num_vertices // P)
+        feats = np.asarray(features)
+        pf = partition_features(feats, P).reshape(P * per, feats.shape[1])
+        lab = np.asarray(labels)
+        pl = np.zeros((P, per), lab.dtype)
+        for p in range(P):
+            rows = np.arange(p, graph.num_vertices, P)
+            pl[p, : rows.size] = lab[rows]
+        ax = self._ax_spec()
+        row_sh = NamedSharding(self.mesh, P_(ax, None))
+        vec_sh = NamedSharding(self.mesh, P_(ax))
+        return EngineData(
+            graph=None,
+            indptr=jax.device_put(jnp.asarray(pg.indptr), row_sh),
+            indices=jax.device_put(jnp.asarray(pg.indices), row_sh),
+            features=jax.device_put(jnp.asarray(pf), row_sh),
+            labels=jax.device_put(jnp.asarray(pl.reshape(-1)), vec_sh),
+        )
+
+    def make_data_from_dataset(self, ds) -> EngineData:
+        return self.make_data(ds.graph, ds.features, ds.labels)
+
+    def _ax_spec(self):
+        return self.axes if len(self.axes) > 1 else self.axes[0]
+
+    # ------------------------------------------------------------------
+    # step construction
+    # ------------------------------------------------------------------
+
+    @property
+    def step_fn(self):
+        """The raw fused train step (one jit specialization per cap
+        schedule). Single-host signature — unchanged from the original
+        fused trainer:
+
+            step(params, opt_state, graph, features, labels_all, seeds,
+                 key) -> (params, opt_state, metrics)
+
+        distributed signature (donated params/opt/err; all-to-all caps
+        live on the sampler spec):
+
+            step(params, opt_state, err, indptr, indices, features,
+                 labels, seeds, key) -> (params, opt_state, err, metrics)
+        """
+        if self._step is None:
+            self._step = (self._build_single_train() if self.mesh is None
+                          else self._build_distributed(train=True))
+        return self._step
+
+    @property
+    def infer_fn(self):
+        """Fused sample + gather + forward, from the same sampler object.
+
+        Single-host: ``infer(params, graph, features, seeds, key) ->
+        (logits, overflow_flags)`` — exact with the ``full`` registry
+        entry, sampled otherwise. Distributed: ``infer(params, indptr,
+        indices, features, seeds, key) -> (owned_seeds, logits, flags)``
+        where row i of ``logits`` answers global vertex
+        ``owned_seeds[i]`` (each device returns its owned share of the
+        batch).
+        """
+        if self._infer is None:
+            self._infer = (self._build_single_infer() if self.mesh is None
+                           else self._build_distributed(train=False))
+        return self._infer
+
+    def _build_single_train(self):
+        sampler, apply_fn = self.sampler, self.model_apply
+        opt_cfg, use_kernel = self.opt_cfg, self.use_kernel
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def step(params, opt_state, graph, features, labels_all, seeds, key):
+            blocks = sampler.sample(graph, seeds, sampler.spec.salts(key))
+            feats = gather_feats(features, blocks[-1])
+            labels = labels_all[jnp.where(seeds >= 0, seeds, 0)]
+            (loss, acc), grads = jax.value_and_grad(
+                lambda p: gnn_loss_fn(apply_fn, p, blocks, feats, labels,
+                                      use_kernel),
+                has_aux=True,
+            )(params)
+            new_params, new_opt, m = adam.apply_updates(params, grads,
+                                                        opt_state, opt_cfg)
+            ovf = overflow_flags(blocks)
+            any_ovf = jnp.any(ovf)
+            gate = lambda new, old: jnp.where(any_ovf, old, new)
+            params_out = jax.tree.map(gate, new_params, params)
+            opt_out = jax.tree.map(gate, new_opt, opt_state)
+            m.update(loss=loss, acc=acc, overflow=ovf,
+                     **sampled_counts(blocks))
+            return params_out, opt_out, m
+
+        return step
+
+    def _build_single_infer(self):
+        sampler, apply_fn = self.sampler, self.model_apply
+        use_kernel = self.use_kernel
+
+        @jax.jit
+        def infer(params, graph, features, seeds, key):
+            blocks = sampler.sample(graph, seeds, sampler.spec.salts(key))
+            feats = gather_feats(features, blocks[-1])
+            if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
+                logits = apply_fn(params, blocks, feats, use_kernel=use_kernel)
+            else:
+                logits = apply_fn(params, blocks, feats)
+            return logits, overflow_flags(blocks)
+
+        return infer
+
+    # ------------------------------------------------------------------
+    # the partition-aware distributed program
+    # ------------------------------------------------------------------
+
+    def _build_distributed(self, train: bool):
+        mesh, axes, P = self.mesh, self.axes, self.num_parts
+        sampler, layer_fn = self.sampler, self._layer_fn
+        opt_cfg, comp_cfg, use_kernel = (self.opt_cfg, self.comp_cfg,
+                                         self.use_kernel)
+        spec = sampler.spec
+        L = spec.num_layers
+        caps = spec.caps
+        peer = spec.peer_caps
+        # owner-side seed buffers: bounded by what the all-to-all can
+        # deliver, kept under the layer's vertex buffer so next_seeds
+        # retains headroom for newly sampled vertices (both double
+        # together on overflow replay)
+        owned_caps = [min(P * peer[l], max(caps[l].vertex_cap // 2, 8))
+                      for l in range(L)]
+        deep_cap = min(P * peer[L], caps[-1].vertex_cap)
+
+        def body(params, opt_state, err, indptr, indices, features, labels,
+                 seeds, salts):
+            graph_l = Graph(indptr=indptr[0], indices=indices[0])
+            v_local = features.shape[0]
+            my_part = _flat_axis_index(mesh, axes)
+
+            # ---- per-layer: route frontier to owners, sample locally
+            blocks, owned_rows, route_ovf, frontiers = [], [], [], []
+            frontier = seeds
+            for l in range(L):
+                owned, rows, _, r_ovf = _route_to_owners(
+                    frontier, P, peer[l], axes, owned_caps[l], v_local,
+                    my_part)
+                blk = sampler.sample_layer_partitioned(
+                    graph_l, owned, salts[l], l, seed_rows=rows,
+                    num_vertices=P * v_local, axis_name=axes)
+                blocks.append(blk)
+                owned_rows.append(rows)
+                route_ovf.append(r_ovf)
+                frontiers.append(owned)
+                frontier = blk.next_seeds
+            if train:
+                # the deepest frontier, deduplicated at its owners:
+                # |V^L| is the union's size (the paper's headline
+                # metric) and the set the engine-parity tests compare
+                # bit-exactly. Train-only: serving has no use for the
+                # extra all-to-all
+                deep_owned, _, deep_n, deep_ovf = _route_to_owners(
+                    frontier, P, peer[L], axes, deep_cap, v_local, my_part)
+                frontiers.append(deep_owned)
+                route_ovf.append(deep_ovf)
+
+            # ---- input features: the all-to-all LABOR shrinks
+            feats_in, f_ovf = exchange_features(
+                features, blocks[-1].next_seeds, axes, peer[L],
+                owner_mode="mod")
+
+            valid0 = blocks[0].seeds >= 0
+            labels_own = labels[jnp.where(valid0, owned_rows[0], 0)]
+            total_valid = jax.lax.psum(jnp.sum(valid0.astype(jnp.int32)),
+                                       axes)
+
+            def forward(p, h):
+                h_ovfs = []
+                for b in range(L - 1, -1, -1):
+                    h = layer_fn(p["layers"][L - 1 - b], blocks[b], h,
+                                 is_last=b == 0, use_kernel=use_kernel)
+                    if b > 0:
+                        dense = _scatter_owned_rows(
+                            owned_rows[b], blocks[b].seeds >= 0, h, v_local)
+                        h, ovf_h = exchange_features(
+                            dense, blocks[b - 1].next_seeds, axes, peer[b],
+                            owner_mode="mod")
+                        h_ovfs.append(ovf_h)
+                return h, h_ovfs
+
+            def collect_flags(h_ovfs):
+                flags = jnp.concatenate([
+                    overflow_flags(blocks),
+                    jnp.stack(route_ovf),
+                    jnp.stack([f_ovf] + h_ovfs) if h_ovfs
+                    else f_ovf[None],
+                ])
+                return jax.lax.pmax(flags.astype(jnp.int32), axes) > 0
+
+            if not train:
+                logits, h_ovfs = forward(params, feats_in)
+                return blocks[0].seeds, logits, collect_flags(h_ovfs)
+
+            def loss_fn(p):
+                logits, h_ovfs = forward(p, feats_in)
+                safe = jnp.where(valid0, labels_own, 0)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(logits, safe[:, None],
+                                           axis=-1)[:, 0]
+                nll = jnp.where(valid0, lse - gold, 0.0)
+                # x P so the pmean of per-device grads below equals the
+                # gradient of the batch-global mean NLL
+                local = jnp.sum(nll) * P / jnp.maximum(total_valid, 1)
+                correct = jnp.sum((jnp.argmax(logits, -1) == safe) & valid0)
+                return local, (correct, h_ovfs)
+
+            (local_loss, (correct, h_ovfs)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            grads, new_err = comp.compressed_mean(grads, err, comp_cfg, axes)
+            new_params, new_opt, m = adam.apply_updates(params, grads,
+                                                        opt_state, opt_cfg)
+
+            ovf = collect_flags(h_ovfs)
+            any_ovf = jnp.any(ovf)
+            gate = lambda new, old: jnp.where(any_ovf, old, new)
+            params_out = jax.tree.map(gate, new_params, params)
+            opt_out = jax.tree.map(gate, new_opt, opt_state)
+            err_out = jax.tree.map(gate, new_err, err)
+            m.update(
+                loss=jax.lax.pmean(local_loss, axes),
+                acc=jax.lax.psum(correct, axes)
+                / jnp.maximum(total_valid, 1),
+                overflow=ovf,
+                sampled_v=jax.lax.psum(deep_n, axes),
+                sampled_e=jax.lax.psum(sum(b.num_edges for b in blocks),
+                                       axes),
+            )
+            return params_out, opt_out, err_out, m, tuple(frontiers)
+
+        rep = P_()
+        ax = self._ax_spec()
+        front_specs = tuple(P_(ax) for _ in range(L + 1))
+        if train:
+            in_specs = (rep, rep, rep, P_(ax, None), P_(ax, None),
+                        P_(ax, None), P_(ax), P_(ax), rep)
+            out_specs = (rep, rep, rep, rep, front_specs)
+        else:
+            in_specs = (rep, P_(ax, None), P_(ax, None), P_(ax, None),
+                        P_(ax), rep)
+            out_specs = (P_(ax), P_(ax, None), rep)
+
+        if train:
+            @partial(jax.jit, donate_argnums=(0, 1, 2))
+            def step(params, opt_state, err, indptr, indices, features,
+                     labels, seeds, key):
+                salts = spec.salts(key)
+                sharded = shard_map(
+                    body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=False)
+                p, o, e, m, fronts = sharded(params, opt_state, err, indptr,
+                                             indices, features, labels,
+                                             seeds, salts)
+                m["frontiers"] = fronts
+                return p, o, e, m
+
+            return step
+
+        def infer_body(params, indptr, indices, features, seeds, salts):
+            return body(params, None, None, indptr, indices, features,
+                        jnp.zeros((features.shape[0],), jnp.int32), seeds,
+                        salts)
+
+        @jax.jit
+        def infer(params, indptr, indices, features, seeds, key):
+            salts = spec.salts(key)
+            return shard_map(
+                infer_body, mesh=mesh, in_specs=in_specs,
+                out_specs=out_specs, check_rep=False)(
+                params, indptr, indices, features, seeds, salts)
+
+        return infer
+
+    # ------------------------------------------------------------------
+    # dispatch + the engine-owned async overflow/replay protocol
+    # ------------------------------------------------------------------
+
+    def _dispatch(self, params, state: EngineState, data: EngineData, seeds,
+                  key):
+        if self.mesh is None:
+            params, opt, m = self.step_fn(params, state.opt, data.graph,
+                                          data.features, data.labels, seeds,
+                                          key)
+            return params, EngineState(opt=opt, err=state.err), m
+        if seeds.shape[0] % self.num_parts:
+            raise ValueError(
+                f"global seed batch {seeds.shape[0]} must divide over "
+                f"{self.num_parts} devices (pad with pad_seeds)")
+        params, opt, err, m = self.step_fn(params, state.opt, state.err,
+                                           data.indptr, data.indices,
+                                           data.features, data.labels,
+                                           seeds, key)
+        return params, EngineState(opt=opt, err=err), m
+
+    def grow(self):
+        """Double every static cap (LayerCaps + per-peer all-to-all) and
+        invalidate the compiled steps — the logarithmic overflow-retry
+        schedule."""
+        self.sampler = self.sampler.doubled()
+        self._step = None
+        self._infer = None
+
+    def step(self, params, state: EngineState, data: EngineData, seeds, key,
+             tag: Any = None):
+        """One fused train step with the async overflow protocol: the
+        update is gated on device; the PREVIOUS batch's flags are polled
+        (free — its program has retired) and an overflowed batch is
+        replayed with doubled caps. Returns (params, state, metrics) of
+        THIS batch; replay metrics land in :attr:`replayed`."""
+        params, state, m = self._dispatch(params, state, data, seeds, key)
+        due = self._ledger.record((seeds, key, tag, self.sampler),
+                                  m["overflow"])
+        if due is not None:
+            params, state, _ = self._replay(params, state, data, *due)
+        return params, state, m
+
+    def flush(self, params, state: EngineState, data: EngineData):
+        """Resolve the last in-flight batch (end of training, or before
+        persisting a checkpoint: a gated no-op batch must be replayed
+        before its params are saved). Returns (params, state, metrics of
+        the replayed batch or None)."""
+        due = self._ledger.flush()
+        if due is None:
+            return params, state, None
+        return self._replay(params, state, data, *due)
+
+    def _replay(self, params, state, data, seeds, key, tag, sampler_then):
+        for _ in range(self.max_replay_retries + 1):
+            if self.sampler is sampler_then:
+                self.stats.overflow_retries += 1
+                self.grow()
+            params, state, m = self._dispatch(params, state, data, seeds,
+                                              key)
+            self.replayed.append((tag, m))
+            if not bool(jnp.any(m["overflow"])):
+                return params, state, m
+            sampler_then = self.sampler
+        raise RuntimeError("sampling overflow persisted after cap doubling")
+
+    def infer(self, params, data: EngineData, seeds, key):
+        """Fused inference through the engine (see :attr:`infer_fn`)."""
+        if self.mesh is None:
+            return self.infer_fn(params, data.graph, data.features, seeds,
+                                 key)
+        return self.infer_fn(params, data.indptr, data.indices,
+                             data.features, seeds, key)
+
+    # ------------------------------------------------------------------
+    # AOT lowering support (launch/perf.py roofline accounting)
+    # ------------------------------------------------------------------
+
+    def abstract_inputs(self, *, global_batch: int, num_vertices: int,
+                        num_edges: int, feature_dim: int,
+                        edge_balance: float = 1.5) -> Dict[str, Any]:
+        """ShapeDtypeStructs (with NamedShardings) for lowering the
+        distributed step without materializing a graph: partition shapes
+        are derived analytically (owned rows = ceil(V/P); owned edges =
+        E/P with an imbalance allowance)."""
+        if self.mesh is None:
+            raise ValueError("abstract_inputs is for the distributed engine")
+        P = self.num_parts
+        per = -(-num_vertices // P)
+        max_e = int(num_edges / P * edge_balance) + 64
+        ax = self._ax_spec()
+        row = lambda shape: jax.ShapeDtypeStruct(
+            shape, jnp.int32, sharding=NamedSharding(self.mesh, P_(ax, None)))
+        return dict(
+            indptr=row((P, per + 1)),
+            indices=row((P, max_e)),
+            features=jax.ShapeDtypeStruct(
+                (P * per, feature_dim), jnp.float32,
+                sharding=NamedSharding(self.mesh, P_(ax, None))),
+            labels=jax.ShapeDtypeStruct(
+                (P * per,), jnp.int32,
+                sharding=NamedSharding(self.mesh, P_(ax))),
+            seeds=jax.ShapeDtypeStruct(
+                (global_batch,), jnp.int32,
+                sharding=NamedSharding(self.mesh, P_(ax))),
+            key=jax.ShapeDtypeStruct((), jax.random.key(0).dtype),
+        )

@@ -1,27 +1,35 @@
 """Training loops with fault tolerance: GNN (the paper's workload) and a
 small LM loop for the examples. Both support checkpoint/auto-resume,
 async saving, and straggler-aware input pipelines.
+
+Every fused train/infer step is assembled by
+:class:`repro.runtime.engine.TrainEngine` — the single step builder
+shared with the distributed launch path and serving. This module keeps
+the driver loop (batching, checkpointing, history) plus the eager
+unfused baseline used for parity measurement.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import samplers as sampler_registry
-from repro.core.interface import (Sampler, double_caps, overflow_flags,
-                                  pad_seeds, sampled_counts)
-from repro.data.gnn_loader import (LoaderStats, OverflowLedger, SeedBatches,
-                                   sample_with_retry)
+from repro.core.interface import Sampler, pad_seeds
+from repro.data.gnn_loader import LoaderStats, SeedBatches, sample_with_retry
 from repro.graph.generators import GraphDataset
 from repro.models import gnn as gnn_models
 from repro.optim import adam
 from repro.runtime import checkpoint as ckpt_lib
+from repro.runtime.engine import TrainEngine, gather_feats, gnn_loss_fn
+
+# the loss/gather helpers moved to the engine; re-exported here for the
+# unfused baseline's callers (benchmarks, fault-tolerance harness)
+_gnn_loss_fn = gnn_loss_fn
 
 
 @dataclasses.dataclass
@@ -46,37 +54,35 @@ class GNNTrainConfig:
     # donated buffers — every registered sampler traces inside it
     fused: bool = True
     max_replay_retries: int = 3
+    # > 0: run the partition-aware distributed engine over this many
+    # devices (one shard_map; partitioned CSR + features; seed routing;
+    # feature all-to-all; gradient all-reduce — docs/distributed.md).
+    # Requires the process to expose that many jax devices.
+    mesh_devices: int = 0
+    grad_compression: str = "none"       # none | bf16 | int8 (mesh only)
 
 
-def build_sampler(ds: GraphDataset, cfg: GNNTrainConfig) -> Sampler:
+def build_sampler(ds: GraphDataset, cfg: GNNTrainConfig,
+                  num_parts: Optional[int] = None) -> Sampler:
     """The one sampler construction path: registry entry + caps derived
-    from the dataset's graph stats (train and eval share it)."""
+    from the dataset's graph stats (train and eval share it). On a mesh
+    the caps are sized for the DEVICE-LOCAL batch and the per-peer
+    all-to-all schedule rides along (``num_parts``)."""
+    batch = cfg.batch_size if not num_parts else cfg.batch_size // num_parts
     return sampler_registry.from_dataset(
-        cfg.sampler, ds, batch_size=cfg.batch_size, fanouts=cfg.fanouts,
-        layer_sizes=cfg.layer_sizes, safety=cfg.cap_safety)
-
-
-def _gnn_loss_fn(apply_fn, params, blocks, feats, labels, use_kernel):
-    if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
-        logits = apply_fn(params, blocks, feats, use_kernel=use_kernel)
-    else:
-        logits = apply_fn(params, blocks, feats)
-    valid = blocks[0].seeds >= 0
-    safe = jnp.where(valid, labels, 0)
-    lse = jax.nn.logsumexp(logits, axis=-1)
-    gold = jnp.take_along_axis(logits, safe[:, None], axis=-1)[:, 0]
-    nll = jnp.where(valid, lse - gold, 0.0)
-    loss = jnp.sum(nll) / jnp.maximum(jnp.sum(valid), 1)
-    acc = jnp.sum((jnp.argmax(logits, -1) == safe) & valid) / jnp.maximum(
-        jnp.sum(valid), 1)
-    return loss, acc
+        cfg.sampler, ds, batch_size=batch, fanouts=cfg.fanouts,
+        layer_sizes=cfg.layer_sizes, safety=cfg.cap_safety,
+        num_parts=num_parts)
 
 
 def make_gnn_train_step(apply_fn, opt_cfg: adam.AdamConfig, use_kernel=False):
+    """The eager unfused baseline step (sampling happens outside): kept
+    for measurement against the engine's fused program."""
     @jax.jit
     def step(params, opt_state, blocks, feats, labels):
         (loss, acc), grads = jax.value_and_grad(
-            lambda p: _gnn_loss_fn(apply_fn, p, blocks, feats, labels, use_kernel),
+            lambda p: gnn_loss_fn(apply_fn, p, blocks, feats, labels,
+                                  use_kernel),
             has_aux=True,
         )(params)
         params, opt_state, m = adam.apply_updates(params, grads, opt_state, opt_cfg)
@@ -85,104 +91,81 @@ def make_gnn_train_step(apply_fn, opt_cfg: adam.AdamConfig, use_kernel=False):
     return step
 
 
-def gather_feats(features: jax.Array, block) -> jax.Array:
-    idx = jnp.where(block.next_seeds >= 0, block.next_seeds, 0)
-    return features[idx] * (block.next_seeds >= 0)[:, None].astype(features.dtype)
-
-
 def make_fused_train_step(apply_fn, opt_cfg: adam.AdamConfig,
                           sampler: Sampler, use_kernel=False):
-    """One-dispatch train step: multi-layer sampling, feature gather,
-    forward/backward and the Adam update fused into a single jitted XLA
-    program with donated parameter/optimizer buffers. ``sampler`` is any
-    :class:`~repro.core.interface.Sampler` — every registry entry (NS,
-    the LABOR family, LADIES/PLADIES, full) traces inside the program.
-
-    The step never syncs on overflow. Instead the parameter update is
-    *gated*: if any layer overflowed its static caps, params/opt_state
-    pass through unchanged and the stacked per-layer ``overflow`` flags
-    come back as a device array for the loader's :class:`OverflowLedger`
-    to poll one step late (see docs/pipeline.md).
+    """One-dispatch train step — built by the engine (single-host mode).
 
     Signature: step(params, opt_state, graph, features, labels_all,
-    seeds, key) -> (params, opt_state, metrics). ``key`` is a jax PRNG
-    key — a dynamic argument, so steps never respecialize on the PRNG
-    state, and the per-layer salt schedule (``sampler.spec.salts``) is
-    derived inside the traced program rather than as per-step host
-    micro-dispatches.
+    seeds, key) -> (params, opt_state, metrics). See
+    :class:`repro.runtime.engine.TrainEngine` and docs/pipeline.md for
+    the program layout and the async overflow protocol.
     """
-
-    @partial(jax.jit, donate_argnums=(0, 1))
-    def step(params, opt_state, graph, features, labels_all, seeds, key):
-        blocks = sampler.sample(graph, seeds, sampler.spec.salts(key))
-        feats = gather_feats(features, blocks[-1])
-        labels = labels_all[jnp.where(seeds >= 0, seeds, 0)]
-        (loss, acc), grads = jax.value_and_grad(
-            lambda p: _gnn_loss_fn(apply_fn, p, blocks, feats, labels,
-                                   use_kernel),
-            has_aux=True,
-        )(params)
-        new_params, new_opt, m = adam.apply_updates(params, grads, opt_state,
-                                                    opt_cfg)
-        ovf = overflow_flags(blocks)
-        any_ovf = jnp.any(ovf)
-        gate = lambda new, old: jnp.where(any_ovf, old, new)
-        params_out = jax.tree.map(gate, new_params, params)
-        opt_out = jax.tree.map(gate, new_opt, opt_state)
-        m.update(loss=loss, acc=acc, overflow=ovf, **sampled_counts(blocks))
-        return params_out, opt_out, m
-
-    return step
+    return TrainEngine(sampler, apply_fn, opt_cfg, mesh=None,
+                       use_kernel=use_kernel).step_fn
 
 
 def make_fused_infer_step(apply_fn, sampler: Sampler, use_kernel=False):
-    """One-dispatch serving step: sampling + feature gather + forward in
-    a single jitted program — the serving-side counterpart of
-    :func:`make_fused_train_step`, consuming the same sampler object.
+    """One-dispatch serving step — the engine's fused infer program.
 
     Signature: infer(params, graph, features, seeds, key) ->
     (logits, overflow_flags). With the ``full`` registry entry the
     logits are exact (full-neighborhood aggregation); with any other
     entry this is sampled inference. Overflow handling is the caller's
-    usual protocol: double caps via ``sampler.with_caps`` and rebuild.
+    usual protocol: double caps via ``sampler.doubled`` and rebuild.
     """
+    return TrainEngine(sampler, apply_fn, adam.AdamConfig(), mesh=None,
+                       use_kernel=use_kernel).infer_fn
 
-    @jax.jit
-    def infer(params, graph, features, seeds, key):
-        blocks = sampler.sample(graph, seeds, sampler.spec.salts(key))
-        feats = gather_feats(features, blocks[-1])
-        if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
-            logits = apply_fn(params, blocks, feats, use_kernel=use_kernel)
-        else:
-            logits = apply_fn(params, blocks, feats)
-        return logits, overflow_flags(blocks)
 
-    return infer
+def _mesh_for(cfg: GNNTrainConfig):
+    if not cfg.mesh_devices:
+        return None
+    from repro.launch.mesh import make_mesh
+    return make_mesh((cfg.mesh_devices,), ("data",))
 
 
 def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
               log_every: int = 50, history_metrics: bool = True) -> Dict[str, Any]:
-    """Full GNN training with auto-resume. Returns metrics history."""
+    """Full GNN training with auto-resume. Returns metrics history.
+
+    One loop serves both scales: with ``cfg.mesh_devices == 0`` the
+    engine lowers to the single-device fused program; with a mesh it
+    runs the partition-aware distributed step — same batching,
+    checkpointing, and overflow-replay protocol either way.
+    """
     if cfg.num_layers and cfg.num_layers != len(cfg.fanouts):
         raise ValueError("num_layers must match len(fanouts)")
     cfg = dataclasses.replace(cfg, num_layers=len(cfg.fanouts))
+    mesh = _mesh_for(cfg)
+    if mesh is not None and not cfg.fused:
+        raise ValueError("the distributed engine is always fused")
     g = ds.graph
-    feats = jnp.asarray(ds.features)
-    labels_all = jnp.asarray(ds.labels)
     in_dim, n_cls = ds.features.shape[1], int(ds.labels.max()) + 1
 
     init_fn, apply_fn = gnn_models.MODELS[cfg.model]
     params = init_fn(jax.random.key(cfg.seed), in_dim, cfg.hidden, n_cls,
                      cfg.num_layers)
     opt_cfg = adam.AdamConfig(lr=cfg.lr)
-    opt_state = adam.init_state(params, opt_cfg)
 
-    sampler = build_sampler(ds, cfg)
-    if cfg.fused:
-        fused_step = make_fused_train_step(apply_fn, opt_cfg, sampler,
-                                           cfg.use_kernel)
-    else:
+    stats = LoaderStats()
+    sampler = build_sampler(ds, cfg, num_parts=cfg.mesh_devices or None)
+    engine = TrainEngine(sampler, apply_fn, opt_cfg, mesh=mesh,
+                         use_kernel=cfg.use_kernel,
+                         grad_compression=cfg.grad_compression,
+                         max_replay_retries=cfg.max_replay_retries,
+                         stats=stats)
+    data = engine.make_data_from_dataset(ds)
+    state = engine.init_state(params)
+    if not cfg.fused:
+        feats = data.features
+        labels_all = data.labels
         step_fn = make_gnn_train_step(apply_fn, opt_cfg, cfg.use_kernel)
+
+    def state_tree(params, state):
+        t = {"params": params, "opt": state.opt}
+        if state.err is not None:  # compression error-feedback rides along
+            t["err"] = state.err
+        return t
 
     start_step = 0
     saver = None
@@ -190,9 +173,19 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
         saver = ckpt_lib.AsyncSaver(cfg.ckpt_dir)
         last = ckpt_lib.latest_step(cfg.ckpt_dir)
         if last is not None:
-            state = ckpt_lib.restore(cfg.ckpt_dir, last,
-                                     {"params": params, "opt": opt_state})
-            params, opt_state = state["params"], state["opt"]
+            meta = ckpt_lib.read_meta(cfg.ckpt_dir, last)
+            # rebuild the exact jit specialization the checkpoint was
+            # trained under; loud error on sampler/mesh/compression
+            # mismatch (must precede restore: a compression mismatch
+            # also changes the checkpoint tree)
+            engine.sampler = ckpt_lib.validate_restore_meta(
+                meta, engine.sampler, mesh_devices=cfg.mesh_devices,
+                grad_compression=cfg.grad_compression)
+            restored = ckpt_lib.restore(cfg.ckpt_dir, last,
+                                        state_tree(params, state))
+            params = restored["params"]
+            state = dataclasses.replace(state, opt=restored["opt"],
+                                        err=restored.get("err", state.err))
             start_step = last
 
     if len(ds.train_idx) < cfg.batch_size:
@@ -200,36 +193,35 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
             f"batch_size {cfg.batch_size} exceeds the {len(ds.train_idx)}"
             "-vertex train split (SeedBatches drops partial batches)")
     batches = SeedBatches(ds.train_idx, cfg.batch_size, seed=cfg.seed)
-    stats = LoaderStats()
     # metrics stay on device during the loop (no per-step host sync);
     # floatified once after the last step.
     device_history: List[Dict[str, Any]] = []
     key = jax.random.key(cfg.seed + 1)
     epoch_iter = iter(batches.epoch())
-    ledger = OverflowLedger(stats)
 
-    def replay_fused(seeds, sample_key, hist_idx, sampler_then):
-        """Re-run an overflowed (device-side no-op) batch until its flags
-        clear, doubling caps (``Sampler.with_caps``) whenever the current
-        schedule is the one that overflowed; rebinds the fused step
-        closure. Returns the replayed step's metrics."""
-        nonlocal sampler, fused_step, params, opt_state
-        for _ in range(cfg.max_replay_retries + 1):
-            if sampler is sampler_then:
-                stats.overflow_retries += 1
-                sampler = sampler.with_caps(double_caps(sampler.caps))
-                fused_step = make_fused_train_step(apply_fn, opt_cfg,
-                                                   sampler, cfg.use_kernel)
-            params, opt_state, m = fused_step(params, opt_state, g, feats,
-                                              labels_all, seeds, sample_key)
-            if hist_idx is not None:
-                device_history[hist_idx] = {**device_history[hist_idx], **m}
-            if not bool(jnp.any(m["overflow"])):
-                return m
-            sampler_then = sampler
-        raise RuntimeError("sampling overflow persisted after cap doubling")
+    def scalars(m):
+        """History keeps scalar metrics only — the distributed step's
+        per-layer frontier arrays would pin device memory for the whole
+        run if retained per step."""
+        return {k: v for k, v in m.items() if k != "frontiers"}
+
+    def drain_replays():
+        """Patch step-indexed history with metrics of replayed batches
+        (the engine appends (tag, metrics) per replay attempt)."""
+        for hist_idx, rm in engine.replayed:
+            if history_metrics and hist_idx is not None:
+                device_history[hist_idx] = {**device_history[hist_idx],
+                                            **scalars(rm)}
+        engine.replayed.clear()
+
+    def ckpt_meta():
+        return {"loss": float(m["loss"]),
+                **ckpt_lib.engine_restore_meta(
+                    engine.sampler, mesh_devices=cfg.mesh_devices,
+                    grad_compression=cfg.grad_compression)}
 
     t0 = time.time()
+    m = {"loss": jnp.float32(0)}
     for step in range(start_step, cfg.steps):
         try:
             seeds = next(epoch_iter)
@@ -238,20 +230,20 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
             seeds = next(epoch_iter)
         key, sk = jax.random.split(key)
         if cfg.fused:
-            params, opt_state, m = fused_step(params, opt_state, g, feats,
-                                              labels_all, seeds, sk)
             hist_idx = len(device_history) if history_metrics else None
+            params, state, m = engine.step(params, state, data, seeds, sk,
+                                           tag=hist_idx)
             if history_metrics:
-                device_history.append({"step": step + 1, **m})
-            # poll the PREVIOUS batch's flags (already retired — free)
-            due = ledger.record((seeds, sk, hist_idx, sampler), m["overflow"])
-            if due is not None:
-                replay_fused(*due)
+                device_history.append({"step": step + 1, **scalars(m)})
+            drain_replays()
         else:
-            blocks, sampler = sample_with_retry(sampler, g, seeds, sk, stats)
+            blocks, smp = sample_with_retry(engine.sampler, g, seeds, sk,
+                                            stats)
+            engine.sampler = smp
             bf = gather_feats(feats, blocks[-1])
             lab = labels_all[jnp.where(seeds >= 0, seeds, 0)]
-            params, opt_state, m = step_fn(params, opt_state, blocks, bf, lab)
+            params, opt, m = step_fn(params, state.opt, blocks, bf, lab)
+            state = dataclasses.replace(state, opt=opt)
             if history_metrics:
                 device_history.append({
                     "step": step + 1, "loss": m["loss"], "acc": m["acc"],
@@ -262,14 +254,15 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
                 # resolve the just-dispatched batch before persisting:
                 # if it overflowed its update was gated off on device and
                 # would otherwise be replayed only after the save
-                due = ledger.flush()
-                if due is not None:
-                    m = replay_fused(*due)
-            saver.save(step + 1, {"params": params, "opt": opt_state},
-                       meta={"loss": float(m["loss"])})
-    due = ledger.flush()
-    if due is not None:
-        replay_fused(*due)
+                params, state, rm = engine.flush(params, state, data)
+                drain_replays()
+                if rm is not None:
+                    m = rm
+            saver.save(step + 1, state_tree(params, state),
+                       meta=ckpt_meta())
+    if cfg.fused:
+        params, state, _ = engine.flush(params, state, data)
+        drain_replays()
     wall = time.time() - t0
     history: List[Dict[str, float]] = [
         {"step": int(r["step"]), "loss": float(r["loss"]),
@@ -277,7 +270,7 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
          "sampled_e": int(r["sampled_e"])}
         for r in device_history]
     if saver:
-        saver.save(cfg.steps, {"params": params, "opt": opt_state})
+        saver.save(cfg.steps, state_tree(params, state), meta=ckpt_meta())
         saver.wait()
     return {
         "params": params,

@@ -37,6 +37,22 @@ def test_seed_batches_cover_epoch():
     assert len(set(seen)) == 96
 
 
+def test_seed_batches_remainder_keeps_static_shape():
+    """drop_last=False: the remainder batch is padded to the full static
+    batch_size (a rem-shaped batch would force a fresh jit
+    specialization on the last batch of every epoch)."""
+    idx = np.arange(100)
+    sb = SeedBatches(idx, batch_size=32, seed=0, drop_last=False)
+    batches = [np.asarray(b) for b in sb.epoch()]
+    assert len(batches) == 4
+    assert all(b.shape == (32,) for b in batches), [b.shape for b in batches]
+    last = batches[-1]
+    assert (last >= 0).sum() == 4          # 100 - 3*32 real seeds
+    assert np.all(last[(last < 0)] == -1)  # -1 padding, nothing else
+    seen = np.concatenate([b[b >= 0] for b in batches])
+    assert len(seen) == 100 and len(set(seen.tolist())) == 100
+
+
 def test_prefetch_iterator():
     def produce():
         for i in range(5):

@@ -98,14 +98,17 @@ print("ef OK")
 
 
 def test_distributed_gnn_step_runs():
+    """The launch-config path: build_gnn_engine sizes the partition-aware
+    TrainEngine from a GNNWorkloadConfig on a 2-axis mesh (axes fused
+    into one partition axis); loss must fall over a few steps."""
     run_with_devices("""
 import jax, jax.numpy as jnp, numpy as np
 from repro.configs.labor_gcn import GNNWorkloadConfig
-from repro.launch.gnn_step import build_gnn_train_step, derive_caps
+from repro.core.interface import pad_seeds
+from repro.launch.gnn_step import build_gnn_engine
 from repro.launch.mesh import make_mesh
 from repro.graph.generators import generate, DatasetSpec
 from repro.models import gnn as gnn_models
-from repro.optim import adam
 
 mesh = make_mesh((4, 2), ("data", "model"))
 spec = DatasetSpec("mini", 2048, 12.0, 16, 5, 0.5, 0.2, 0.6, 1000)
@@ -115,29 +118,21 @@ cfg = GNNWorkloadConfig(num_vertices=ds.graph.num_vertices,
                         feature_dim=16, num_classes=5, hidden=32,
                         num_layers=2, fanouts=(4, 4), global_batch=128,
                         cap_safety=3.0)
-step, specs, param_specs, meta = build_gnn_train_step(mesh, cfg)
-
+engine, meta = build_gnn_engine(mesh, cfg, lr=1e-2)
+assert meta["num_devices"] == 8 and meta["local_batch"] == 16
+data = engine.make_data_from_dataset(ds)
 params = gnn_models.gcn_init(jax.random.key(0), 16, 32, 5, cfg.num_layers)
-opt = adam.init_state(params, adam.AdamConfig(lr=1e-2))
-v_pad, P = meta["v_pad"], meta["num_devices"]
-feats = np.zeros((v_pad, 16), np.float32)
-feats[:ds.graph.num_vertices] = ds.features
-seeds = np.asarray(ds.train_idx[:cfg.global_batch], np.int32)
-labels = ds.labels[seeds]
-indptr = jnp.asarray(ds.graph.indptr)
-E = int(cfg.num_vertices * cfg.avg_degree)
-idx = np.zeros(E, np.int32)
-real = np.asarray(ds.graph.indices)
-idx[:real.size] = real[:E]
+state = engine.init_state(params)
+seeds = pad_seeds(jnp.asarray(np.asarray(ds.train_idx[:cfg.global_batch],
+                                         np.int32)), cfg.global_batch)
 losses = []
-pp, oo, ee = params, opt, None
 for t in range(3):
-    pp, oo, ee, m = jax.jit(step)(pp, oo, ee, indptr, jnp.asarray(idx),
-                                  jnp.asarray(feats), jnp.asarray(seeds),
-                                  jnp.asarray(labels), jnp.uint32(42 + t))
-    assert int(m["overflow"]) == 0, "sampler overflow"
+    params, state, m = engine.step(params, state, data, seeds,
+                                   jax.random.key(42 + t), tag=t)
+    assert not bool(jnp.any(m["overflow"])), "overflow"
     losses.append(float(m["loss"]))
-    assert int(m["sampled_vertices"]) > cfg.global_batch
+    assert int(m["sampled_v"]) > cfg.global_batch
+params, state, _ = engine.flush(params, state, data)
 assert losses[-1] < losses[0], losses
 print("gnn step OK", losses)
 """, timeout=1200)
