@@ -1,22 +1,42 @@
-"""Kernel micro-benchmarks. On this CPU container the Pallas kernels run
-in interpret mode (correctness only), so wall times here measure the XLA
-reference paths; the kernels' TPU value is argued via the roofline model
-(EXPERIMENTS.md §Perf). We report the reference timings + working-set
-sizes used in those napkin estimates."""
+"""Graph-ops kernel micro-benchmarks: fwd AND bwd, both backends.
+
+Times every ``repro.ops`` primitive on a products-like sampled block —
+forward and gradient (``aggregate``'s backward is the transposed SpMM +
+SDDMM; ``edge_softmax``'s the segment-softmax Jacobian) — through the
+``"xla"`` backend and, off-TPU, the ``"pallas"`` backend in interpret
+mode. Interpret-mode wall times measure the Pallas *emulation*, not the
+MXU (correctness path only); on this CPU container the XLA rows are the
+real timings and the kernels' TPU value is argued via the roofline
+model (EXPERIMENTS.md §Perf). The flash-attention reference row rides
+along unchanged.
+
+Emits CSV on stdout (``kernel.<name>,<us>,<derived>``) and — run as a
+script or via benchmarks/run.py — writes ``BENCH_kernels.json``.
+"""
 from __future__ import annotations
 
+import dataclasses
+import json
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops as O
+from repro.core import LayerCaps, labor_sampler, pad_seeds
+from repro.graph.generators import DatasetSpec, generate
 from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.spmm.ref import spmm_block_ref
+
+# interpret-mode Pallas is orders of magnitude slower than XLA on CPU;
+# benchmark it on a reduced copy of the block so the suite stays
+# CI-sized, and mark the rows as emulation
+INTERPRET = O.interpret_mode()
 
 
 def _time(fn, *args, reps=5):
-    fn(*args)  # compile
+    out = fn(*args)  # compile
+    jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(reps):
         out = fn(*args)
@@ -24,37 +44,102 @@ def _time(fn, *args, reps=5):
     return (time.perf_counter() - t0) / reps
 
 
+def _products_block(edge_cap=16384, seed_n=1024):
+    """One LABOR-sampled layer on a products-like synthetic graph."""
+    ds = generate(DatasetSpec("bench", 60000, 16.0, 128, 32, 0.5, 0.2,
+                              0.6, 20000), seed=0)
+    caps = [LayerCaps(4 * edge_cap, edge_cap, edge_cap + seed_n)]
+    seeds = pad_seeds(jnp.asarray(ds.train_idx[:seed_n]), seed_n)
+    blk = labor_sampler((15,), caps, 0).sample_with_key(
+        ds.graph, seeds, jax.random.key(0))[0]
+    return blk
+
+
+def _shrink(blk, e=1024, s=256, t=2048):
+    """Reduced block for interpret-mode rows (same code path)."""
+    return dataclasses.replace(
+        blk,
+        seeds=blk.seeds[:s], next_seeds=blk.next_seeds[:t],
+        src=blk.src[:e],
+        dst_slot=jnp.clip(blk.dst_slot[:e], -1, s - 1),
+        src_slot=jnp.clip(blk.src_slot[:e], -1, t - 1),
+        weight=blk.weight[:e],
+        edge_mask=blk.edge_mask[:e],
+        src_perm=jnp.argsort(jnp.where(blk.edge_mask[:e],
+                                       jnp.clip(blk.src_slot[:e], -1, t - 1),
+                                       t)).astype(jnp.int32),
+    )
+
+
 def run():
     rows = []
     rng = np.random.default_rng(0)
-    # spmm: products-like block aggregation
-    E, T, S, F = 20000, 6000, 2000, 128
-    dst = np.sort(rng.integers(0, S, E)).astype(np.int32)
-    src = rng.integers(0, T, E).astype(np.int32)
-    w = rng.normal(size=E).astype(np.float32)
-    mask = np.ones(E, bool)
-    h = jnp.asarray(rng.normal(size=(T, F)), jnp.float32)
-    f = jax.jit(lambda *a: spmm_block_ref(*a, num_rows=S))
-    dt = _time(f, jnp.asarray(src), jnp.asarray(dst), jnp.asarray(w),
-               jnp.asarray(mask), h)
-    rows.append(("spmm_ref_e20k_f128", dt * 1e6,
-                 f"bytes={E*F*4 + S*F*4}"))
-    # flash attention ref
-    B, S2, H, hd = 2, 1024, 8, 64
-    q = jnp.asarray(rng.normal(size=(B, S2, H, hd)), jnp.float32)
-    k = jnp.asarray(rng.normal(size=(B, S2, H // 2, hd)), jnp.float32)
+    blk_full = _products_block()
+    F, H = 128, 8
+
+    backends = [("xla", blk_full)]
+    if INTERPRET:
+        backends.append(("pallas_interpret", _shrink(blk_full)))
+    else:
+        backends.append(("pallas", blk_full))
+
+    for backend_name, blk in backends:
+        backend = backend_name.split("_")[0]
+        E, S, T = blk.edge_cap, blk.seed_cap, blk.next_cap
+        h = jnp.asarray(rng.normal(size=(T, F)), jnp.float32)
+        logit = jnp.asarray(rng.normal(size=(E, H)), jnp.float32)
+        note = f"E={E},S={S},F={F},bytes={E * F * 4 + S * F * 4}"
+
+        agg = jax.jit(lambda h_: O.aggregate(blk, h_, backend=backend))
+        dt = _time(agg, h)
+        rows.append((f"aggregate_fwd_{backend_name}", dt * 1e6, note))
+
+        agg_g = jax.jit(jax.grad(
+            lambda h_: jnp.sum(O.aggregate(blk, h_, backend=backend) ** 2)))
+        dt = _time(agg_g, h)
+        rows.append((f"aggregate_bwd_{backend_name}", dt * 1e6, note))
+
+        sm = jax.jit(lambda l: O.edge_softmax(blk, l, backend=backend))
+        dt = _time(sm, logit)
+        rows.append((f"edge_softmax_fwd_{backend_name}", dt * 1e6,
+                     f"E={E},H={H}"))
+
+        sm_g = jax.jit(jax.grad(
+            lambda l: jnp.sum(O.edge_softmax(blk, l, backend=backend) ** 2)))
+        dt = _time(sm_g, logit)
+        rows.append((f"edge_softmax_bwd_{backend_name}", dt * 1e6,
+                     f"E={E},H={H}"))
+
+        u = jnp.asarray(rng.normal(size=(S, F)), jnp.float32)
+        sd = jax.jit(lambda u_, h_: O.sddmm(blk, u_, h_, backend=backend))
+        dt = _time(sd, u, h)
+        rows.append((f"sddmm_fwd_{backend_name}", dt * 1e6, f"E={E},F={F}"))
+
+    # flash attention ref (unchanged context row)
+    B, S2, Hh, hd = 2, 1024, 8, 64
+    q = jnp.asarray(rng.normal(size=(B, S2, Hh, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S2, Hh // 2, hd)), jnp.float32)
     f2 = jax.jit(lambda q, k, v: attention_ref(q, k, v, causal=True))
     dt = _time(f2, q, k, k)
     rows.append(("attention_ref_s1024", dt * 1e6,
-                 f"flops={4*B*S2*S2*H*hd}"))
+                 f"flops={4 * B * S2 * S2 * Hh * hd}"))
     return rows
 
 
-def main(csv=True):
+def main(csv=True, json_path="BENCH_kernels.json"):
     rows = run()
     if csv:
         for name, us, derived in rows:
             print(f"kernel.{name},{us:.0f},{derived}")
+    if json_path:
+        payload = {
+            "interpret_mode": INTERPRET,
+            "platform": jax.default_backend(),
+            "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                     for n, us, d in rows],
+        }
+        with open(json_path, "w") as f:
+            json.dump(payload, f, indent=1)
     return rows
 
 

@@ -49,8 +49,10 @@ def main() -> None:
         from benchmarks import gat_runtime
         gat_runtime.main()
     if "kernels" in which:
+        # fwd+bwd timings for every repro.ops primitive on both graph-ops
+        # backends; also writes BENCH_kernels.json next to the CSV
         from benchmarks import kernel_bench
-        kernel_bench.main()
+        kernel_bench.main(json_path="BENCH_kernels.json")
     print(f"# total bench time {time.time() - t0:.0f}s")
 
 

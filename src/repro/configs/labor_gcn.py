@@ -30,6 +30,7 @@ class GNNWorkloadConfig:
     # launch/gnn_step.build_gnn_engine
     cap_safety: float = 1.6
     grad_compression: str = "none"          # none | bf16 | int8
+    backend: str = "auto"                   # graph-ops backend (repro.ops)
     dtype: str = "float32"
 
 

@@ -45,6 +45,11 @@ class SampledLayer:
     src_slot: jax.Array     # int32[E] index into next_seeds
     weight: jax.Array       # float32[E] Hajek-normalized A'_ts (Algorithm 1)
     edge_mask: jax.Array    # bool[E]
+    # permutation putting edges in src_slot-sorted order (padding last):
+    # the TRANSPOSED view of the block, so the Pallas SpMM's grad-wrt-h
+    # can reuse the dst-sorted one-hot MXU kernel with src/dst roles
+    # swapped (repro.ops backward pass) without re-sorting per step
+    src_perm: jax.Array     # int32[E]
     num_seeds: jax.Array    # int32[] real seed count
     num_next: jax.Array     # int32[] real next_seeds count
     num_edges: jax.Array    # int32[] real sampled edge count
@@ -388,6 +393,11 @@ def build_block(num_vertices: int, seeds: jax.Array, exp: dict,
     e_src_slot = jnp.where(emask, pos[jnp.where(emask, e_src, 0)], -1)
 
     num_seeds = jnp.sum((seeds >= 0).astype(jnp.int32))
+    # transposed edge order (sorted by src_slot, padding last): stable
+    # argsort so ties keep the dst-sorted order — precomputed once here
+    # rather than per backward pass (see SampledLayer.src_perm)
+    src_perm = jnp.argsort(
+        jnp.where(emask, e_src_slot, caps.vertex_cap)).astype(jnp.int32)
     overflow = (
         (exp["total"] > caps.expand_cap)
         | (num_sampled > caps.edge_cap)
@@ -401,6 +411,7 @@ def build_block(num_vertices: int, seeds: jax.Array, exp: dict,
         src_slot=e_src_slot,
         weight=e_weight,
         edge_mask=emask,
+        src_perm=src_perm,
         num_seeds=num_seeds,
         num_next=num_seeds + num_new,
         num_edges=num_sampled,

@@ -1,0 +1,54 @@
+"""jit'd wrapper for the edge-softmax kernel: scatters logits into the
+row-block-aligned chunk layout shared with the SpMM kernels, runs the
+one-pass stats kernel (per-row shift + denominator), and normalizes
+per edge with XLA gathers (TPU gathers are fine; the scatters were the
+kernel's job)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.edge_softmax import edge_softmax as K
+from repro.kernels.spmm.ops import (_round_up, prepare_chunks,
+                                    scatter_to_chunks)
+
+LANE = 128  # heads are padded to one TPU lane block
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "be", "bs",
+                                             "interpret"))
+def edge_softmax_block(dst_slot, mask, logits, num_rows,
+                       be: int = K.DEFAULT_BE, bs: int = K.DEFAULT_BS,
+                       interpret: bool = False):
+    """Normalized attention coefficients per edge.
+
+    dst_slot int32[E] (dst-sorted, -1 padding), mask bool[E], logits
+    (E, H) with H <= 128 heads. Returns alpha (E, H): each destination
+    row's incoming masked logits softmax-normalized (0 where masked).
+    """
+    E, H = logits.shape
+    if H > LANE:
+        raise ValueError(f"edge_softmax supports up to {LANE} heads, got {H}")
+    Hp = _round_up(H, LANE)
+    # the stats kernel's exact segment max holds a (be, H, bs) buffer in
+    # VMEM; shrink the chunk geometry as heads grow to keep it ~2 MB
+    while be * bs * H * 4 > (2 << 20) and min(be, bs) > 32:
+        be, bs = max(be // 2, 32), max(bs // 2, 32)
+    layout = prepare_chunks(dst_slot, mask, num_rows, be, bs)
+
+    lg = jnp.where(mask[:, None], logits, K.NEG).astype(jnp.float32)
+    if Hp != H:
+        lg = jnp.pad(lg, ((0, 0), (0, Hp - H)), constant_values=K.NEG)
+    lg_p = scatter_to_chunks(layout, lg, fill=K.NEG)
+
+    m, s = K.edge_softmax_stats(lg_p, layout.dst, layout.num_rows_pad,
+                                heads=H, be=be, bs=bs, interpret=interpret)
+    # normalize per edge with XLA gathers in the ORIGINAL edge order:
+    # alpha = exp(l - m[dst]) / s[dst]; rows no chunk visited are only
+    # referenced by masked edges (zeroed below)
+    safe = jnp.where(mask, dst_slot, 0)
+    ex = jnp.exp(jnp.where(mask[:, None], lg[:, :H] - m[safe][:, :H], K.NEG))
+    alpha = ex / jnp.maximum(s[safe][:, :H], 1e-9)
+    return jnp.where(mask[:, None], alpha, 0.0).astype(logits.dtype)

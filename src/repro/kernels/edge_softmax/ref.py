@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the edge-softmax kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def edge_softmax_ref(dst_slot, mask, logits, num_rows):
+    """Per-destination segment softmax: out[e] = exp(l_e - m_r) / sum
+    over the edges of e's destination row (0 where masked). Also the
+    ``"xla"`` backend's edge_softmax (repro.ops.ref), so it is
+    autodiff-clean: the max shift carries stop_gradient (softmax is
+    shift-invariant; routing gradient through the max only adds terms
+    that cancel in exact arithmetic)."""
+    S = num_rows
+    seg = jnp.where(mask, dst_slot, S)
+    neg = jnp.finfo(logits.dtype).min
+    masked = jnp.where(mask[:, None], logits, neg)
+    mx = jax.ops.segment_max(masked, seg, num_segments=S + 1)[:-1]
+    mx = jax.lax.stop_gradient(jnp.where(jnp.isfinite(mx), mx, 0.0))
+    safe = jnp.where(mask, dst_slot, 0)
+    ex = jnp.where(mask[:, None], jnp.exp(logits - mx[safe]), 0.0)
+    den = jax.ops.segment_sum(ex, seg, num_segments=S + 1)[:-1]
+    return ex / jnp.maximum(den[safe], 1e-9)

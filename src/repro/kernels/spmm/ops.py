@@ -1,10 +1,17 @@
-"""jit'd wrapper for the SpMM kernel: gathers messages with XLA (TPU
-gathers are fine; scatters are not), re-buckets edges into row-block-
-aligned chunks, runs the Pallas kernel, and masks never-visited blocks.
+"""jit'd wrappers for the SpMM-family kernels.
+
+TPU gathers from HBM are fine; scatters are not — so the wrappers here
+gather/re-bucket with XLA, run the Pallas one-hot MXU kernels over a
+chunked edge layout, and mask never-visited blocks. The chunk layout is
+shared by the scatter (``scatter_sorted_block``/``spmm_block``) and the
+dst-side gather (``gather_dst_block``) directions, which makes the two
+exact transposes of each other — the property ``repro.ops`` relies on
+to express the SpMM backward in the same kernels as the forward.
 """
 from __future__ import annotations
 
 import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +21,98 @@ from repro.kernels.spmm import spmm as K
 
 def _round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
+
+
+class ChunkLayout(NamedTuple):
+    """Row-block-aligned chunk layout for dst-sorted edges.
+
+    ``new_pos[e]`` is edge ``e``'s slot in the padded chunked buffers
+    (masked edges land at ``num_padded`` — one past the end, dropped on
+    scatter and zero-filled on gather-back); ``dst`` is the chunked
+    destination vector (-1 padding) the kernels consume.
+    """
+    new_pos: jax.Array   # int32[E] position in the chunked layout
+    dst: jax.Array       # int32[num_padded] chunked dst ids, -1 pad
+    rb: jax.Array        # int32[E] row block per edge (nb for masked)
+    num_rows_pad: int    # num_rows rounded up to a bs multiple
+    num_padded: int      # chunked edge buffer length (multiple of be)
+    nb: int              # number of row blocks
+
+
+def prepare_chunks(dst_slot, mask, num_rows: int, be: int, bs: int
+                   ) -> ChunkLayout:
+    """Re-bucket dst-sorted edges into chunks of ``be`` that each touch
+    exactly ONE ``bs``-row destination block (the Pallas kernels'
+    contract). Requires edges sorted by dst at row-block granularity
+    (the samplers emit segment-contiguous blocks)."""
+    E = dst_slot.shape[0]
+    S_pad = _round_up(max(num_rows, bs), bs)
+    nb = S_pad // bs
+
+    rb = jnp.where(mask, dst_slot // bs, nb)                 # group per edge
+    counts = jax.ops.segment_sum(jnp.ones((E,), jnp.int32), rb,
+                                 num_segments=nb + 1)[:nb]
+    padded_counts = (counts + be - 1) // be * be
+    starts = jnp.cumsum(padded_counts) - padded_counts       # padded offsets
+    gstart = jnp.cumsum(counts) - counts                     # original offsets
+    rank = jnp.arange(E, dtype=jnp.int32) - gstart[jnp.clip(rb, 0, nb - 1)]
+    E_pad = _round_up(E, be) + nb * be                       # static cap
+    new_pos = jnp.where(mask, starts[jnp.clip(rb, 0, nb - 1)] + rank, E_pad)
+
+    dst_p = jnp.full((E_pad + 1,), -1, jnp.int32).at[new_pos].set(
+        jnp.where(mask, dst_slot, -1), mode="drop")[:-1]
+    return ChunkLayout(new_pos=new_pos, dst=dst_p, rb=rb,
+                       num_rows_pad=S_pad, num_padded=E_pad, nb=nb)
+
+
+def scatter_to_chunks(layout: ChunkLayout, values, fill=0):
+    """Per-edge values -> the padded chunk layout (fill elsewhere)."""
+    shape = (layout.num_padded + 1,) + values.shape[1:]
+    return jnp.full(shape, fill, values.dtype).at[layout.new_pos].set(
+        values, mode="drop")[:-1]
+
+
+def gather_from_chunks(layout: ChunkLayout, chunked, mask):
+    """Chunk-layout per-edge values -> original edge order (0 where
+    masked: masked edges point one past the end of the padded buffer)."""
+    pad = jnp.zeros((1,) + chunked.shape[1:], chunked.dtype)
+    return jnp.concatenate([chunked, pad])[layout.new_pos] * \
+        mask.reshape((-1,) + (1,) * (chunked.ndim - 1)).astype(chunked.dtype)
+
+
+def _visited_rows(layout: ChunkLayout, mask):
+    """bool[num_rows_pad]: row blocks at least one chunk wrote (the
+    kernel leaves unvisited blocks' VMEM untouched)."""
+    visited = jnp.zeros((layout.nb + 1,), jnp.bool_).at[
+        jnp.where(mask, layout.rb, layout.nb)].set(True, mode="drop")[:layout.nb]
+    return jnp.repeat(visited, layout.num_rows_pad // layout.nb)
+
+
+@functools.partial(jax.jit, static_argnames=("num_rows", "be", "bs", "bf",
+                                             "interpret"))
+def scatter_sorted_block(dst_slot, mask, values, num_rows,
+                         be: int = K.DEFAULT_BE, bs: int = K.DEFAULT_BS,
+                         bf: int = K.DEFAULT_BF, interpret: bool = False):
+    """Segment-sum per-edge vectors into num_rows destination rows:
+    out[r] = sum_{e: dst_slot[e]==r, mask[e]} values[e].
+
+    dst_slot int32[E] (dst-sorted, -1 padding), mask bool[E],
+    values (E, F). Returns (num_rows, F) in values.dtype.
+    """
+    F = values.shape[1]
+    F_pad = _round_up(F, bf)
+    layout = prepare_chunks(dst_slot, mask, num_rows, be, bs)
+
+    vals = jnp.where(mask[:, None], values, 0)
+    if F_pad != F:
+        vals = jnp.pad(vals, ((0, 0), (0, F_pad - F)))
+    vals_p = scatter_to_chunks(layout, vals)
+
+    out = K.spmm_sorted(vals_p, layout.dst, layout.num_rows_pad,
+                        be=be, bs=bs, bf=bf, interpret=interpret)
+    # zero out row blocks no chunk visited (their VMEM was never written)
+    out = jnp.where(_visited_rows(layout, mask)[:, None], out, 0)
+    return out[:num_rows, :F]
 
 
 @functools.partial(jax.jit, static_argnames=("num_rows", "be", "bs", "bf",
@@ -26,40 +125,31 @@ def spmm_block(src_slot, dst_slot, weight, mask, h, num_rows,
     src_slot/dst_slot int32[E] (sorted by dst, -1 padding), weight f32[E],
     mask bool[E], h (T, F). Returns (num_rows, F) in h.dtype.
     """
-    E = src_slot.shape[0]
-    T, F = h.shape
-    S_pad = _round_up(max(num_rows, bs), bs)
-    F_pad = _round_up(F, bf)
-    nb = S_pad // bs
-
     # messages via XLA gather
     msg = h[jnp.where(mask, src_slot, 0)] * weight[:, None].astype(h.dtype)
-    msg = jnp.where(mask[:, None], msg, 0)
-    if F_pad != F:
-        msg = jnp.pad(msg, ((0, 0), (0, F_pad - F)))
+    return scatter_sorted_block(dst_slot, mask, msg, num_rows,
+                                be=be, bs=bs, bf=bf, interpret=interpret)
 
-    # re-bucket: chunks must not straddle row blocks
-    rb = jnp.where(mask, dst_slot // bs, nb)                 # group per edge
-    counts = jax.ops.segment_sum(jnp.ones((E,), jnp.int32), rb,
-                                 num_segments=nb + 1)[:nb]
-    padded_counts = (counts + be - 1) // be * be
-    starts = jnp.cumsum(padded_counts) - padded_counts       # padded offsets
-    gstart = jnp.cumsum(counts) - counts                     # original offsets
-    rank = jnp.arange(E, dtype=jnp.int32) - gstart[jnp.clip(rb, 0, nb - 1)]
-    E_pad = _round_up(E, be) + nb * be                       # static cap
-    new_pos = jnp.where(mask, starts[jnp.clip(rb, 0, nb - 1)] + rank, E_pad)
 
-    msg_p = jnp.zeros((E_pad + 1, F_pad), h.dtype).at[new_pos].set(
-        msg, mode="drop")[:-1]
-    dst_p = jnp.full((E_pad + 1,), -1, jnp.int32).at[new_pos].set(
-        jnp.where(mask, dst_slot, -1), mode="drop")[:-1]
+@functools.partial(jax.jit, static_argnames=("be", "bs", "bf", "interpret"))
+def gather_dst_block(dst_slot, mask, rows,
+                     be: int = K.DEFAULT_BE, bs: int = K.DEFAULT_BS,
+                     bf: int = K.DEFAULT_BF, interpret: bool = False):
+    """Per-edge destination-row gather: out[e] = rows[dst_slot[e]]
+    (0 where masked) — the transpose of :func:`scatter_sorted_block`,
+    through the same chunk layout and one-hot MXU kernel.
 
-    out = K.spmm_sorted(msg_p, dst_p, S_pad, be=be, bs=bs, bf=bf,
-                        interpret=interpret)
+    dst_slot int32[E] (dst-sorted, -1 padding), rows (S, F).
+    Returns (E, F) in rows.dtype.
+    """
+    S, F = rows.shape
+    F_pad = _round_up(F, bf)
+    layout = prepare_chunks(dst_slot, mask, S, be, bs)
 
-    # zero out row blocks no chunk visited (their VMEM was never written)
-    visited = jnp.zeros((nb + 1,), jnp.bool_).at[
-        jnp.where(mask, rb, nb)].set(True, mode="drop")[:nb]
-    vis_rows = jnp.repeat(visited, bs)
-    out = jnp.where(vis_rows[:, None], out, 0)
-    return out[:num_rows, :F]
+    rows_p = rows
+    if (layout.num_rows_pad, F_pad) != (S, F):
+        rows_p = jnp.pad(rows, ((0, layout.num_rows_pad - S),
+                                (0, F_pad - F)))
+    chunked = K.gather_rows_sorted(rows_p, layout.dst, be=be, bs=bs, bf=bf,
+                                   interpret=interpret)
+    return gather_from_chunks(layout, chunked, mask)[:, :F]

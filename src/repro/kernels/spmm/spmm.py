@@ -48,6 +48,59 @@ def _spmm_kernel(row_block_ref, first_ref, dst_ref, msg_ref, out_ref):
     out_ref[...] += acc.astype(out_ref.dtype)
 
 
+def _gather_kernel(row_block_ref, dst_ref, rows_ref, out_ref):
+    """Per-edge dst-row gather as a one-hot MXU matmul: out[e] =
+    rows[dst_local_e]. The inverse data motion of ``_spmm_kernel`` —
+    the chunk's (BS, BF) row block sits in VMEM and is reused by every
+    edge of the chunk, so the random-access gather becomes P @ R."""
+    del row_block_ref
+    dst_local = dst_ref[...]  # (BE, 1) int32, -1 for padding lanes
+    be = dst_local.shape[0]
+    bs = rows_ref.shape[0]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (be, bs), 1)
+    P = (dst_local == cols).astype(rows_ref.dtype)     # (BE, BS) one-hot
+    out_ref[...] = jax.lax.dot_general(
+        P, rows_ref[...],
+        dimension_numbers=(((1,), (0,)), ((), ())),    # P @ R -> (BE, BF)
+        preferred_element_type=jnp.float32,
+    ).astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("be", "bs", "bf", "interpret"))
+def gather_rows_sorted(rows: jax.Array, dst: jax.Array,
+                       be: int = DEFAULT_BE, bs: int = DEFAULT_BS,
+                       bf: int = DEFAULT_BF, interpret: bool = False) -> jax.Array:
+    """out[e] = rows[dst[e]] (0 where dst[e] == -1), for the chunked
+    edge layout of :func:`spmm_sorted` (dst sorted ascending, -1 pad,
+    one row-block per chunk, E % be == 0, F % bf == 0)."""
+    E = dst.shape[0]
+    S, F = rows.shape
+    assert E % be == 0 and F % bf == 0 and S % bs == 0
+    nchunks = E // be
+
+    first_dst = dst[:: be]
+    row_block = jnp.where(first_dst >= 0, first_dst // bs, 0).astype(jnp.int32)
+    dst_local = jnp.where(dst >= 0, dst % bs, -1).astype(jnp.int32)[:, None]
+
+    grid = (F // bf, nchunks)
+    out = pl.pallas_call(
+        _gather_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((be, 1), lambda f, c, rb: (c, 0)),
+                pl.BlockSpec((bs, bf), lambda f, c, rb: (rb[c], f)),
+            ],
+            out_specs=pl.BlockSpec((be, bf), lambda f, c, rb: (c, f)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((E, F), rows.dtype),
+        interpret=interpret,
+    )(row_block, dst_local, rows)
+    return out
+
+
 @functools.partial(
     jax.jit, static_argnames=("num_rows", "be", "bs", "bf", "interpret"))
 def spmm_sorted(messages: jax.Array, dst: jax.Array, num_rows: int,

@@ -50,8 +50,10 @@ def build_gnn_engine(mesh, cfg: GNNWorkloadConfig,
         safety=cfg.cap_safety, num_parts=num_devices)
     engine = TrainEngine(sampler, gnn_models.gcn_apply,
                          adam.AdamConfig(lr=lr), mesh=mesh,
+                         backend=cfg.backend,
                          grad_compression=cfg.grad_compression)
     meta = dict(
+        backend=engine.backend,
         local_batch=local_batch,
         global_batch=local_batch * num_devices,
         caps=list(sampler.caps),

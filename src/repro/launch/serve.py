@@ -53,7 +53,8 @@ def serve_gnn(args):
     # and rebuilds (rare, amortized)
     sampler = samplers.from_dataset(args.sampler, ds, batch_size=args.batch,
                                     fanouts=fanouts, safety=2.0)
-    engine = TrainEngine(sampler, apply_fn, adam.AdamConfig())
+    engine = TrainEngine(sampler, apply_fn, adam.AdamConfig(),
+                         backend=args.backend)
     data = engine.make_data_from_dataset(ds)
 
     idx = ds.val_idx
@@ -90,6 +91,7 @@ def serve_gnn(args):
                      if latencies else None)
     print(json.dumps({
         "sampler": engine.sampler.name,
+        "backend": engine.backend,
         "exact": engine.sampler.name == "full",
         "requests": args.requests, "batch": args.batch,
         "latency_ms_p50": round(float(np.percentile(lat_ms, 50)), 2),
@@ -161,6 +163,11 @@ def main():
     ap.add_argument("--model", default="gcn")
     ap.add_argument("--fanouts", default="10,10,10")
     ap.add_argument("--hidden", type=int, default=256)
+    from repro.ops.backend import BACKEND_CHOICES
+    ap.add_argument("--backend", default="auto",
+                    choices=list(BACKEND_CHOICES),
+                    help="graph-ops backend for the fused infer program "
+                         "(repro.ops; auto = Pallas kernels on TPU)")
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)

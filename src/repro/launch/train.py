@@ -70,6 +70,13 @@ def main():
     ap.add_argument("--grad-compression", default="none",
                     choices=["none", "bf16", "int8"],
                     help="gradient all-reduce compression (mesh only)")
+    from repro.ops.backend import BACKEND_CHOICES
+    ap.add_argument("--backend", default="auto",
+                    choices=list(BACKEND_CHOICES),
+                    help="graph-ops backend (repro.ops): auto resolves "
+                         "to the Pallas MXU kernels on TPU, the XLA "
+                         "reference elsewhere; pallas off-TPU runs in "
+                         "interpret mode (parity debugging, slow)")
     # lm
     ap.add_argument("--arch", default="gemma2-2b")
     ap.add_argument("--reduce", action="store_true",
@@ -98,7 +105,8 @@ def main():
             steps=args.steps, lr=args.lr, ckpt_dir=args.ckpt_dir,
             seed=args.seed, fused=args.fused,
             mesh_devices=args.mesh_devices,
-            grad_compression=args.grad_compression)
+            grad_compression=args.grad_compression,
+            backend=args.backend)
         out = train_gnn(ds, cfg)
         val = evaluate_gnn(ds, out["params"], cfg, ds.val_idx)
         h = out["history"]

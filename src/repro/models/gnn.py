@@ -6,19 +6,22 @@ A model consumes ``blocks`` as produced by the samplers (outermost layer
 first) and the input features of the deepest layer's ``next_seeds``; each
 layer aggregates messages src->dst with the sampler's Hajek weights A'
 (so the aggregation IS the paper's estimator H''_s, eq. 6) and applies a
-dense update. Aggregation goes through ``repro.models.blocks`` so the
-Pallas csr_spmm kernel can be swapped in.
+dense update. ALL graph compute — the weighted SpMM and, for GATv2, the
+per-edge scores and attention softmax — goes through the ``repro.ops``
+primitives, so one ``backend`` argument ("xla" | "pallas", resolved from
+"auto" by the engine) switches every model between the XLA reference
+ops and the Pallas MXU kernels, forward and backward alike.
 """
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, List, Sequence
+from typing import Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
+from repro import ops as O
 from repro.core.interface import SampledLayer
-from repro.models import blocks as B
 
 
 def _dense_init(key, d_in, d_out):
@@ -46,12 +49,12 @@ def gcn_init(key, in_dim: int, hidden: int, out_dim: int, num_layers: int = 3):
 
 
 def gcn_layer(p, blk: SampledLayer, h: jax.Array, *, is_last: bool,
-              use_kernel: bool = False) -> jax.Array:
+              backend: Optional[str] = None) -> jax.Array:
     """One GCN layer over one sampled block: h over ``blk.next_seeds``
     in, h over ``blk.seeds`` out. The per-layer granularity is what the
     distributed engine interleaves with cross-partition hidden-state
     exchanges; the whole-batch ``gcn_apply`` chains the same function."""
-    agg = B.aggregate(blk, h, use_kernel=use_kernel)          # (S, F_in)
+    agg = O.aggregate(blk, h, backend=backend)                # (S, F_in)
     z = agg @ p["w"] + p["b"]
     res = h[: blk.seed_cap] @ p["wr"]                          # seeds prefix
     h = z + res
@@ -59,7 +62,7 @@ def gcn_layer(p, blk: SampledLayer, h: jax.Array, *, is_last: bool,
 
 
 def gcn_apply(params, blks: Sequence[SampledLayer], feats: jax.Array,
-              use_kernel: bool = False) -> jax.Array:
+              backend: Optional[str] = None) -> jax.Array:
     """feats: features of blocks[-1].next_seeds. Returns logits for
     blocks[0].seeds."""
     h = feats
@@ -67,7 +70,7 @@ def gcn_apply(params, blks: Sequence[SampledLayer], feats: jax.Array,
     assert n_layers == len(blks)
     for l, blk in enumerate(reversed(blks)):
         h = gcn_layer(params["layers"][l], blk, h,
-                      is_last=l == n_layers - 1, use_kernel=use_kernel)
+                      is_last=l == n_layers - 1, backend=backend)
     return h
 
 
@@ -88,20 +91,20 @@ def sage_init(key, in_dim: int, hidden: int, out_dim: int, num_layers: int = 3):
 
 
 def sage_layer(p, blk: SampledLayer, h: jax.Array, *, is_last: bool,
-               use_kernel: bool = False) -> jax.Array:
-    agg = B.aggregate(blk, h, use_kernel=use_kernel)
+               backend: Optional[str] = None) -> jax.Array:
+    agg = O.aggregate(blk, h, backend=backend)
     self_h = h[: blk.seed_cap]
     z = jnp.concatenate([self_h, agg], axis=-1) @ p["w"] + p["b"]
     return z if is_last else jax.nn.relu(z)
 
 
 def sage_apply(params, blks: Sequence[SampledLayer], feats: jax.Array,
-               use_kernel: bool = False) -> jax.Array:
+               backend: Optional[str] = None) -> jax.Array:
     h = feats
     n_layers = len(params["layers"])
     for l, blk in enumerate(reversed(blks)):
         h = sage_layer(params["layers"][l], blk, h,
-                       is_last=l == n_layers - 1, use_kernel=use_kernel)
+                       is_last=l == n_layers - 1, backend=backend)
     return h
 
 
@@ -129,37 +132,33 @@ def gatv2_init(key, in_dim: int, hidden: int, out_dim: int,
 
 
 def gatv2_layer(p, blk: SampledLayer, h: jax.Array, *, is_last: bool,
-                use_kernel: bool = False) -> jax.Array:
-    del use_kernel                         # attention path has no kernel
+                backend: Optional[str] = None) -> jax.Array:
+    """GATv2 attention expressed entirely in the graph-ops primitives:
+    per-edge scores via ``sddmm(add)``, normalization via
+    ``edge_softmax``, message aggregation via ``scatter_edges`` — so the
+    attention path runs (and differentiates) through the same backend
+    kernels as gcn/sage instead of special-casing."""
     H, Ph = p["attn"].shape                # head structure from the params
     S = blk.seed_cap
-    hs = (h[:S] @ p["ws"]).reshape(S, H, Ph)
-    ht = (h @ p["wt"]).reshape(-1, H, Ph)
-    src = jnp.where(blk.edge_mask, blk.src_slot, 0)
-    dst = jnp.where(blk.edge_mask, blk.dst_slot, 0)
-    e = jax.nn.leaky_relu(hs[dst] + ht[src], 0.2)               # (E,H,Ph)
-    logit = jnp.einsum("ehp,hp->eh", e, p["attn"])
-    logit = jnp.where(blk.edge_mask[:, None], logit, -1e30)
-    # segment softmax over incoming edges of each dst
-    seg = jnp.where(blk.edge_mask, dst, S)
-    mx = jax.ops.segment_max(logit, seg, num_segments=S + 1)[:-1]
-    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
-    ex = jnp.where(blk.edge_mask[:, None], jnp.exp(logit - mx[dst]), 0.0)
-    den = jax.ops.segment_sum(ex, seg, num_segments=S + 1)[:-1]
-    alpha = ex / jnp.maximum(den[dst], 1e-9)
-    msg = ht[src] * alpha[..., None]                             # (E,H,Ph)
-    out = jax.ops.segment_sum(msg.reshape(-1, H * Ph), seg,
-                              num_segments=S + 1)[:-1]
+    hs = h[:S] @ p["ws"]                                         # (S, H*Ph)
+    ht = h @ p["wt"]                                             # (T, H*Ph)
+    e = O.sddmm(blk, hs, ht, op="add", backend=backend)          # (E, H*Ph)
+    e = jax.nn.leaky_relu(e.reshape(-1, H, Ph), 0.2)
+    logit = jnp.einsum("ehp,hp->eh", e, p["attn"])               # (E, H)
+    alpha = O.edge_softmax(blk, logit, backend=backend)          # (E, H)
+    msg = O.gather_src(blk, ht).reshape(-1, H, Ph) * alpha[..., None]
+    out = O.scatter_edges(blk, msg.reshape(-1, H * Ph), backend=backend)
     out = out + p["b"]
     return out if is_last else jax.nn.elu(out)
 
 
-def gatv2_apply(params, blks: Sequence[SampledLayer], feats: jax.Array) -> jax.Array:
+def gatv2_apply(params, blks: Sequence[SampledLayer], feats: jax.Array,
+                backend: Optional[str] = None) -> jax.Array:
     h = feats
     n_layers = len(params["layers"])
     for l, blk in enumerate(reversed(blks)):
         h = gatv2_layer(params["layers"][l], blk, h,
-                        is_last=l == n_layers - 1)
+                        is_last=l == n_layers - 1, backend=backend)
     return h
 
 

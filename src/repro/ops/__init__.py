@@ -1,0 +1,111 @@
+"""Graph-ops primitives — the GNN compute hot path behind a backend
+registry.
+
+Every model layer is expressed in a small primitive set over
+:class:`~repro.core.interface.SampledLayer` blocks (the DGL
+gSpMM/gSDDMM factorization, adapted to static-shape TPU blocks):
+
+  * :func:`aggregate`     — weighted SpMM: the paper's Hajek estimator
+                            H''_s (eq. 6) applied to a sampled block.
+  * :func:`scatter_edges` — unweighted per-edge -> dst-row segment sum.
+  * :func:`gather_dst`    — per-edge dst-row fetch (scatter's transpose).
+  * :func:`gather_src`    — per-edge src-row fetch (an XLA gather on
+                            every backend: TPU gathers are fine).
+  * :func:`sddmm`         — per-edge combine of dst-side and src-side
+                            node vectors (``add`` for GATv2 attention
+                            scores, ``dot`` for the SpMM weight grad),
+                            composed from the two gathers.
+  * :func:`edge_softmax`  — per-destination segment softmax of edge
+                            logits (GATv2 attention normalization).
+
+Each primitive dispatches through :mod:`repro.ops.backend` to the
+``"xla"`` reference or the ``"pallas"`` MXU kernels (``"auto"`` picks
+by platform). Both backends are differentiable — the Pallas SpMM's
+``custom_vjp`` backward is a transposed SpMM + SDDMM built from the
+same kernels — so the fused train step differentiates end to end
+through whichever backend the engine selected. docs/kernels.md covers
+the registry, the VJP structure, and how to add a primitive.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.interface import SampledLayer
+from repro.ops import pallas as _pallas
+from repro.ops import ref as _ref
+from repro.ops.backend import (BACKEND_CHOICES, available_backends,
+                               get_backend, interpret_mode,
+                               register_backend, resolve_backend)
+
+register_backend("xla", _ref)
+register_backend("pallas", _pallas)
+
+#: the XLA reference SpMM under its historical name — the oracle the
+#: kernel tests and the Pallas VJP tests differentiate against
+aggregate_ref = _ref.aggregate
+
+
+def aggregate(blk: SampledLayer, h: jax.Array, *,
+              backend: Optional[str] = None) -> jax.Array:
+    """out[s] = sum_e A'_e h[src_e] per destination seed — the per-layer
+    aggregation every model runs (h over ``blk.next_seeds`` in, h over
+    ``blk.seeds`` out)."""
+    return get_backend(backend).aggregate(blk, h)
+
+
+def scatter_edges(blk: SampledLayer, values: jax.Array, *,
+                  backend: Optional[str] = None) -> jax.Array:
+    """Segment-sum per-edge vectors (edge_cap, F) into seed rows."""
+    return get_backend(backend).scatter_edges(blk, values)
+
+
+def gather_dst(blk: SampledLayer, rows: jax.Array, *,
+               backend: Optional[str] = None) -> jax.Array:
+    """Per-edge fetch of destination-row values (0 on masked edges)."""
+    return get_backend(backend).gather_dst(blk, rows)
+
+
+def gather_src(blk: SampledLayer, rows: jax.Array) -> jax.Array:
+    """Per-edge fetch of source-row values (0 on masked edges).
+
+    Backend-independent: a plain XLA gather is the fast path on every
+    platform (the dst side is the one with row-block reuse that the
+    Pallas one-hot kernel exploits)."""
+    safe = jnp.where(blk.edge_mask, blk.src_slot, 0)
+    return rows[safe] * blk.edge_mask[:, None].astype(rows.dtype)
+
+
+def sddmm(blk: SampledLayer, u: jax.Array, v: jax.Array, *,
+          op: str = "add", backend: Optional[str] = None) -> jax.Array:
+    """Sampled dense-dense combine per edge: u (seed_cap, F) on the dst
+    side, v (next_cap, F) on the src side.
+
+    ``op="add"`` -> (edge_cap, F): u[dst] + v[src] (GATv2 scores);
+    ``op="dot"`` -> (edge_cap,):   <u[dst], v[src]> (SpMM weight grad).
+    Masked edges are 0. Differentiable on both backends (composed from
+    the gathers, whose Pallas versions carry custom VJPs)."""
+    ud = get_backend(backend).gather_dst(blk, u)
+    vs = gather_src(blk, v)
+    if op == "add":
+        return ud + vs
+    if op == "dot":
+        return jnp.sum(ud * vs, axis=-1)
+    raise ValueError(f"sddmm op must be 'add' or 'dot', got {op!r}")
+
+
+def edge_softmax(blk: SampledLayer, logits: jax.Array, *,
+                 backend: Optional[str] = None) -> jax.Array:
+    """Normalize edge logits (edge_cap, H) into attention coefficients
+    per destination (masked edges excluded and returned as 0)."""
+    return get_backend(backend).edge_softmax(blk, logits)
+
+
+__all__ = [
+    "BACKEND_CHOICES", "aggregate", "aggregate_ref", "available_backends",
+    "edge_softmax", "gather_dst", "gather_src", "get_backend",
+    "interpret_mode", "register_backend", "resolve_backend",
+    "scatter_edges", "sddmm",
+]

@@ -1,0 +1,74 @@
+"""Graph-ops backend registry.
+
+A *backend* is a namespace (module or object) providing the primitive
+set of ``repro.ops`` — ``aggregate``, ``scatter_edges``, ``gather_dst``,
+``edge_softmax`` — over :class:`~repro.core.interface.SampledLayer`
+blocks. Two ship built in:
+
+  * ``"xla"``    — gather + segment ops; the reference semantics, and
+                   what ``"auto"`` resolves to off-TPU.
+  * ``"pallas"`` — the one-hot MXU kernels of ``repro.kernels`` with
+                   ``jax.custom_vjp`` backwards built from the same
+                   kernels; runs in interpret mode off-TPU (correct but
+                   slow — for parity testing), compiled on TPU.
+
+``"auto"`` resolves ONCE, by platform, at engine construction
+(``jax.default_backend()``); the resolved name is recorded in
+checkpoint ``engine_restore_meta`` so a restore onto a different
+backend errors loudly instead of silently changing numerics.
+
+Adding a backend (or overriding a primitive) is
+``register_backend(name, namespace)`` — see docs/kernels.md.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+
+#: names accepted wherever a backend is selected (configs, CLI flags)
+BACKEND_CHOICES = ("auto", "xla", "pallas")
+
+_REGISTRY: Dict[str, Any] = {}
+_REQUIRED = ("aggregate", "scatter_edges", "gather_dst", "edge_softmax")
+
+
+def register_backend(name: str, namespace: Any) -> None:
+    """Register ``namespace`` (module/object with the primitive set)
+    under ``name``. Re-registering replaces — tests use this to shim."""
+    missing = [p for p in _REQUIRED if not callable(getattr(namespace, p,
+                                                            None))]
+    if missing:
+        raise ValueError(
+            f"backend {name!r} is missing primitives {missing}; a backend "
+            f"must provide callables {_REQUIRED}")
+    _REGISTRY[name] = namespace
+
+
+def available_backends() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+def resolve_backend(name: Optional[str] = None) -> str:
+    """Resolve a user-facing backend name to a registered one.
+
+    ``None``/``"auto"`` pick by platform: the Pallas kernels on TPU,
+    the XLA reference elsewhere (where Pallas would run in interpret
+    mode — a debugging tool, not a fast path)."""
+    if name in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown graph-ops backend {name!r}; registered: "
+            f"{available_backends()} (or 'auto')")
+    return name
+
+
+def get_backend(name: Optional[str] = None) -> Any:
+    return _REGISTRY[resolve_backend(name)]
+
+
+def interpret_mode() -> bool:
+    """Whether Pallas kernels must run interpreted (any non-TPU
+    platform). Static per process — baked into the jit cache key."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,179 @@
+"""The ``"pallas"`` graph-ops backend: one-hot MXU kernels with
+``jax.custom_vjp`` backwards built from the SAME kernels.
+
+Forward data motion (repro/kernels/spmm, repro/kernels/edge_softmax):
+scatter-accumulate and segment softmax become matmuls against a one-hot
+edges->rows selection matrix over dst-sorted, row-block-aligned edge
+chunks; gathers stay in XLA (fast on TPU).
+
+Backward structure (the DGL gSpMM/gSDDMM factorization):
+
+  * ``aggregate`` (weighted SpMM)
+      - grad wrt ``h`` is the TRANSPOSED SpMM — the same kernel with
+        src/dst roles swapped, fed through ``SampledLayer.src_perm``
+        (the precomputed permutation putting edges in src-sorted order,
+        so the transposed edges satisfy the kernel's dst-sorted
+        contract with zero per-step sorting).
+      - grad wrt ``weight`` is an SDDMM: per-edge <g[dst], h[src]>,
+        dst side via the one-hot gather kernel, src side an XLA gather.
+  * ``scatter_edges`` / ``gather_dst`` are exact transposes of each
+    other through the shared chunk layout, so each one's backward IS
+    the other's forward.
+  * ``edge_softmax`` backward is the segment softmax Jacobian
+    ``alpha * (g - (sum_seg alpha*g)[dst])`` — one scatter kernel, one
+    gather kernel.
+
+Integer/bool block metadata (slots, masks, the permutation) rides
+through every ``custom_vjp`` as regular arguments with ``float0``
+cotangents. Off-TPU the kernels run in Pallas interpret mode
+(``repro.ops.backend.interpret_mode``) — bit-faithful to the kernel
+body, which is what the parity suite exercises on CPU CI.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.interface import SampledLayer
+from repro.kernels.edge_softmax.ops import edge_softmax_block
+from repro.kernels.spmm.ops import (gather_dst_block, scatter_sorted_block,
+                                    spmm_block)
+from repro.ops.backend import interpret_mode
+
+
+def _f0(x):
+    """Zero cotangent for an integer/bool primal (what JAX expects)."""
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# aggregate — weighted SpMM with the transposed-SpMM/SDDMM backward
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(6,))
+def _aggregate(h, weight, src_slot, dst_slot, mask, src_perm, num_rows):
+    return spmm_block(src_slot, dst_slot, weight, mask, h, num_rows,
+                      interpret=interpret_mode())
+
+
+def _aggregate_fwd(h, weight, src_slot, dst_slot, mask, src_perm, num_rows):
+    out = _aggregate(h, weight, src_slot, dst_slot, mask, src_perm, num_rows)
+    return out, (h, weight, src_slot, dst_slot, mask, src_perm)
+
+
+def _aggregate_bwd(num_rows, res, g):
+    h, weight, src_slot, dst_slot, mask, perm = res
+    interp = interpret_mode()
+    # dL/dh: transposed SpMM — permute edges into src-sorted order and
+    # swap roles; the permuted "dst" (= src_slot) satisfies the kernel's
+    # sorted contract by construction of src_perm
+    dh = spmm_block(dst_slot[perm], src_slot[perm], weight[perm],
+                    mask[perm], g, h.shape[0], interpret=interp)
+    # dL/dweight: SDDMM — per-edge <g[dst], h[src]>; dst side through
+    # the one-hot gather kernel, src side an XLA gather
+    g_dst = gather_dst_block(dst_slot, mask, g, interpret=interp)
+    h_src = h[jnp.where(mask, src_slot, 0)]
+    dw = jnp.sum(g_dst * h_src, axis=-1).astype(weight.dtype)
+    return (dh.astype(h.dtype), dw, _f0(src_slot), _f0(dst_slot), _f0(mask),
+            _f0(perm))
+
+
+_aggregate.defvjp(_aggregate_fwd, _aggregate_bwd)
+
+
+def aggregate(blk: SampledLayer, h: jax.Array) -> jax.Array:
+    """Weighted SpMM over a sampled block (see repro.ops.ref for the
+    semantics): Pallas forward, differentiable end to end."""
+    return _aggregate(h, blk.weight, blk.src_slot, blk.dst_slot,
+                      blk.edge_mask, blk.src_perm, blk.seed_cap)
+
+
+# ---------------------------------------------------------------------------
+# scatter_edges / gather_dst — mutual transposes through one chunk layout
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _scatter_edges(values, dst_slot, mask, num_rows):
+    return scatter_sorted_block(dst_slot, mask, values, num_rows,
+                                interpret=interpret_mode())
+
+
+def _scatter_edges_fwd(values, dst_slot, mask, num_rows):
+    return (_scatter_edges(values, dst_slot, mask, num_rows),
+            (dst_slot, mask))
+
+
+def _scatter_edges_bwd(num_rows, res, g):
+    dst_slot, mask = res
+    dv = gather_dst_block(dst_slot, mask, g, interpret=interpret_mode())
+    return dv, _f0(dst_slot), _f0(mask)
+
+
+_scatter_edges.defvjp(_scatter_edges_fwd, _scatter_edges_bwd)
+
+
+def scatter_edges(blk: SampledLayer, values: jax.Array) -> jax.Array:
+    return _scatter_edges(values, blk.dst_slot, blk.edge_mask, blk.seed_cap)
+
+
+@jax.custom_vjp
+def _gather_dst(rows, dst_slot, mask):
+    return gather_dst_block(dst_slot, mask, rows,
+                            interpret=interpret_mode())
+
+
+def _gather_dst_fwd(rows, dst_slot, mask):
+    return (_gather_dst(rows, dst_slot, mask),
+            (dst_slot, mask, rows.shape[0]))
+
+
+def _gather_dst_bwd(res, g):
+    dst_slot, mask, num_rows = res
+    dr = scatter_sorted_block(dst_slot, mask, g, num_rows,
+                              interpret=interpret_mode())
+    return dr, _f0(dst_slot), _f0(mask)
+
+
+_gather_dst.defvjp(_gather_dst_fwd, _gather_dst_bwd)
+
+
+def gather_dst(blk: SampledLayer, rows: jax.Array) -> jax.Array:
+    return _gather_dst(rows, blk.dst_slot, blk.edge_mask)
+
+
+# ---------------------------------------------------------------------------
+# edge_softmax — one-pass stats kernel; Jacobian from the two above
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _edge_softmax(logits, dst_slot, mask, num_rows):
+    return edge_softmax_block(dst_slot, mask, logits, num_rows,
+                              interpret=interpret_mode())
+
+
+def _edge_softmax_fwd(logits, dst_slot, mask, num_rows):
+    alpha = _edge_softmax(logits, dst_slot, mask, num_rows)
+    return alpha, (alpha, dst_slot, mask)
+
+
+def _edge_softmax_bwd(num_rows, res, g):
+    alpha, dst_slot, mask = res
+    interp = interpret_mode()
+    # segment softmax Jacobian: dl_e = alpha_e * (g_e - sum_{seg(e)}
+    # alpha g) — the inner segment sum is the scatter kernel, the
+    # broadcast back to edges the gather kernel
+    inner = scatter_sorted_block(dst_slot, mask, alpha * g, num_rows,
+                                 interpret=interp)
+    dl = alpha * (g - gather_dst_block(dst_slot, mask, inner,
+                                       interpret=interp))
+    return dl.astype(alpha.dtype), _f0(dst_slot), _f0(mask)
+
+
+_edge_softmax.defvjp(_edge_softmax_fwd, _edge_softmax_bwd)
+
+
+def edge_softmax(blk: SampledLayer, logits: jax.Array) -> jax.Array:
+    return _edge_softmax(logits, blk.dst_slot, blk.edge_mask, blk.seed_cap)

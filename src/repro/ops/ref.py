@@ -1,0 +1,48 @@
+"""The ``"xla"`` graph-ops backend: gathers + segment reductions.
+
+These are the reference semantics of every primitive — fully
+differentiable through JAX autodiff (segment_sum transposes to a
+gather), used on CPU and as the oracle the Pallas backend's forwards
+AND custom VJPs are tested against. ``aggregate`` and ``edge_softmax``
+delegate to the kernel packages' oracles (``kernels/*/ref.py``) so
+there is exactly ONE reference implementation of each piece of math.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.interface import SampledLayer
+from repro.kernels.edge_softmax.ref import edge_softmax_ref
+from repro.kernels.spmm.ref import spmm_block_ref
+
+
+def aggregate(blk: SampledLayer, h: jax.Array) -> jax.Array:
+    """Weighted SpMM (the paper's Hajek estimator, eq. 6):
+    out[s] = sum_e A'_e * h[src_slot_e] over edges with dst_slot_e == s.
+    h: (next_cap, F) -> (seed_cap, F)."""
+    return spmm_block_ref(blk.src_slot, blk.dst_slot, blk.weight,
+                          blk.edge_mask, h, blk.seed_cap)
+
+
+def scatter_edges(blk: SampledLayer, values: jax.Array) -> jax.Array:
+    """Unweighted segment sum of per-edge vectors into seed rows:
+    values (edge_cap, F) -> (seed_cap, F)."""
+    S = blk.seed_cap
+    seg = jnp.where(blk.edge_mask, blk.dst_slot, S)
+    vals = jnp.where(blk.edge_mask[:, None], values, 0)
+    return jax.ops.segment_sum(vals, seg, num_segments=S + 1)[:-1]
+
+
+def gather_dst(blk: SampledLayer, rows: jax.Array) -> jax.Array:
+    """Per-edge fetch of destination-row values (0 on masked edges).
+    The transpose of :func:`scatter_edges`."""
+    safe = jnp.where(blk.edge_mask, blk.dst_slot, 0)
+    return rows[safe] * blk.edge_mask[:, None].astype(rows.dtype)
+
+
+def edge_softmax(blk: SampledLayer, logits: jax.Array) -> jax.Array:
+    """Per-destination segment softmax of edge logits (edge_cap, H) ->
+    attention coefficients (edge_cap, H), zero on masked edges."""
+    return edge_softmax_ref(blk.dst_slot, blk.edge_mask, logits,
+                            blk.seed_cap)

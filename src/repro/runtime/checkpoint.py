@@ -141,17 +141,21 @@ def read_meta(ckpt_dir: str, step: int) -> dict:
 
 
 def engine_restore_meta(sampler, mesh_devices: int = 0,
-                        grad_compression: str = "none") -> dict:
+                        grad_compression: str = "none",
+                        backend: str = None) -> dict:
     """JSON-serializable record of the jit specialization a training run
     is using: the full SamplerSpec (name, budgets, LayerCaps — which may
     have grown through overflow replay — salt schedule, per-peer
-    all-to-all caps) plus the mesh/partition shape and the gradient-
+    all-to-all caps) plus the mesh/partition shape, the gradient-
     compression mode (whose error-feedback state rides in the
-    checkpoint tree). Stored in every checkpoint's meta.json so restore
-    can rebuild the identical program.
+    checkpoint tree), and the RESOLVED graph-ops backend
+    (``TrainEngine.backend`` — "xla" or "pallas", never "auto").
+    Stored in every checkpoint's meta.json so restore can rebuild the
+    identical program.
     """
     spec = sampler.spec
     return {
+        **({} if backend is None else {"backend": backend}),
         "sampler": {
             "name": spec.name,
             "budgets": list(spec.budgets),
@@ -167,20 +171,24 @@ def engine_restore_meta(sampler, mesh_devices: int = 0,
 
 
 def validate_restore_meta(meta: dict, sampler, mesh_devices: int = 0,
-                          grad_compression: str = "none"):
+                          grad_compression: str = "none",
+                          backend: str = None):
     """Check a checkpoint's engine metadata against the current run and
     return the sampler re-capped to the checkpoint's schedule.
 
-    The sampling MATH (registry name, budgets, salt schedule) and the
-    mesh/partition shape must match exactly — silently resuming a
-    labor-0 run with ns, or a 4-partition run on 8, would corrupt the
-    trajectory, so mismatches raise. The cap schedules (LayerCaps +
-    peer_caps) are restored FROM the checkpoint: they may have grown via
-    overflow replay, and re-adopting them reproduces the exact jit
-    specialization instead of re-discovering every overflow.
+    The sampling MATH (registry name, budgets, salt schedule), the
+    mesh/partition shape, and the graph-ops backend must match exactly —
+    silently resuming a labor-0 run with ns, a 4-partition run on 8, or
+    an xla-backend trajectory through the pallas kernels (fp-different
+    reduction orders) would corrupt the trajectory, so mismatches
+    raise. The cap schedules (LayerCaps + peer_caps) are restored FROM
+    the checkpoint: they may have grown via overflow replay, and
+    re-adopting them reproduces the exact jit specialization instead of
+    re-discovering every overflow.
 
-    Checkpoints predating this metadata (no "sampler" key) pass through
-    unchanged.
+    ``backend`` is the current run's RESOLVED backend; pass None to
+    skip the check. Checkpoints predating this metadata (no "sampler" /
+    no "backend" key) pass through unchanged.
     """
     from repro.core.interface import LayerCaps
 
@@ -205,6 +213,12 @@ def validate_restore_meta(meta: dict, sampler, mesh_devices: int = 0,
         problems.append(f"gradient compression {ckpt_comp!r} != current "
                         f"{grad_compression!r} (error-feedback state "
                         "would be inconsistent)")
+    ckpt_backend = meta.get("backend")
+    if (backend is not None and ckpt_backend is not None
+            and ckpt_backend != backend):
+        problems.append(f"graph-ops backend {ckpt_backend!r} != current "
+                        f"{backend!r} (pass --backend {ckpt_backend} to "
+                        "resume the same kernels)")
     if problems:
         raise ValueError(
             "checkpoint was trained under a different engine "

@@ -61,6 +61,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P_
 
+from repro import ops as graph_ops
 from repro.core.interface import Sampler, overflow_flags, sampled_counts
 from repro.data.gnn_loader import LoaderStats, OverflowLedger
 from repro.distributed import compression as comp
@@ -79,12 +80,9 @@ def gather_feats(features: jax.Array, block) -> jax.Array:
     return features[idx] * (block.next_seeds >= 0)[:, None].astype(features.dtype)
 
 
-def gnn_loss_fn(apply_fn, params, blocks, feats, labels, use_kernel):
+def gnn_loss_fn(apply_fn, params, blocks, feats, labels, backend=None):
     """Masked mean NLL + accuracy over a sampled block list."""
-    if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
-        logits = apply_fn(params, blocks, feats, use_kernel=use_kernel)
-    else:
-        logits = apply_fn(params, blocks, feats)
+    logits = apply_fn(params, blocks, feats, backend=backend)
     valid = blocks[0].seeds >= 0
     safe = jnp.where(valid, labels, 0)
     lse = jax.nn.logsumexp(logits, axis=-1)
@@ -205,14 +203,18 @@ class TrainEngine:
 
     def __init__(self, sampler: Sampler, model_apply: Callable,
                  opt_cfg: adam.AdamConfig, mesh=None, *,
-                 use_kernel: bool = False, grad_compression: str = "none",
+                 backend: Optional[str] = None, grad_compression: str = "none",
                  max_replay_retries: int = 3,
                  stats: Optional[LoaderStats] = None):
         self.sampler = sampler
         self.model_apply = model_apply
         self.opt_cfg = opt_cfg
         self.mesh = mesh
-        self.use_kernel = use_kernel
+        # the graph-ops backend ("auto"/None resolves by platform HERE,
+        # once — every step this engine builds, single-host or
+        # partitioned, runs the same resolved primitive set, and the
+        # resolved name lands in checkpoint engine_restore_meta)
+        self.backend = graph_ops.resolve_backend(backend)
         self.comp_cfg = comp.CompressionConfig(grad_compression)
         self.max_replay_retries = max_replay_retries
         self.stats = stats or LoaderStats()
@@ -330,7 +332,7 @@ class TrainEngine:
 
     def _build_single_train(self):
         sampler, apply_fn = self.sampler, self.model_apply
-        opt_cfg, use_kernel = self.opt_cfg, self.use_kernel
+        opt_cfg, backend = self.opt_cfg, self.backend
 
         @partial(jax.jit, donate_argnums=(0, 1))
         def step(params, opt_state, graph, features, labels_all, seeds, key):
@@ -339,7 +341,7 @@ class TrainEngine:
             labels = labels_all[jnp.where(seeds >= 0, seeds, 0)]
             (loss, acc), grads = jax.value_and_grad(
                 lambda p: gnn_loss_fn(apply_fn, p, blocks, feats, labels,
-                                      use_kernel),
+                                      backend),
                 has_aux=True,
             )(params)
             new_params, new_opt, m = adam.apply_updates(params, grads,
@@ -357,16 +359,13 @@ class TrainEngine:
 
     def _build_single_infer(self):
         sampler, apply_fn = self.sampler, self.model_apply
-        use_kernel = self.use_kernel
+        backend = self.backend
 
         @jax.jit
         def infer(params, graph, features, seeds, key):
             blocks = sampler.sample(graph, seeds, sampler.spec.salts(key))
             feats = gather_feats(features, blocks[-1])
-            if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
-                logits = apply_fn(params, blocks, feats, use_kernel=use_kernel)
-            else:
-                logits = apply_fn(params, blocks, feats)
+            logits = apply_fn(params, blocks, feats, backend=backend)
             return logits, overflow_flags(blocks)
 
         return infer
@@ -378,8 +377,8 @@ class TrainEngine:
     def _build_distributed(self, train: bool):
         mesh, axes, P = self.mesh, self.axes, self.num_parts
         sampler, layer_fn = self.sampler, self._layer_fn
-        opt_cfg, comp_cfg, use_kernel = (self.opt_cfg, self.comp_cfg,
-                                         self.use_kernel)
+        opt_cfg, comp_cfg, backend = (self.opt_cfg, self.comp_cfg,
+                                      self.backend)
         spec = sampler.spec
         L = spec.num_layers
         caps = spec.caps
@@ -438,7 +437,7 @@ class TrainEngine:
                 h_ovfs = []
                 for b in range(L - 1, -1, -1):
                     h = layer_fn(p["layers"][L - 1 - b], blocks[b], h,
-                                 is_last=b == 0, use_kernel=use_kernel)
+                                 is_last=b == 0, backend=backend)
                     if b > 0:
                         dense = _scatter_owned_rows(
                             owned_rows[b], blocks[b].seeds >= 0, h, v_local)

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import ops as graph_ops
 from repro.core import samplers as sampler_registry
 from repro.core.interface import Sampler, pad_seeds
 from repro.data.gnn_loader import LoaderStats, SeedBatches, sample_with_retry
@@ -49,7 +50,9 @@ class GNNTrainConfig:
     ckpt_every: int = 100
     seed: int = 0
     cap_safety: float = 2.0
-    use_kernel: bool = False
+    # graph-ops backend for every model primitive (repro.ops): "xla",
+    # "pallas", or "auto" (resolved once by platform in the engine)
+    backend: str = "auto"
     # fuse sampling + gather + fwd/bwd + Adam into one XLA program with
     # donated buffers — every registered sampler traces inside it
     fused: bool = True
@@ -75,14 +78,16 @@ def build_sampler(ds: GraphDataset, cfg: GNNTrainConfig,
         num_parts=num_parts)
 
 
-def make_gnn_train_step(apply_fn, opt_cfg: adam.AdamConfig, use_kernel=False):
+def make_gnn_train_step(apply_fn, opt_cfg: adam.AdamConfig, backend=None):
     """The eager unfused baseline step (sampling happens outside): kept
     for measurement against the engine's fused program."""
+    backend = graph_ops.resolve_backend(backend)
+
     @jax.jit
     def step(params, opt_state, blocks, feats, labels):
         (loss, acc), grads = jax.value_and_grad(
             lambda p: gnn_loss_fn(apply_fn, p, blocks, feats, labels,
-                                  use_kernel),
+                                  backend),
             has_aux=True,
         )(params)
         params, opt_state, m = adam.apply_updates(params, grads, opt_state, opt_cfg)
@@ -92,7 +97,7 @@ def make_gnn_train_step(apply_fn, opt_cfg: adam.AdamConfig, use_kernel=False):
 
 
 def make_fused_train_step(apply_fn, opt_cfg: adam.AdamConfig,
-                          sampler: Sampler, use_kernel=False):
+                          sampler: Sampler, backend=None):
     """One-dispatch train step — built by the engine (single-host mode).
 
     Signature: step(params, opt_state, graph, features, labels_all,
@@ -101,10 +106,10 @@ def make_fused_train_step(apply_fn, opt_cfg: adam.AdamConfig,
     the program layout and the async overflow protocol.
     """
     return TrainEngine(sampler, apply_fn, opt_cfg, mesh=None,
-                       use_kernel=use_kernel).step_fn
+                       backend=backend).step_fn
 
 
-def make_fused_infer_step(apply_fn, sampler: Sampler, use_kernel=False):
+def make_fused_infer_step(apply_fn, sampler: Sampler, backend=None):
     """One-dispatch serving step — the engine's fused infer program.
 
     Signature: infer(params, graph, features, seeds, key) ->
@@ -114,7 +119,7 @@ def make_fused_infer_step(apply_fn, sampler: Sampler, use_kernel=False):
     usual protocol: double caps via ``sampler.doubled`` and rebuild.
     """
     return TrainEngine(sampler, apply_fn, adam.AdamConfig(), mesh=None,
-                       use_kernel=use_kernel).infer_fn
+                       backend=backend).infer_fn
 
 
 def _mesh_for(cfg: GNNTrainConfig):
@@ -150,7 +155,7 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
     stats = LoaderStats()
     sampler = build_sampler(ds, cfg, num_parts=cfg.mesh_devices or None)
     engine = TrainEngine(sampler, apply_fn, opt_cfg, mesh=mesh,
-                         use_kernel=cfg.use_kernel,
+                         backend=cfg.backend,
                          grad_compression=cfg.grad_compression,
                          max_replay_retries=cfg.max_replay_retries,
                          stats=stats)
@@ -159,7 +164,7 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
     if not cfg.fused:
         feats = data.features
         labels_all = data.labels
-        step_fn = make_gnn_train_step(apply_fn, opt_cfg, cfg.use_kernel)
+        step_fn = make_gnn_train_step(apply_fn, opt_cfg, engine.backend)
 
     def state_tree(params, state):
         t = {"params": params, "opt": state.opt}
@@ -180,7 +185,8 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
             # also changes the checkpoint tree)
             engine.sampler = ckpt_lib.validate_restore_meta(
                 meta, engine.sampler, mesh_devices=cfg.mesh_devices,
-                grad_compression=cfg.grad_compression)
+                grad_compression=cfg.grad_compression,
+                backend=engine.backend)
             restored = ckpt_lib.restore(cfg.ckpt_dir, last,
                                         state_tree(params, state))
             params = restored["params"]
@@ -218,7 +224,8 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
         return {"loss": float(m["loss"]),
                 **ckpt_lib.engine_restore_meta(
                     engine.sampler, mesh_devices=cfg.mesh_devices,
-                    grad_compression=cfg.grad_compression)}
+                    grad_compression=cfg.grad_compression,
+                    backend=engine.backend)}
 
     t0 = time.time()
     m = {"loss": jnp.float32(0)}
@@ -288,6 +295,7 @@ def evaluate_gnn(ds: GraphDataset, params, cfg: GNNTrainConfig,
     labels_all = jnp.asarray(ds.labels)
     cfg = dataclasses.replace(cfg, num_layers=len(cfg.fanouts))
     _, apply_fn = gnn_models.MODELS[cfg.model]
+    backend = graph_ops.resolve_backend(cfg.backend)
     # same construction path as training: registry entry + derived caps
     sampler = build_sampler(ds, cfg)
     key = key if key is not None else jax.random.key(1234)
@@ -301,10 +309,7 @@ def evaluate_gnn(ds: GraphDataset, params, cfg: GNNTrainConfig,
         key, sk = jax.random.split(key)
         blocks, sampler = sample_with_retry(sampler, g, seeds, sk)
         bf = gather_feats(feats, blocks[-1])
-        if apply_fn in (gnn_models.gcn_apply, gnn_models.sage_apply):
-            logits = apply_fn(params, blocks, bf, use_kernel=cfg.use_kernel)
-        else:
-            logits = apply_fn(params, blocks, bf)
+        logits = apply_fn(params, blocks, bf, backend=backend)
         valid = np.asarray(seeds >= 0)
         pred = np.asarray(jnp.argmax(logits, -1))
         lab = np.asarray(labels_all[jnp.where(seeds >= 0, seeds, 0)])
