@@ -111,12 +111,25 @@ def bench_sampler(ds, name, *, fanouts, batch_size, hidden, steps,
     fused_sps, fused_v = time_loop(fused_once)
     unfused_sps, _ = time_loop(pipeline_once(jit_sample))
 
+    # sample-phase breakdown: the jitted multi-layer sampling alone,
+    # steady state — sample_phase_frac is the share of a fused step the
+    # sampling half costs (the half the frontier primitives own)
+    blocks = jit_sample(g, seeds, salts_for(-1))
+    jax.block_until_ready(blocks[-1].next_seeds)
+    t0 = time.perf_counter()
+    for i in range(steps):
+        blocks = jit_sample(g, seeds, salts_for(i))
+    jax.block_until_ready(blocks[-1].next_seeds)
+    sample_sps = steps / (time.perf_counter() - t0)
+
     out = {
         "sampler": name,
         "fused_steps_per_sec": round(fused_sps, 3),
         "unfused_steps_per_sec": round(unfused_sps, 3),
         "speedup_vs_unfused": round(fused_sps / unfused_sps, 2),
         "sampled_vertices_per_step": round(fused_v, 1),
+        "sample_phase_us": round(1e6 / sample_sps, 1),
+        "sample_phase_frac": round(fused_sps / sample_sps, 3),
     }
 
     # legacy: op-by-op eager sampling + cold-start iterative c_s solver

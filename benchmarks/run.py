@@ -3,6 +3,7 @@
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run table2     # one table
+  PYTHONPATH=src python -m benchmarks.run sampling --smoke   # CI gate
 """
 from __future__ import annotations
 
@@ -10,11 +11,14 @@ import sys
 import time
 
 
-BENCHES = ("table2", "table3", "table4", "fig1", "fig2", "table5", "kernels")
+BENCHES = ("table2", "table3", "table4", "fig1", "fig2", "table5", "kernels",
+           "sampling")
 
 
 def main() -> None:
-    which = set(sys.argv[1:]) or set(BENCHES)
+    args = sys.argv[1:]
+    smoke = "--smoke" in args
+    which = set(a for a in args if not a.startswith("-")) or set(BENCHES)
     t0 = time.time()
     if "table2" in which:
         from benchmarks import table2_sampling_efficiency
@@ -53,6 +57,11 @@ def main() -> None:
         # backends; also writes BENCH_kernels.json next to the CSV
         from benchmarks import kernel_bench
         kernel_bench.main(json_path="BENCH_kernels.json")
+    if "sampling" in which:
+        # frontier primitives vs their dense O(V) baselines + the
+        # sample-vs-train phase split; writes BENCH_sampling.json
+        from benchmarks import sampling_bench
+        sampling_bench.main(json_path="BENCH_sampling.json", smoke=smoke)
     print(f"# total bench time {time.time() - t0:.0f}s")
 
 

@@ -18,6 +18,7 @@ from repro.core.interface import (
     Sampler,
     SamplerSpec,
     build_block,
+    build_block_dense,
     double_caps,
     overflow_flags,
     pad_seeds,
@@ -46,7 +47,8 @@ from repro.core import samplers
 __all__ = [
     "CONVERGE", "LaborConfig", "LaborSampler", "LadiesConfig", "LadiesSampler",
     "LayerCaps", "SampledLayer", "Sampler", "SamplerSpec", "build_block",
-    "double_caps", "labor_sampler", "ladies_sampler", "layer_salts",
+    "build_block_dense", "double_caps", "labor_sampler", "ladies_sampler",
+    "layer_salts",
     "neighbor_sampler", "overflow_flags", "pad_seeds", "pladies_sampler",
     "sample_layer", "sample_layer_ladies", "sample_with_salts",
     "sampled_counts", "samplers", "suggest_caps",

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 
 from repro.core import rng as rng_lib
 from repro.core.cs_solve import _segment_sum
+from repro.ops import frontier as frontier_ops
 
 
 @jax.tree_util.register_dataclass
@@ -339,9 +340,9 @@ def _sample_jit(sampler: Sampler, graph, seeds, salts):
     return sampler.sample(graph, seeds, salts)
 
 
-def build_block(num_vertices: int, seeds: jax.Array, exp: dict,
-                include: jax.Array, inv_p: jax.Array,
-                caps: LayerCaps) -> SampledLayer:
+def build_block(seeds: jax.Array, exp: dict, include: jax.Array,
+                inv_p: jax.Array, caps: LayerCaps,
+                backend: Optional[str] = None) -> SampledLayer:
     """Shared epilogue of every sampler: from per-edge inclusion
     decisions over an expanded seed neighborhood to a finished
     :class:`SampledLayer`.
@@ -351,6 +352,13 @@ def build_block(num_vertices: int, seeds: jax.Array, exp: dict,
     included edges into the static edge buffer, builds ``next_seeds =
     [seeds ; sorted unique new srcs]``, maps sources to slots, and
     raises the overflow flag if any static cap was exceeded.
+
+    Every step runs on the frontier primitives (repro.ops.frontier), so
+    cost and peak memory are O(cap) — independent of the graph's vertex
+    count. The emitted block is bit-identical to the retained dense
+    baseline :func:`build_block_dense` (same inclusion set, same
+    ascending ``next_seeds`` order, same stable ``src_perm``), which is
+    what keeps the fused and partitioned parity suites exact.
     """
     S = seeds.shape[0]
     src, slot, mask = exp["src"], exp["seed_slot"], exp["mask"]
@@ -362,7 +370,73 @@ def build_block(num_vertices: int, seeds: jax.Array, exp: dict,
     weight_full = jnp.where(include, inv_p / jnp.maximum(w[safe_slot], 1e-20),
                             0.0)
 
-    # Compact sampled edges into the static edge_cap buffer.
+    # Compact sampled edges into the static edge_cap buffer
+    # (order-preserving, so edges stay dst-segment-contiguous).
+    sel, emask, num_sampled = frontier_ops.compact(include, caps.edge_cap,
+                                                   backend=backend)
+    e_src = jnp.where(emask, src[sel], -1)
+    e_dst_slot = jnp.where(emask, slot[sel], -1)
+    e_weight = jnp.where(emask, weight_full[sel], 0.0)
+
+    # next_seeds = [seeds ; sorted unique sampled srcs not already
+    # seeds] and the src -> next_seeds slot map, in one cap-bounded
+    # dedup instead of three dense V-sized membership/position buffers
+    new_cap = caps.vertex_cap - S
+    if new_cap <= 0:
+        raise ValueError("vertex_cap must exceed seed buffer size")
+    dd = frontier_ops.hash_dedup(e_src, emask, seeds, new_cap,
+                                 backend=backend)
+    next_seeds = jnp.concatenate([seeds.astype(jnp.int32), dd.new])
+    e_src_slot = jnp.where(emask, dd.slots, -1)
+
+    num_seeds = jnp.sum((seeds >= 0).astype(jnp.int32))
+    # transposed edge order (sorted by src_slot, padding last; stable,
+    # so ties keep the dst-sorted order) — precomputed once here rather
+    # than per backward pass (see SampledLayer.src_perm)
+    src_perm = frontier_ops.compact_perm(e_src_slot, emask,
+                                         caps.vertex_cap, backend=backend)
+    overflow = (
+        (exp["total"] > caps.expand_cap)
+        | (num_sampled > caps.edge_cap)
+        | dd.overflow
+    )
+    return SampledLayer(
+        seeds=seeds.astype(jnp.int32),
+        next_seeds=next_seeds,
+        src=e_src,
+        dst_slot=e_dst_slot,
+        src_slot=e_src_slot,
+        weight=e_weight,
+        edge_mask=emask,
+        src_perm=src_perm,
+        num_seeds=num_seeds,
+        num_next=num_seeds + dd.num_new,
+        num_edges=num_sampled,
+        overflow=overflow,
+    )
+
+
+def build_block_dense(num_vertices: int, seeds: jax.Array, exp: dict,
+                      include: jax.Array, inv_p: jax.Array,
+                      caps: LayerCaps) -> SampledLayer:
+    """The ORIGINAL dense epilogue, retained verbatim as the O(V)
+    baseline: three dense V-sized scatters (seed membership, sampled
+    membership, id→slot position map) plus a full argsort per layer.
+
+    Kept for two jobs: the benchmark baseline the BENCH_sampling.json
+    sample-phase comparison is measured against, and the bit-exactness
+    oracle of tests/test_frontier.py (``build_block`` must reproduce
+    this block field for field). Not used on any hot path.
+    """
+    S = seeds.shape[0]
+    src, slot, mask = exp["src"], exp["seed_slot"], exp["mask"]
+    safe_slot = jnp.clip(slot, 0, S - 1)
+
+    inv_p = jnp.where(include, inv_p, 0.0)
+    w = _segment_sum(inv_p, jnp.where(include, slot, -1), S)
+    weight_full = jnp.where(include, inv_p / jnp.maximum(w[safe_slot], 1e-20),
+                            0.0)
+
     num_sampled = jnp.sum(include.astype(jnp.int32))
     sel = jnp.nonzero(include, size=caps.edge_cap, fill_value=0)[0]
     emask = jnp.arange(caps.edge_cap) < jnp.minimum(num_sampled, caps.edge_cap)
@@ -370,7 +444,6 @@ def build_block(num_vertices: int, seeds: jax.Array, exp: dict,
     e_dst_slot = jnp.where(emask, slot[sel], -1)
     e_weight = jnp.where(emask, weight_full[sel], 0.0)
 
-    # next_seeds = [seeds ; sorted unique sampled srcs not already seeds]
     V = num_vertices
     seed_member = jnp.zeros((V,), jnp.bool_).at[jnp.where(seeds >= 0, seeds, 0)].set(
         seeds >= 0, mode="drop"
@@ -386,16 +459,12 @@ def build_block(num_vertices: int, seeds: jax.Array, exp: dict,
     new_vs = jnp.nonzero(new_member, size=new_cap, fill_value=-1)[0].astype(jnp.int32)
     next_seeds = jnp.concatenate([seeds.astype(jnp.int32), new_vs])
 
-    # src -> slot in next_seeds
     pos = jnp.full((V,), -1, jnp.int32).at[jnp.where(next_seeds >= 0, next_seeds, 0)].set(
         jnp.arange(caps.vertex_cap, dtype=jnp.int32), mode="drop"
     )
     e_src_slot = jnp.where(emask, pos[jnp.where(emask, e_src, 0)], -1)
 
     num_seeds = jnp.sum((seeds >= 0).astype(jnp.int32))
-    # transposed edge order (sorted by src_slot, padding last): stable
-    # argsort so ties keep the dst-sorted order — precomputed once here
-    # rather than per backward pass (see SampledLayer.src_perm)
     src_perm = jnp.argsort(
         jnp.where(emask, e_src_slot, caps.vertex_cap)).astype(jnp.int32)
     overflow = (

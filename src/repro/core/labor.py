@@ -8,9 +8,14 @@ notes at the end of §3.2 — and ``exact_k=True`` switches Poisson
 inclusion to sequential Poisson sampling (paper §A.3), which reproduces
 vanilla NS exactly in the uniform case.
 
-All per-vertex state (pi, membership, slot maps) is dense over V and
-therefore shards over the vertex-partition axis in the distributed path;
-per-edge state is segment-contiguous with static caps (see
+Per-vertex state is CAP-BOUNDED on the single-host path: the importance
+fixed point runs over the deduplicated candidate frontier (unique
+sources of the expanded neighborhood, via ``repro.ops.frontier``), and
+sequential Poisson selects per segment without a global sort — nothing
+in a ``sample`` trace allocates a V-sized buffer. Only the distributed
+partition-local mode (``axis_name``) keeps dense-V per-vertex state,
+because its cross-partition pmax needs one aligned layout on every
+device. Per-edge state is segment-contiguous with static caps (see
 repro/graph/csr.py::expand_seed_edges).
 """
 from __future__ import annotations
@@ -26,6 +31,7 @@ from repro.core.cs_solve import solve_cs, solve_cs_weighted
 from repro.core.interface import (LayerCaps, SampledLayer, Sampler,
                                   SamplerSpec, build_block)
 from repro.graph.csr import Graph, expand_seed_edges
+from repro.ops import frontier as frontier_ops
 
 CONVERGE = -1  # importance_iters value for LABOR-*
 
@@ -69,11 +75,13 @@ def run_importance_iterations(
     fast_solve: bool = True,
     num_vertices: Optional[int] = None,
     axis_name=None,
+    dense: Optional[bool] = None,
 ):
     """Fixed-point iterations on pi (eq. 18): pi_t <- pi_t * max_{t->s} c_s.
 
-    Returns (pi dense[V], c[S], e_t history placeholder). For
-    importance_iters == 0 this is a single c solve with uniform pi.
+    Returns (pi_e float32[expand_cap] — pi gathered per expanded edge,
+    c float32[S]). For importance_iters == 0 this is a single c solve
+    with uniform pi (no per-vertex state at all).
 
     ``fast_solve`` enables the post-fusion fast path: the closed-form
     uniform-pi solution for LABOR-0/NS and warm-started c solves across
@@ -81,33 +89,33 @@ def run_importance_iterations(
     cold-start iterative solver on every call — kept as the benchmark
     baseline and for solver cross-validation.
 
-    Inside the distributed engine's shard_map body each partition holds
-    only its owned seeds, so the eq. 18 max over destinations is
-    completed with a cross-partition ``pmax`` (``axis_name``). Because
-    max commutes exactly in floating point, the resulting dense pi — and
-    hence every inclusion decision — is bit-identical to the
-    single-device trace; c_s solves stay partition-local (per-seed).
-    ``num_vertices`` overrides the dense-state size with the GLOBAL
-    vertex count when ``graph`` is a partition-local CSR.
+    Per-vertex pi state lives on the deduplicated CANDIDATE frontier
+    (unique expanded sources — cap-bounded), not on a dense V vector:
+    the eq. 18 update multiplies each vertex's pi by exactly the same
+    factor sequence either way (the scatter-max is order-free), so the
+    candidate-frontier fixed point is bit-identical per vertex to the
+    retained dense layout.
+
+    ``dense=True`` (forced, or implied by ``axis_name``) keeps the
+    original dense-V layout: inside the distributed engine's shard_map
+    body each partition holds only its owned seeds, and the eq. 18 max
+    over destinations is completed with a cross-partition ``pmax``
+    that needs one aligned per-vertex layout on every device. Because
+    max commutes exactly in floating point, the resulting pi — and
+    hence every inclusion decision — matches the single-device trace;
+    c_s solves stay partition-local (per-seed). ``num_vertices``
+    overrides the dense-state size with the GLOBAL vertex count when
+    ``graph`` is a partition-local CSR.
     """
-    V = num_vertices if num_vertices is not None else graph.num_vertices
+    if dense is None:
+        dense = axis_name is not None
     src, slot, mask, deg = exp["src"], exp["seed_slot"], exp["mask"], exp["deg"]
+    E = src.shape[0]
 
-    def c_of(pi, c_prev=None):
-        pi_e = pi[jnp.where(mask, src, 0)]
-        return solve_cs(pi_e, slot, deg, k, num_seeds, mask,
-                        c_init=c_prev if fast_solve else None)
-
-    def fac_of(c):
-        fac = _scatter_max_c(c[jnp.clip(slot, 0, num_seeds - 1)], src, mask, V)
-        if axis_name is not None:
-            fac = jax.lax.pmax(fac, axis_name)
-        return fac
-
-    pi = jnp.ones((V,), jnp.float32)
     if importance_iters == 0:
+        pi_e = jnp.ones((E,), jnp.float32)
         if not fast_solve:
-            return pi, c_of(pi)
+            return pi_e, solve_cs(pi_e, slot, deg, k, num_seeds, mask)
         # Uniform pi: eq. 14 reduces to d / min(1, c) = d^2 / k, i.e. the
         # closed form c = k/d for k < d and c = 1 (max 1/pi) otherwise —
         # the exact fixed point solve_cs iterates toward (see
@@ -121,7 +129,37 @@ def run_importance_iterations(
                       jnp.where(kf >= degf, 1.0,
                                 kf / jnp.maximum(degf, 1.0)),
                       0.0)
-        return pi, c
+        return pi_e, c
+
+    if dense:
+        V = num_vertices if num_vertices is not None else graph.num_vertices
+        gather = jnp.where(mask, src, 0)
+
+        def fac_of(c):
+            fac = _scatter_max_c(c[jnp.clip(slot, 0, num_seeds - 1)], src,
+                                 mask, V)
+            if axis_name is not None:
+                fac = jax.lax.pmax(fac, axis_name)
+            return fac
+
+        pi0 = jnp.ones((V,), jnp.float32)
+    else:
+        # candidate frontier: one slot per unique expanded source; the
+        # gather/scatter target is cap-bounded and V never appears
+        dd = frontier_ops.hash_dedup(src, mask, None, E)
+        cidx = jnp.where(mask, dd.slots, E)
+
+        def fac_of(c):
+            c_e = jnp.where(mask, c[jnp.clip(slot, 0, num_seeds - 1)], 0.0)
+            return jnp.zeros((E + 1,), jnp.float32).at[cidx].max(
+                c_e, mode="drop")[:E]
+
+        gather = jnp.clip(cidx, 0, E - 1)
+        pi0 = jnp.ones((E,), jnp.float32)
+
+    def c_of(pi, c_prev=None):
+        return solve_cs(pi[gather], slot, deg, k, num_seeds, mask,
+                        c_init=c_prev if fast_solve else None)
 
     def one_step(pi, c_prev=None):
         c = c_of(pi, c_prev)
@@ -130,10 +168,10 @@ def run_importance_iterations(
         return pi_new, c
 
     if importance_iters > 0:
-        c = None
+        pi, c = pi0, None
         for _ in range(importance_iters):
             pi, c = one_step(pi, c)
-        return pi, c_of(pi, c)
+        return pi[gather], c_of(pi, c)
 
     # LABOR-*: iterate until relative change in E[|T|] < tol (paper §4.3).
     def cost(pi, c):
@@ -155,19 +193,36 @@ def run_importance_iterations(
         *_, rel, i = state
         return (i < converge_max_iters) & ((i < 2) | (rel > converge_tol))
 
-    c0 = c_of(pi)
+    c0 = c_of(pi0)
     pi, c, _, _, _ = jax.lax.while_loop(
         cond, body,
-        (pi, c0, cost(pi, c0), jnp.float32(jnp.inf), jnp.int32(0))
+        (pi0, c0, cost(pi0, c0), jnp.float32(jnp.inf), jnp.int32(0))
     )
-    return pi, c_of(pi, c)
+    return pi[gather], c_of(pi, c)
 
 
 def _exact_k_include(r, slot, mask, deg, seg_start, k, num_seeds, expand_cap):
     """Sequential Poisson (§A.3): per segment take the min(k, d) smallest r.
 
-    r is already divided by (c_s * pi_t) by the caller.
+    r is already divided by (c_s * pi_t) by the caller. Runs on the
+    ``segment_select`` frontier primitive — one cap-bounded threshold
+    pass instead of the global O(E log E) lexsort (retained below as
+    the benchmark baseline / bit-exactness oracle).
     """
+    del expand_cap  # the selection is cap-bounded by construction
+    keys = jnp.minimum(r, 1e30)
+    kk = jnp.broadcast_to(jnp.asarray(k, jnp.int32), (num_seeds,))
+    take = jnp.minimum(kk, deg)
+    return frontier_ops.segment_select(keys, slot, mask, seg_start, take,
+                                       num_seeds, int(k))
+
+
+def _exact_k_include_dense(r, slot, mask, deg, seg_start, k, num_seeds,
+                           expand_cap):
+    """The ORIGINAL global-lexsort sequential Poisson, retained verbatim
+    as the O(E log E) benchmark baseline and the oracle
+    tests/test_frontier.py checks ``segment_select`` against bit for
+    bit. Not used on any hot path."""
     big = jnp.float32(3.4e38)
     key_sorted = jnp.where(mask, jnp.minimum(r, 1e30), big)
     slot_for_sort = jnp.where(mask, slot, num_seeds)
@@ -210,26 +265,22 @@ def sample_layer(
     the eq. 18 importance max is completed across partitions over
     ``axis_name``."""
     S = seeds.shape[0]
-    V = num_vertices if num_vertices is not None else graph.num_vertices
     exp = expand_seed_edges(graph, seeds, caps.expand_cap,
                             seed_rows=seed_rows)
     src, slot, mask, deg = exp["src"], exp["seed_slot"], exp["mask"], exp["deg"]
-    safe_src = jnp.where(mask, src, 0)
     safe_slot = jnp.clip(slot, 0, S - 1)
 
     if graph.weights is None:
-        pi, c = run_importance_iterations(
+        pi_e, c = run_importance_iterations(
             graph, exp, k, S, importance_iters, converge_tol,
             converge_max_iters, fast_solve=fast_solve,
-            num_vertices=V, axis_name=axis_name,
+            num_vertices=num_vertices, axis_name=axis_name,
         )
-        pi_e = pi[safe_src]
     else:
         # weighted case (§A.7): per-edge pi initialised to A_ts
         a_e = exp["edge_weight"]
         pi_e = jnp.where(mask, a_e, 1.0)
         c = solve_cs_weighted(pi_e, a_e, slot, deg, k, S, mask)
-        pi = None
 
     # Inclusion: r < c_s * pi_t with shared-per-vertex r (LABOR) or
     # per-edge r (NS equivalence).
@@ -248,7 +299,7 @@ def sample_layer(
 
     # Hajek normalization + edge compaction + next_seeds construction is
     # the epilogue every sampler shares (core.interface.build_block).
-    return build_block(V, seeds, exp, include,
+    return build_block(seeds, exp, include,
                        1.0 / jnp.maximum(prob, 1e-20), caps)
 
 

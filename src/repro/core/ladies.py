@@ -18,6 +18,15 @@ Randomness is salt-based (stateless hashes of a per-layer uint32 salt,
 see repro.core.rng), the same scheme as the LABOR family — so both
 samplers trace inside the fused one-program train step and the
 standalone path stays bit-identical to the fused path.
+
+The single-host path keeps every per-vertex quantity on the CANDIDATE
+frontier — the deduplicated sources of the expanded neighborhood
+(``repro.ops.frontier.hash_dedup``) — so column norms, the water-fill,
+and the inverse-CDF draws (``masked_cdf_draw``) are all cap-bounded:
+no dense-V probability vector, no dense-V CDF. Only the distributed
+partition-local mode (``axis_name``) keeps the dense layout, because
+its cross-partition ``psum`` needs one aligned per-vertex vector on
+every device.
 """
 from __future__ import annotations
 
@@ -31,15 +40,27 @@ from repro.core import rng as rng_lib
 from repro.core.interface import (LayerCaps, SampledLayer, Sampler,
                                   SamplerSpec, build_block)
 from repro.graph.csr import Graph, expand_seed_edges
+from repro.ops import frontier as frontier_ops
 
 
-def _layer_probs(graph: Graph, exp: dict, num_vertices: int) -> jax.Array:
-    """p_t ∝ sum_{s} A_ts^2 / d_s^2 over dense V (0 outside N(S))."""
-    src, slot, mask, deg = exp["src"], exp["seed_slot"], exp["mask"], exp["deg"]
+def _edge_contrib(exp: dict) -> jax.Array:
+    """Per expanded edge: A_ts^2 / d_s^2 (the column-norm term each
+    edge contributes to its source's p_t)."""
+    slot, mask, deg = exp["seed_slot"], exp["mask"], exp["deg"]
     degf = jnp.maximum(deg.astype(jnp.float32), 1.0)
     contrib = jnp.where(mask, 1.0 / degf[jnp.clip(slot, 0, deg.shape[0] - 1)] ** 2, 0.0)
     if exp.get("edge_weight") is not None:
         contrib = contrib * jnp.where(mask, exp["edge_weight"] ** 2, 0.0)
+    return contrib
+
+
+def _layer_probs(graph: Graph, exp: dict, num_vertices: int) -> jax.Array:
+    """p_t ∝ sum_{s} A_ts^2 / d_s^2 over dense V (0 outside N(S)) —
+    the distributed layout (one aligned vector per device for the
+    cross-partition psum) and the oracle the candidate-frontier path
+    is tested against."""
+    src, mask = exp["src"], exp["mask"]
+    contrib = _edge_contrib(exp)
     p = jnp.zeros((num_vertices,), jnp.float32).at[jnp.where(mask, src, 0)].add(
         jnp.where(mask, contrib, 0.0), mode="drop"
     )
@@ -83,47 +104,73 @@ def sample_layer_ladies(
     seed_rows: Optional[jax.Array] = None,
     num_vertices: Optional[int] = None,
     axis_name=None,
+    dense: Optional[bool] = None,
 ) -> SampledLayer:
     """One LADIES/PLADIES layer from a uint32 ``salt`` (fully traceable).
+
+    Per-vertex state (column norms p_t, water-filled pi, the CDF) lives
+    on the candidate frontier — the deduplicated expanded sources, a
+    cap-bounded buffer — and the random draws hash GLOBAL vertex ids,
+    so the sampled set is the same one the retained dense layout
+    (``dense=True``) produces.
 
     In the distributed engine's partition-local mode (``seed_rows``/
     ``num_vertices``/``axis_name``, see ``Sampler.sample_layer_partitioned``)
     each partition contributes its owned seeds' column-norm terms and a
-    cross-partition ``psum`` completes the batch-global p_t; the draws
-    themselves hash dense global vertex ids, so every partition keeps an
-    identical view of the sampled layer."""
-    S = seeds.shape[0]
-    V = num_vertices if num_vertices is not None else graph.num_vertices
+    cross-partition ``psum`` completes the batch-global p_t; that psum
+    needs one aligned per-vertex vector on every device, so the
+    distributed mode keeps the dense layout."""
+    if dense is None:
+        dense = axis_name is not None
     exp = expand_seed_edges(graph, seeds, caps.expand_cap,
                             seed_rows=seed_rows)
     src, slot, mask = exp["src"], exp["seed_slot"], exp["mask"]
     safe_src = jnp.where(mask, src, 0)
 
-    p = _layer_probs(graph, exp, V)
-    if axis_name is not None:
-        p = jax.lax.psum(p, axis_name)
+    if dense:
+        V = num_vertices if num_vertices is not None else graph.num_vertices
+        p = _layer_probs(graph, exp, V)
+        if axis_name is not None:
+            p = jax.lax.psum(p, axis_name)
+        ids = jnp.arange(V)
+        valid = p > 0
+        eidx = safe_src          # per-edge index into the dense layout
+    else:
+        # candidate frontier: every distinct expanded source, ascending
+        # (cap-bounded by the expand buffer — never dense over V)
+        E = src.shape[0]
+        dd = frontier_ops.hash_dedup(src, mask, None, E)
+        cands, cidx = dd.new, jnp.where(mask, dd.slots, 0)
+        contrib = _edge_contrib(exp)
+        p = jnp.zeros((E + 1,), jnp.float32).at[
+            jnp.where(mask, cidx, E)].add(
+            jnp.where(mask, contrib, 0.0), mode="drop")[:E]
+        ids = jnp.where(cands >= 0, cands, -1)
+        valid = (cands >= 0) & (p > 0)
+        eidx = cidx
 
     if poisson:
         lam = _waterfill_lambda(p, n)
         pi = jnp.minimum(1.0, lam * p)                      # sum pi = n
-        r = rng_lib.hash_uniform(salt, jnp.arange(V))
-        member = (r < pi) & (p > 0)
+        r = rng_lib.hash_uniform(salt, ids)
+        member = (r < pi) & valid
         inv_pi = jnp.where(member, 1.0 / jnp.maximum(pi, 1e-20), 0.0)
     else:
-        # n draws with replacement via inverse CDF, deduplicated.
-        total = jnp.maximum(jnp.sum(p), 1e-20)
-        cdf = jnp.cumsum(p / total)
+        # n draws with replacement via inverse CDF, deduplicated. The
+        # CDF is normalized by its own final value and the draws are
+        # clipped, so float32 accumulation error can never index out of
+        # range (masked_cdf_draw), whatever the weight spread.
+        total = jnp.maximum(jnp.sum(jnp.where(valid, p, 0.0)), 1e-20)
         u = rng_lib.hash_uniform(salt, jnp.arange(n))
-        draws = jnp.searchsorted(cdf, u).astype(jnp.int32)
-        draws = jnp.clip(draws, 0, V - 1)
-        member = jnp.zeros((V,), jnp.bool_).at[draws].set(True)
-        member = member & (p > 0)
+        draws = frontier_ops.masked_cdf_draw(p, valid, u)
+        member = jnp.zeros(p.shape, jnp.bool_).at[draws].set(True)
+        member = member & valid
         # reference-impl weights: 1/(n * p_t) as if HT, then row-normalize
         inv_pi = jnp.where(member, total / jnp.maximum(p * n, 1e-20), 0.0)
 
     # block edges: every edge t->s with t sampled
-    include = mask & member[safe_src]
-    return build_block(V, seeds, exp, include, inv_pi[safe_src], caps)
+    include = mask & member[eidx]
+    return build_block(seeds, exp, include, inv_pi[eidx], caps)
 
 
 @dataclasses.dataclass(frozen=True)

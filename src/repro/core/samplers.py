@@ -70,8 +70,7 @@ class FullSampler(Sampler):
         for caps in self.spec.caps:
             exp = expand_seed_edges(graph, cur, caps.expand_cap)
             inv_p = jnp.ones((caps.expand_cap,), jnp.float32)  # p_ts = 1
-            blk = build_block(graph.num_vertices, cur, exp, exp["mask"],
-                              inv_p, caps)
+            blk = build_block(cur, exp, exp["mask"], inv_p, caps)
             blocks.append(blk)
             cur = blk.next_seeds
         return blocks
@@ -85,7 +84,8 @@ class FullSampler(Sampler):
         exp = expand_seed_edges(graph, seeds, caps.expand_cap,
                                 seed_rows=seed_rows)
         inv_p = jnp.ones((caps.expand_cap,), jnp.float32)
-        return build_block(num_vertices, seeds, exp, exp["mask"], inv_p, caps)
+        del num_vertices  # the cap-bounded epilogue no longer needs V
+        return build_block(seeds, exp, exp["mask"], inv_p, caps)
 
 
 class UnknownSamplerError(ValueError):

@@ -84,11 +84,13 @@ def exchange_features(local_feats: jax.Array, ids: jax.Array, axis_name: str,
     req_ids, req_pos, overflow = request_layout(ids, P, per_peer_cap, V_local,
                                                 owner_mode=owner_mode)
 
-    # send my requests to owners; receive others' requests for my rows
+    # send my requests to owners; receive others' requests for my rows;
+    # take-with-fill serves the empty request slots (-1) without
+    # reading a feature row for them
     incoming = jax.lax.all_to_all(req_ids[None], axis_name, split_axis=1,
                                   concat_axis=0, tiled=False)[:, 0]  # (P, cap)
-    rows = jnp.where(incoming >= 0, incoming, 0)
-    resp = local_feats[rows] * (incoming >= 0)[..., None].astype(local_feats.dtype)
+    resp = jnp.take(local_feats, incoming, axis=0, mode="fill",
+                    fill_value=0)
     # send responses back
     back = jax.lax.all_to_all(resp[None], axis_name, split_axis=1,
                               concat_axis=0, tiled=False)[:, 0]  # (P, cap, F)

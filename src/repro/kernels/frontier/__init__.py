@@ -1,0 +1,26 @@
+"""Frontier primitives — the O(cap) sampling data-motion family.
+
+Four primitives (plus the ``compact_perm`` face of stream compaction)
+replace every O(V)/O(E log E) step of the per-layer sampling epilogue
+with cap-bounded work:
+
+  * ``hash_dedup``      — unique new vertices + a value→slot lookup,
+                          replacing the three dense V-sized membership /
+                          position buffers of the old ``build_block``.
+  * ``compact``         — order-preserving stream compaction of included
+                          edges into the static edge buffer.
+  * ``compact_perm``    — the stable by-key permutation (the SpMM
+                          backward's ``src_perm``) as a counting sort
+                          instead of a full argsort.
+  * ``segment_select``  — per-segment smallest-k selection for
+                          sequential Poisson (§A.3) without the global
+                          lexsort.
+  * ``masked_cdf_draw`` — LADIES' inverse-CDF draw as one cap-bounded
+                          pass, robust to float32 cumsum error.
+
+``ref.py`` holds the XLA reference semantics (sorts and scans over
+cap-sized buffers — never over V); ``frontier.py`` the Pallas TPU
+kernels (serial VMEM hash table / scans); ``ops.py`` the jit'd kernel
+wrappers. Dispatch between them goes through the graph-ops backend
+registry (``repro.ops.frontier``).
+"""

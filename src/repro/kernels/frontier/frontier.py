@@ -1,0 +1,326 @@
+"""Pallas TPU kernels for the frontier primitives.
+
+These are data-motion kernels, not matmul kernels: the whole working
+set (cap-bounded edge/vertex buffers) lives in VMEM and each kernel is
+a single grid step running a serial scan with scalar reads/writes —
+the TPU analogue of the single-threaded hash/compaction passes DGL runs
+on the CPU side. That trades lane parallelism for strict O(cap) work
+and memory:
+
+  * ``_dedup_kernel``      — linear-probe insertion into a VMEM hash
+                             table (seeds first, then candidates); new
+                             values stream to the output in insertion
+                             order (the wrapper sorts the cap-sized
+                             result to the ascending contract).
+  * ``_lookup_kernel``     — rebuild the value→slot table from the
+                             finished ``next_seeds`` and probe once per
+                             edge.
+  * ``_compact_kernel``    — serial stream compaction (prefix positions
+                             by a running counter).
+  * ``_perm_kernel``       — stable counting sort over the bounded key
+                             range (histogram → exclusive scan →
+                             placement), replacing the argsort.
+  * ``_select_kernel``     — per-segment smallest-k via an insertion
+                             buffer of the static fanout size, one
+                             threshold/tie pass (sequential Poisson).
+  * ``_search_kernel``     — per-draw binary search over a VMEM CDF.
+
+All kernels keep exact integer semantics — the wrappers in ops.py are
+bit-compatible with kernels/frontier/ref.py on the contractual outputs
+(see ref.py's notes; on hash-table give-up only the overflow flag is
+contractual). Probing never spins: the wrapper sizes the table at
+>= 2x occupancy, and a probe bound surfaces give-up as overflow into
+the existing doubled-caps replay protocol.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+_HASH_MULT = 2654435761  # Knuth multiplicative hash
+
+
+def _hash_slot(v, table_cap: int):
+    """Initial probe slot for value v in a pow2-sized table."""
+    h = v.astype(jnp.uint32) * jnp.uint32(_HASH_MULT)
+    return (h & jnp.uint32(table_cap - 1)).astype(jnp.int32)
+
+
+def _probe(table_ref, v, table_cap: int):
+    """Linear probe for value ``v``: returns (slot, gave_up) where slot
+    holds either ``v`` or -1 (insertion point). Bounded by the table
+    size, so a pathological fill degrades to a flagged give-up, never a
+    spin."""
+    j0 = _hash_slot(v, table_cap)
+
+    def cond(st):
+        j, steps, cur = st
+        return (cur != v) & (cur != -1) & (steps < table_cap)
+
+    def body(st):
+        j, steps, cur = st
+        j2 = (j + 1) & (table_cap - 1)
+        return j2, steps + 1, table_ref[j2, 0]
+
+    j, _, cur = jax.lax.while_loop(cond, body,
+                                   (j0, jnp.int32(0), table_ref[j0, 0]))
+    return j, (cur != v) & (cur != -1)
+
+
+def dedup_kernel(values_ref, mask_ref, seeds_ref, new_ref, cnt_ref,
+                 flag_ref, table_ref):
+    """Phase 1 of hash_dedup: insert seeds, then stream candidates;
+    first-seen new values land in ``new_ref`` in insertion order."""
+    E = values_ref.shape[0]
+    S = seeds_ref.shape[0]
+    tc = table_ref.shape[0]
+    new_cap = new_ref.shape[0]
+    table_ref[...] = jnp.full(table_ref.shape, -1, jnp.int32)
+    new_ref[...] = jnp.full(new_ref.shape, -1, jnp.int32)
+    cnt_ref[0, 0] = jnp.int32(0)
+    flag_ref[0, 0] = jnp.int32(0)
+
+    def seed_body(i, _):
+        v = seeds_ref[i, 0]
+
+        @pl.when(v >= 0)
+        def _():
+            j, gave_up = _probe(table_ref, v, tc)
+
+            @pl.when(gave_up)
+            def _():
+                flag_ref[0, 0] = jnp.int32(1)
+
+            @pl.when(~gave_up & (table_ref[j, 0] == -1))
+            def _():
+                table_ref[j, 0] = v
+
+        return 0
+
+    jax.lax.fori_loop(0, S, seed_body, 0)
+
+    def val_body(e, _):
+        v = values_ref[e, 0]
+
+        @pl.when((mask_ref[e, 0] != 0) & (v >= 0))
+        def _():
+            j, gave_up = _probe(table_ref, v, tc)
+
+            @pl.when(gave_up)
+            def _():
+                flag_ref[0, 0] = jnp.int32(1)
+
+            @pl.when(~gave_up & (table_ref[j, 0] == -1))
+            def _():
+                table_ref[j, 0] = v
+                c = cnt_ref[0, 0]
+
+                @pl.when(c < new_cap)
+                def _():
+                    new_ref[c, 0] = v
+
+                cnt_ref[0, 0] = c + 1
+
+        return 0
+
+    jax.lax.fori_loop(0, E, val_body, 0)
+
+
+def lookup_kernel(next_ref, values_ref, mask_ref, slots_ref, table_ref,
+                  slot_tbl_ref):
+    """Phase 2 of hash_dedup: table ``next_seeds`` value→slot, then one
+    probe per edge (-1 where masked, negative, or absent)."""
+    T = next_ref.shape[0]
+    E = values_ref.shape[0]
+    tc = table_ref.shape[0]
+    table_ref[...] = jnp.full(table_ref.shape, -1, jnp.int32)
+    slot_tbl_ref[...] = jnp.full(slot_tbl_ref.shape, -1, jnp.int32)
+
+    def ins_body(i, _):
+        v = next_ref[i, 0]
+
+        @pl.when(v >= 0)
+        def _():
+            j, gave_up = _probe(table_ref, v, tc)
+
+            @pl.when(~gave_up & (table_ref[j, 0] == -1))
+            def _():
+                table_ref[j, 0] = v
+                slot_tbl_ref[j, 0] = i
+
+        return 0
+
+    jax.lax.fori_loop(0, T, ins_body, 0)
+
+    def look_body(e, _):
+        v = values_ref[e, 0]
+        ok = (mask_ref[e, 0] != 0) & (v >= 0)
+
+        @pl.when(ok)
+        def _():
+            j, gave_up = _probe(table_ref, v, tc)
+            found = ~gave_up & (table_ref[j, 0] == v)
+            slots_ref[e, 0] = jnp.where(found, slot_tbl_ref[j, 0], -1)
+
+        @pl.when(~ok)
+        def _():
+            slots_ref[e, 0] = jnp.int32(-1)
+
+        return 0
+
+    jax.lax.fori_loop(0, E, look_body, 0)
+
+
+def compact_kernel(flags_ref, sel_ref, num_ref):
+    """Serial stream compaction: sel[c] = index of the c-th set flag
+    (0-filled past the end, matching ``jnp.nonzero(size=, fill=0)``)."""
+    E = flags_ref.shape[0]
+    cap = sel_ref.shape[0]
+    sel_ref[...] = jnp.zeros(sel_ref.shape, jnp.int32)
+    num_ref[0, 0] = jnp.int32(0)
+
+    def body(e, _):
+        @pl.when(flags_ref[e, 0] != 0)
+        def _():
+            c = num_ref[0, 0]
+
+            @pl.when(c < cap)
+            def _():
+                sel_ref[c, 0] = e
+
+            num_ref[0, 0] = c + 1
+
+        return 0
+
+    jax.lax.fori_loop(0, E, body, 0)
+
+
+def perm_kernel(keys_ref, perm_ref, hist_ref):
+    """Stable counting sort of bounded integer keys (already shifted to
+    [0, K) by the wrapper): histogram, serial exclusive scan, then
+    in-order placement — O(E + K) instead of O(E log E)."""
+    E = keys_ref.shape[0]
+    K = hist_ref.shape[0]
+    hist_ref[...] = jnp.zeros(hist_ref.shape, jnp.int32)
+
+    def count_body(e, _):
+        k = keys_ref[e, 0]
+        hist_ref[k, 0] = hist_ref[k, 0] + 1
+        return 0
+
+    jax.lax.fori_loop(0, E, count_body, 0)
+
+    def scan_body(k, acc):
+        c = hist_ref[k, 0]
+        hist_ref[k, 0] = acc
+        return acc + c
+
+    jax.lax.fori_loop(0, K, scan_body, jnp.int32(0))
+
+    def place_body(e, _):
+        k = keys_ref[e, 0]
+        o = hist_ref[k, 0]
+        perm_ref[o, 0] = e
+        hist_ref[k, 0] = o + 1
+        return 0
+
+    jax.lax.fori_loop(0, E, place_body, 0)
+
+
+def select_kernel(keys_ref, slot_ref, take_ref, inc_ref, buf_ref,
+                  thresh_ref, budget_ref):
+    """Per-segment smallest-k over segment-contiguous edges.
+
+    Pass 1 streams edges through a k-sized sorted insertion buffer
+    (k = static max fanout; ``take[s] <= k``), finalizing each segment
+    into (threshold = take-th smallest key, tie budget = take - #below).
+    Pass 2 re-streams edges: include iff key < threshold, or key ==
+    threshold and the running per-segment tie rank is within budget —
+    exactly the stable smallest-take set.
+    """
+    E = keys_ref.shape[0]
+    S = thresh_ref.shape[0]
+    k = buf_ref.shape[0]
+    BIG = jnp.float32(3.4e38)
+    idx = jax.lax.broadcasted_iota(jnp.int32, (k, 1), 0)
+    thresh_ref[...] = jnp.full(thresh_ref.shape, BIG, jnp.float32)
+    budget_ref[...] = jnp.zeros(budget_ref.shape, jnp.int32)
+    buf_ref[...] = jnp.full(buf_ref.shape, BIG, jnp.float32)
+
+    def finalize(s):
+        @pl.when(s >= 0)
+        def _():
+            b = buf_ref[...]
+            t = jnp.clip(take_ref[s, 0], 0, k)
+            # t-th smallest (BIG when the segment holds < t edges:
+            # everything present is then included, matching the rank
+            # filter on a truncated — and overflow-flagged — buffer).
+            # t == 0 leaves T = 0.0 with budget 0: keys are
+            # non-negative, so nothing passes `< T` or the tie budget —
+            # select-none, matching the reference.
+            T = jnp.sum(jnp.where(idx == t - 1, b, 0.0))
+            thresh_ref[s, 0] = T
+            budget_ref[s, 0] = t - jnp.sum((b < T).astype(jnp.int32))
+
+    def pass1(e, prev):
+        s = slot_ref[e, 0]
+
+        @pl.when(s != prev)
+        def _():
+            finalize(prev)
+            buf_ref[...] = jnp.full(buf_ref.shape, BIG, jnp.float32)
+
+        @pl.when(s >= 0)
+        def _():
+            b = buf_ref[...]
+            x = keys_ref[e, 0]
+            pos = jnp.sum((b <= x).astype(jnp.int32))
+            down = jnp.concatenate([b[:1], b[: k - 1]], axis=0)
+            buf_ref[...] = jnp.where(idx < pos, b,
+                                     jnp.where(idx == pos, x, down))
+
+        return s
+
+    last = jax.lax.fori_loop(0, E, pass1, jnp.int32(-2))
+    finalize(last)
+
+    def pass2(e, st):
+        prev, eqc = st
+        s = slot_ref[e, 0]
+        eqc = jnp.where(s != prev, jnp.int32(0), eqc)
+        cs = jnp.clip(s, 0, S - 1)
+        T = thresh_ref[cs, 0]
+        x = keys_ref[e, 0]
+        is_eq = (x == T) & (s >= 0)
+        inc = (s >= 0) & ((x < T) | (is_eq & (eqc < budget_ref[cs, 0])))
+        inc_ref[e, 0] = inc.astype(jnp.int32)
+        return s, eqc + is_eq.astype(jnp.int32)
+
+    jax.lax.fori_loop(0, E, pass2, (jnp.int32(-2), jnp.int32(0)))
+
+
+def search_kernel(cdf_ref, u_ref, out_ref):
+    """Per-draw binary search: first index with cdf >= u (searchsorted
+    'left'), clipped into the buffer."""
+    C = cdf_ref.shape[0]
+    n = u_ref.shape[0]
+
+    def body(i, _):
+        t = u_ref[i, 0]
+
+        def cond(st):
+            lo, hi = st
+            return lo < hi
+
+        def bd(st):
+            lo, hi = st
+            mid = (lo + hi) // 2
+            ge = cdf_ref[mid, 0] >= t
+            return jnp.where(ge, lo, mid + 1), jnp.where(ge, mid, hi)
+
+        lo, _ = jax.lax.while_loop(cond, bd, (jnp.int32(0), jnp.int32(C)))
+        out_ref[i, 0] = jnp.clip(lo, 0, C - 1)
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)

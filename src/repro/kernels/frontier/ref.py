@@ -1,0 +1,210 @@
+"""XLA reference semantics of the frontier primitives.
+
+Every function here is the oracle its Pallas counterpart is tested
+against, and the ``"xla"`` backend's implementation. The defining
+property of the family: no operand or intermediate is sized by the
+graph's vertex count — everything is bounded by the static caps of the
+sampled block (sorts/scans over cap-sized buffers are fine; dense
+``V``-sized membership arrays are not).
+
+Bit-compatibility contracts (relied on by the sampler parity suites):
+
+  * ``hash_dedup`` returns the unique new values in ASCENDING order —
+    the same order the old dense-membership ``jnp.nonzero`` scan
+    produced — so ``next_seeds`` keeps its ``[seeds ; sorted new]``
+    layout and the distributed engine's per-partition frontiers stay
+    bit-identical to the single-device trace.
+  * ``compact`` preserves arrival order (exactly ``jnp.nonzero``).
+  * ``compact_perm`` is a STABLE by-key ordering (ties keep arrival
+    order), matching the stable argsort it replaces.
+  * ``segment_select`` picks per segment the ``take`` smallest
+    (key, index) pairs — the same set a stable lexsort rank-filter
+    selects — via a 31-step bit-bisection on the monotone int32 view
+    of the non-negative float keys (31 O(E) passes, no sort).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+_INT_MAX = jnp.int32(2**31 - 1)
+
+
+class DedupResult(NamedTuple):
+    """Output of :func:`hash_dedup`.
+
+    new:      int32[new_cap] unique new values, ascending, -1 pad.
+    slots:    int32[E] index of values[e] in ``[seeds ; new]`` (just
+              ``new`` when no seeds were given); -1 where masked or
+              where the value was dropped by a full ``new`` buffer.
+    num_new:  int32[] true count of distinct new values (may exceed
+              new_cap; exact on the XLA backend, saturating on a
+              table-full Pallas give-up).
+    overflow: bool[] num_new > new_cap (or the hash table gave up).
+    """
+    new: jax.Array
+    slots: jax.Array
+    num_new: jax.Array
+    overflow: jax.Array
+
+
+def _seed_member(values: jax.Array, valid: jax.Array,
+                 seeds: jax.Array) -> jax.Array:
+    """bool[E]: values[e] appears among the valid entries of seeds."""
+    S = seeds.shape[0]
+    sseeds = jnp.sort(jnp.where(seeds >= 0, seeds, _INT_MAX))
+    j = jnp.clip(jnp.searchsorted(sseeds, values), 0, S - 1)
+    return valid & (sseeds[j] == values)
+
+
+def hash_dedup(values: jax.Array, mask: jax.Array,
+               seeds: Optional[jax.Array], new_cap: int) -> DedupResult:
+    """Deduplicate masked ``values`` against ``seeds`` (unique ids,
+    -1 pad) and build the value→slot lookup of ``[seeds ; new]``.
+
+    The XLA reference realizes the hash-table semantics with cap-bounded
+    sorts: O(E log E + (S + new_cap) log(...)) work, zero V-sized state.
+    ``seeds`` must not contain duplicate valid ids (every caller's seed
+    buffers are unique by construction).
+    """
+    E = values.shape[0]
+    valid = mask & (values >= 0)
+    if seeds is not None:
+        valid_new = valid & ~_seed_member(values, valid, seeds)
+    else:
+        valid_new = valid
+
+    # unique new values, ascending: sort with INT_MAX padding, keep
+    # first-of-run, compact by prefix-sum position (smallest new_cap
+    # survive a full buffer — same truncation as the dense nonzero scan)
+    sc = jnp.sort(jnp.where(valid_new, values, _INT_MAX))
+    uniq = (sc != _INT_MAX) & jnp.concatenate(
+        [jnp.ones((1,), bool), sc[1:] != sc[:-1]])
+    num_new = jnp.sum(uniq.astype(jnp.int32))
+    pos = jnp.cumsum(uniq.astype(jnp.int32)) - 1
+    tgt = jnp.where(uniq & (pos < new_cap), pos, new_cap)
+    new = jnp.full((new_cap + 1,), -1, jnp.int32).at[tgt].set(
+        jnp.where(uniq, sc, -1).astype(jnp.int32), mode="drop")[:-1]
+
+    # value -> slot in [seeds ; new] via one sorted lookup table
+    if seeds is not None:
+        tbl = jnp.concatenate([jnp.where(seeds >= 0, seeds, _INT_MAX),
+                               jnp.where(new >= 0, new, _INT_MAX)])
+    else:
+        tbl = jnp.where(new >= 0, new, _INT_MAX)
+    order = jnp.argsort(tbl).astype(jnp.int32)
+    tv = tbl[order]
+    j = jnp.clip(jnp.searchsorted(tv, values), 0, tv.shape[0] - 1)
+    found = valid & (tv[j] == values)
+    slots = jnp.where(found, order[j], -1)
+
+    return DedupResult(new=new, slots=slots,
+                       num_new=num_new, overflow=num_new > new_cap)
+
+
+def compact(flags: jax.Array, cap: int):
+    """Order-preserving stream compaction: positions of True flags.
+
+    Returns (sel int32[cap] — indices of the first ``cap`` set flags,
+    0-filled past the end; emask bool[cap]; num int32[] true count).
+    ``sel``/``emask`` match ``jnp.nonzero(flags, size=cap,
+    fill_value=0)`` plus the arange-bound mask bit for bit.
+    """
+    num = jnp.sum(flags.astype(jnp.int32))
+    sel = jnp.nonzero(flags, size=cap, fill_value=0)[0].astype(jnp.int32)
+    emask = jnp.arange(cap) < jnp.minimum(num, cap)
+    return sel, emask, num
+
+
+def compact_perm(keys: jax.Array, valid: jax.Array,
+                 num_keys: int) -> jax.Array:
+    """Stable permutation ordering entries by ascending key, invalid
+    entries last — the ``src_perm`` of a sampled block (keys are
+    ``src_slot`` values in [-1, num_keys); -1 sorts first, exactly like
+    the stable argsort it replaces)."""
+    return jnp.argsort(jnp.where(valid, keys, num_keys)).astype(jnp.int32)
+
+
+def _key_bits(keys: jax.Array) -> jax.Array:
+    """Monotone int32 view of non-negative float32 keys (IEEE bit
+    patterns of non-negative floats order like integers)."""
+    return jax.lax.bitcast_convert_type(keys.astype(jnp.float32), jnp.int32)
+
+
+def segment_select(keys: jax.Array, slot: jax.Array, mask: jax.Array,
+                   seg_start: jax.Array, take: jax.Array,
+                   num_seeds: int) -> jax.Array:
+    """Per-segment smallest-``take`` selection over segment-contiguous
+    edges: include[e] iff (keys[e], e) ranks below take[slot[e]] within
+    its segment — the exact set a stable per-segment sort selects,
+    without sorting.
+
+    keys must be non-negative float32 (callers clamp to [0, ~1e30]);
+    ``slot`` is non-decreasing over real edges with -1 on masked tails
+    (the ``expand_seed_edges`` layout); ``seg_start[s]`` is segment
+    s's first buffer offset; ``take[s] <= deg[s]``.
+
+    The per-segment threshold T_s (the take-th smallest key) is built
+    bit-by-bit over the monotone int32 view: 31 masked segment-counts,
+    each one prefix-sum + two boundary gathers (segments are contiguous
+    — no scatter, no sort), then one tie-ranking scan. O(E) memory.
+    """
+    E = keys.shape[0]
+    S = num_seeds
+    u = _key_bits(keys)
+    cslot = jnp.clip(slot, 0, S - 1)
+    # contiguous segments: count over segment s = prefix-sum difference
+    # at its [start, end) boundaries (end = next start; last ends at E)
+    starts = jnp.clip(seg_start, 0, E)
+    ends = jnp.concatenate([starts[1:], jnp.full((1,), E, starts.dtype)])
+
+    def seg_count(pred):
+        ex = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(pred.astype(jnp.int32))])
+        return ex[ends] - ex[starts]
+
+    # minimal T with count(u <= T) >= take, built from the MSB down;
+    # segments whose buffer holds fewer than take edges (expand
+    # truncation — already flagged as overflow) saturate T and include
+    # everything present, matching the sort-based rank filter
+    T = jnp.zeros((S,), jnp.int32)
+    one = jnp.int32(1)
+    for b in range(30, -1, -1):
+        cand = T + (one << b) - 1
+        T = jnp.where(seg_count(mask & (u <= cand[cslot])) >= take,
+                      T, T + (one << b))
+
+    Te = T[cslot]
+    lt = mask & (u < Te)
+    cnt_lt = seg_count(lt)
+    # ties at T: earliest (take - cnt_lt) by arrival order, ranked with
+    # a segment-local exclusive prefix (segments are contiguous)
+    eq = mask & (u == Te)
+    excl = jnp.cumsum(eq.astype(jnp.int32)) - eq.astype(jnp.int32)
+    base = excl[jnp.clip(seg_start, 0, E - 1)]
+    eq_rank = excl - base[cslot]
+    budget = (take - cnt_lt)[cslot]
+    return lt | (eq & (eq_rank < budget))
+
+
+def normalized_cdf(p: jax.Array, valid: jax.Array) -> jax.Array:
+    """Masked cumulative distribution normalized by its own final value
+    — so the last entry is exactly 1.0 and inverse-CDF draws can never
+    index past the buffer, whatever float32 error the cumsum
+    accumulated. Shared by both backends of :func:`masked_cdf_draw` so
+    their draws cannot drift."""
+    pv = jnp.where(valid, jnp.maximum(p, 0.0), 0.0)
+    cdf = jnp.cumsum(pv)
+    return cdf / jnp.maximum(cdf[-1], 1e-30)
+
+
+def masked_cdf_draw(p: jax.Array, valid: jax.Array,
+                    u: jax.Array) -> jax.Array:
+    """Inverse-CDF draws over the valid entries of ``p``: for each
+    u in [0, 1), the first index whose normalized CDF reaches u,
+    clipped into the buffer. One cap-bounded pass — no dense-V cdf."""
+    cdf = normalized_cdf(p, valid)
+    draws = jnp.searchsorted(cdf, u).astype(jnp.int32)
+    return jnp.clip(draws, 0, p.shape[0] - 1)

@@ -25,20 +25,30 @@ by platform). Both backends are differentiable — the Pallas SpMM's
 same kernels — so the fused train step differentiates end to end
 through whichever backend the engine selected. docs/kernels.md covers
 the registry, the VJP structure, and how to add a primitive.
+
+The SAMPLING half of the fused program goes through the same registry:
+the frontier primitives (:mod:`repro.ops.frontier` — ``hash_dedup``,
+``compact``/``compact_perm``, ``segment_select``, ``masked_cdf_draw``)
+are the O(cap) data-motion family ``build_block`` and the samplers are
+built on, re-exported here for convenience.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.interface import SampledLayer
 from repro.ops import pallas as _pallas
 from repro.ops import ref as _ref
 from repro.ops.backend import (BACKEND_CHOICES, available_backends,
                                get_backend, interpret_mode,
                                register_backend, resolve_backend)
+from repro.ops.frontier import (compact, compact_perm, hash_dedup,
+                                masked_cdf_draw, segment_select)
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.interface import SampledLayer
 
 register_backend("xla", _ref)
 register_backend("pallas", _pallas)
@@ -105,7 +115,8 @@ def edge_softmax(blk: SampledLayer, logits: jax.Array, *,
 
 __all__ = [
     "BACKEND_CHOICES", "aggregate", "aggregate_ref", "available_backends",
-    "edge_softmax", "gather_dst", "gather_src", "get_backend",
-    "interpret_mode", "register_backend", "resolve_backend",
-    "scatter_edges", "sddmm",
+    "compact", "compact_perm", "edge_softmax", "gather_dst", "gather_src",
+    "get_backend", "hash_dedup", "interpret_mode", "masked_cdf_draw",
+    "register_backend", "resolve_backend", "scatter_edges", "sddmm",
+    "segment_select",
 ]

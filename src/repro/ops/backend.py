@@ -30,7 +30,27 @@ import jax
 BACKEND_CHOICES = ("auto", "xla", "pallas")
 
 _REGISTRY: Dict[str, Any] = {}
-_REQUIRED = ("aggregate", "scatter_edges", "gather_dst", "edge_softmax")
+#: the full primitive set a backend must provide: the PR-4 model ops
+#: plus the frontier family (the sampling half of the fused program)
+_REQUIRED = (
+    "aggregate", "scatter_edges", "gather_dst", "edge_softmax",
+    "hash_dedup", "compact", "compact_perm", "segment_select",
+    "masked_cdf_draw",
+)
+
+
+def _ensure_defaults() -> None:
+    """Defensive lazy registration for direct consumers of THIS module.
+
+    On every normal path the registry is already populated before a
+    dispatch can happen: importing any part of ``repro.ops`` (including
+    the samplers' ``from repro.ops import frontier``) runs the package
+    __init__, which registers the built-ins — the actual cycle-breaker
+    is that no ops module imports ``repro.core`` at module scope
+    anymore. This hook only matters for code that imports
+    ``repro.ops.backend`` in isolation and calls get/resolve first."""
+    if not _REGISTRY:
+        import repro.ops  # noqa: F401  (registers "xla" and "pallas")
 
 
 def register_backend(name: str, namespace: Any) -> None:
@@ -57,6 +77,7 @@ def resolve_backend(name: Optional[str] = None) -> str:
     mode — a debugging tool, not a fast path)."""
     if name in (None, "auto"):
         return "pallas" if jax.default_backend() == "tpu" else "xla"
+    _ensure_defaults()
     if name not in _REGISTRY:
         raise ValueError(
             f"unknown graph-ops backend {name!r}; registered: "
@@ -65,6 +86,7 @@ def resolve_backend(name: Optional[str] = None) -> str:
 
 
 def get_backend(name: Optional[str] = None) -> Any:
+    _ensure_defaults()
     return _REGISTRY[resolve_backend(name)]
 
 

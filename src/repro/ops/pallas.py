@@ -32,16 +32,20 @@ body, which is what the parity suite exercises on CPU CI.
 from __future__ import annotations
 
 from functools import partial
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.interface import SampledLayer
 from repro.kernels.edge_softmax.ops import edge_softmax_block
+from repro.kernels.frontier import ops as frontier_ops
 from repro.kernels.spmm.ops import (gather_dst_block, scatter_sorted_block,
                                     spmm_block)
 from repro.ops.backend import interpret_mode
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.interface import SampledLayer
 
 
 def _f0(x):
@@ -177,3 +181,40 @@ _edge_softmax.defvjp(_edge_softmax_fwd, _edge_softmax_bwd)
 
 def edge_softmax(blk: SampledLayer, logits: jax.Array) -> jax.Array:
     return _edge_softmax(logits, blk.dst_slot, blk.edge_mask, blk.seed_cap)
+
+
+# ---------------------------------------------------------------------------
+# frontier primitives — serial VMEM kernels (kernels/frontier); integer
+# data motion, so no custom VJPs are needed
+# ---------------------------------------------------------------------------
+
+def hash_dedup(values: jax.Array, mask: jax.Array,
+               seeds: Optional[jax.Array], new_cap: int):
+    return frontier_ops.hash_dedup_block(values, mask, seeds, new_cap,
+                                         interpret=interpret_mode())
+
+
+def compact(flags: jax.Array, cap: int):
+    return frontier_ops.compact_block(flags, cap,
+                                      interpret=interpret_mode())
+
+
+def compact_perm(keys: jax.Array, valid: jax.Array,
+                 num_keys: int) -> jax.Array:
+    return frontier_ops.compact_perm_block(keys, valid, num_keys,
+                                           interpret=interpret_mode())
+
+
+def segment_select(keys: jax.Array, slot: jax.Array, mask: jax.Array,
+                   seg_start: jax.Array, take: jax.Array, num_seeds: int,
+                   max_take: int) -> jax.Array:
+    del seg_start  # the kernel re-derives segment bounds from the scan
+    return frontier_ops.segment_select_block(keys, slot, mask, take,
+                                             num_seeds, max_take,
+                                             interpret=interpret_mode())
+
+
+def masked_cdf_draw(p: jax.Array, valid: jax.Array,
+                    u: jax.Array) -> jax.Array:
+    return frontier_ops.masked_cdf_draw_block(p, valid, u,
+                                              interpret=interpret_mode())

@@ -1,20 +1,31 @@
-"""The ``"xla"`` graph-ops backend: gathers + segment reductions.
+"""The ``"xla"`` graph-ops backend: gathers + segment reductions, plus
+the frontier primitives as cap-bounded scans/sorts.
 
 These are the reference semantics of every primitive — fully
 differentiable through JAX autodiff (segment_sum transposes to a
 gather), used on CPU and as the oracle the Pallas backend's forwards
 AND custom VJPs are tested against. ``aggregate`` and ``edge_softmax``
 delegate to the kernel packages' oracles (``kernels/*/ref.py``) so
-there is exactly ONE reference implementation of each piece of math.
+there is exactly ONE reference implementation of each piece of math;
+the frontier family likewise delegates to ``kernels/frontier/ref.py``.
+
+(SampledLayer is only referenced in annotations: this module must stay
+importable without ``repro.core`` so the samplers can dispatch through
+the backend registry cycle-free.)
 """
 from __future__ import annotations
+
+from typing import TYPE_CHECKING, Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.interface import SampledLayer
 from repro.kernels.edge_softmax.ref import edge_softmax_ref
+from repro.kernels.frontier import ref as _frontier
 from repro.kernels.spmm.ref import spmm_block_ref
+
+if TYPE_CHECKING:  # pragma: no cover
+    from repro.core.interface import SampledLayer
 
 
 def aggregate(blk: SampledLayer, h: jax.Array) -> jax.Array:
@@ -46,3 +57,35 @@ def edge_softmax(blk: SampledLayer, logits: jax.Array) -> jax.Array:
     attention coefficients (edge_cap, H), zero on masked edges."""
     return edge_softmax_ref(blk.dst_slot, blk.edge_mask, logits,
                             blk.seed_cap)
+
+
+# ---------------------------------------------------------------------------
+# frontier primitives (the sampling half — see kernels/frontier/ref.py
+# for the cap-bounded semantics and bit-compatibility contracts)
+# ---------------------------------------------------------------------------
+
+def hash_dedup(values: jax.Array, mask: jax.Array,
+               seeds: Optional[jax.Array], new_cap: int):
+    return _frontier.hash_dedup(values, mask, seeds, new_cap)
+
+
+def compact(flags: jax.Array, cap: int):
+    return _frontier.compact(flags, cap)
+
+
+def compact_perm(keys: jax.Array, valid: jax.Array,
+                 num_keys: int) -> jax.Array:
+    return _frontier.compact_perm(keys, valid, num_keys)
+
+
+def segment_select(keys: jax.Array, slot: jax.Array, mask: jax.Array,
+                   seg_start: jax.Array, take: jax.Array, num_seeds: int,
+                   max_take: int) -> jax.Array:
+    del max_take  # the bisection needs no static fanout bound
+    return _frontier.segment_select(keys, slot, mask, seg_start, take,
+                                    num_seeds)
+
+
+def masked_cdf_draw(p: jax.Array, valid: jax.Array,
+                    u: jax.Array) -> jax.Array:
+    return _frontier.masked_cdf_draw(p, valid, u)

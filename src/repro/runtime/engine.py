@@ -75,9 +75,12 @@ from repro.optim import adam
 
 def gather_feats(features: jax.Array, block) -> jax.Array:
     """Single-host feature gather: rows of the replicated feature matrix
-    for a block's ``next_seeds`` (-1 padding fetches zeros)."""
-    idx = jnp.where(block.next_seeds >= 0, block.next_seeds, 0)
-    return features[idx] * (block.next_seeds >= 0)[:, None].astype(features.dtype)
+    for a block's ``next_seeds``. Padding slots (-1) are served by the
+    gather's fill value — they never read a feature row from HBM, where
+    the old ``features[idx] * mask`` fetched row 0 for every padding
+    slot and then multiplied it away."""
+    return jnp.take(features, block.next_seeds, axis=0, mode="fill",
+                    fill_value=0)
 
 
 def gnn_loss_fn(apply_fn, params, blocks, feats, labels, backend=None):
@@ -151,19 +154,17 @@ def _route_to_owners(ids: jax.Array, num_parts: int, per_peer_cap: int,
     incoming = jax.lax.all_to_all(
         req_rows[None], axis_name, split_axis=1, concat_axis=0,
         tiled=False)[:, 0].reshape(-1)
-    # dedup via dense membership over this partition's owned rows; the
-    # nonzero scan yields owned seeds sorted by local row — an order
-    # that, unlike arrival order, is deterministic across replays
-    rows_in = jnp.where(incoming >= 0, incoming, v_local)
-    member = jnp.zeros((v_local,), jnp.bool_).at[rows_in].set(
-        True, mode="drop")
-    num_owned = jnp.sum(member.astype(jnp.int32))
-    local_rows = jnp.nonzero(member, size=owned_cap, fill_value=-1)[0].astype(
-        jnp.int32)
+    # owner-side dedup through the same frontier primitive the sampler
+    # epilogue uses: unique incoming local rows, ASCENDING — an order
+    # that, unlike arrival order, is deterministic across replays — in
+    # O(received) work instead of a dense membership scan over every
+    # owned row of the partition
+    dd = graph_ops.hash_dedup(incoming, incoming >= 0, None, owned_cap)
+    local_rows = dd.new
     owned = jnp.where(local_rows >= 0,
                       local_rows * num_parts + my_part, -1).astype(jnp.int32)
-    ovf = send_ovf | (num_owned > owned_cap)
-    return owned, jnp.where(local_rows >= 0, local_rows, 0), num_owned, ovf
+    ovf = send_ovf | dd.overflow
+    return owned, jnp.where(local_rows >= 0, local_rows, 0), dd.num_new, ovf
 
 
 def _scatter_owned_rows(rows: jax.Array, valid: jax.Array, values: jax.Array,
@@ -212,8 +213,13 @@ class TrainEngine:
         self.mesh = mesh
         # the graph-ops backend ("auto"/None resolves by platform HERE,
         # once — every step this engine builds, single-host or
-        # partitioned, runs the same resolved primitive set, and the
-        # resolved name lands in checkpoint engine_restore_meta)
+        # partitioned, runs the same resolved MODEL primitive set, and
+        # the resolved name lands in checkpoint engine_restore_meta).
+        # The sampling half's frontier primitives are NOT governed by
+        # this flag: they dispatch auto-by-platform inside the sample
+        # trace, which is safe to leave unpinned because their backends
+        # are bit-identical (docs/kernels.md, "Backend selection
+        # boundary")
         self.backend = graph_ops.resolve_backend(backend)
         self.comp_cfg = comp.CompressionConfig(grad_compression)
         self.max_replay_retries = max_replay_retries
