@@ -15,19 +15,27 @@ sampled-vertices/step for up to three pipelines:
     eager sampling with the cold-start iterative c_s solver
     (``fast_solve=False``) and the per-batch host sync; this is what
     ``train_gnn`` did before the fused-step refactor
+  * pipelined: the staged driver (repro.runtime.pipeline) — sample(t+1)
+    dispatched ahead of compute(t) (``prefetch``), plus double-buffered
+    gathers (``full``); the drain (``flush``) is inside the timer
 
 ``speedup`` is fused vs. the legacy baseline (null for samplers with no
 legacy pipeline); ``speedup_vs_unfused`` isolates the pure pipeline
-effect with identical sampler math.
+effect with identical sampler math; ``pipeline_speedup_vs_fused`` is
+the best pipelined row over the single fused program.
 
 ``--check-parity`` additionally trains 10 steps from the same init on
 the fused and unfused paths and verifies bit-exact parameter equality.
 ``--smoke`` runs a fast CI gate: bit-exact fused-vs-unfused parity for
 every registered sampler on a small synthetic graph, nonzero exit on
-any mismatch.
+any mismatch; with ``--pipeline prefetch|full`` the gate instead
+checks the pipelined driver vs the serial fused engine (bit-exact
+sampled counts per step, fp-tolerance params — splitting the program
+moves XLA fusion boundaries, so bit-equality is not the contract).
 
   PYTHONPATH=src python benchmarks/fused_step.py --scale 0.01 --steps 10
   PYTHONPATH=src python benchmarks/fused_step.py --smoke
+  PYTHONPATH=src python benchmarks/fused_step.py --smoke --pipeline full
 """
 from __future__ import annotations
 
@@ -111,6 +119,31 @@ def bench_sampler(ds, name, *, fanouts, batch_size, hidden, steps,
     fused_sps, fused_v = time_loop(fused_once)
     unfused_sps, _ = time_loop(pipeline_once(jit_sample))
 
+    # pipelined: the staged driver with the drain inside the timer
+    from repro.runtime.engine import TrainEngine
+    from repro.runtime.pipeline import PipelinedEngine
+
+    def pipe_time(mode):
+        eng = TrainEngine(sampler, gnn_models.gcn_apply, opt_cfg)
+        data = eng.make_data_from_dataset(ds)
+        drv = PipelinedEngine(eng, mode=mode)
+        params, _ = fresh()
+        state = eng.init_state(params)
+        params, state, _ = drv.step(params, state, data, seeds,
+                                    jax.random.fold_in(key, 0))
+        params, state, _ = drv.flush(params, state, data)   # compile/warm
+        jax.block_until_ready(jax.tree.leaves(params)[0])
+        t0 = time.perf_counter()
+        for i in range(steps):
+            params, state, _ = drv.step(params, state, data, seeds,
+                                        jax.random.fold_in(key, i + 1))
+        params, state, _ = drv.flush(params, state, data)
+        jax.block_until_ready(jax.tree.leaves(params)[0])
+        return steps / (time.perf_counter() - t0)
+
+    prefetch_sps = pipe_time("prefetch")
+    full_sps = pipe_time("full")
+
     # sample-phase breakdown: the jitted multi-layer sampling alone,
     # steady state — sample_phase_frac is the share of a fused step the
     # sampling half costs (the half the frontier primitives own)
@@ -127,6 +160,10 @@ def bench_sampler(ds, name, *, fanouts, batch_size, hidden, steps,
         "fused_steps_per_sec": round(fused_sps, 3),
         "unfused_steps_per_sec": round(unfused_sps, 3),
         "speedup_vs_unfused": round(fused_sps / unfused_sps, 2),
+        "pipelined_prefetch_steps_per_sec": round(prefetch_sps, 3),
+        "pipelined_full_steps_per_sec": round(full_sps, 3),
+        "pipeline_speedup_vs_fused": round(max(prefetch_sps, full_sps)
+                                           / fused_sps, 2),
         "sampled_vertices_per_step": round(fused_v, 1),
         "sample_phase_us": round(1e6 / sample_sps, 1),
         "sample_phase_frac": round(fused_sps / sample_sps, 3),
@@ -174,25 +211,85 @@ def _parity(ds, name, *, fanouts, batch_size, hidden, cap_safety,
                         jax.tree.leaves(ru["params"])))
 
 
-def smoke(seed=0):
-    """CI gate: fused-vs-unfused bit-exact parity for EVERY registered
-    sampler on a small synthetic graph. Exits nonzero on any mismatch."""
+def _pipeline_parity(ds, name, mode, *, fanouts, batch_size, hidden,
+                     cap_safety, layer_sizes=None, steps=6, seed=0):
+    """Pipelined driver vs serial fused engine: per-step sampled counts
+    bit-exact (sampled sets are salt-determined), params fp-tolerance."""
+    from repro.runtime.trainer import GNNTrainConfig, train_gnn
+    cfg = GNNTrainConfig(hidden=hidden, fanouts=fanouts, sampler=name,
+                         layer_sizes=layer_sizes, batch_size=batch_size,
+                         steps=steps, lr=1e-3, seed=seed,
+                         cap_safety=cap_safety)
+    r0 = train_gnn(ds, cfg)
+    rp = train_gnn(ds, dataclasses.replace(cfg, pipeline=mode))
+    sets_ok = len(r0["history"]) == len(rp["history"]) and all(
+        a["step"] == b["step"] and a["sampled_v"] == b["sampled_v"]
+        and a["sampled_e"] == b["sampled_e"]
+        for a, b in zip(r0["history"], rp["history"]))
+    params_ok = all(
+        bool(np.allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                         atol=1e-6))
+        for a, b in zip(jax.tree.leaves(r0["params"]),
+                        jax.tree.leaves(rp["params"])))
+    return sets_ok and params_ok
+
+
+def smoke(seed=0, pipeline="off"):
+    """CI gate on a small synthetic graph, EVERY registered sampler:
+    fused-vs-unfused bit-exact parity (``pipeline="off"``), or
+    pipelined-vs-serial parity (``prefetch``/``full``). Exits nonzero
+    on any mismatch."""
     from repro.graph.generators import DatasetSpec, generate
     ds = generate(DatasetSpec("mini", 2000, 12.0, 16, 5, 0.5, 0.2, 0.6, 1000),
                   seed=seed)
     failures = []
     for name in samplers.list_samplers():
-        ok = _parity(ds, name, fanouts=(4, 3), batch_size=48, hidden=16,
-                     cap_safety=3.0, steps=4, seed=seed)
-        print(json.dumps({"sampler": name, "parity_bit_exact": ok}),
-              flush=True)
+        if pipeline == "off":
+            ok = _parity(ds, name, fanouts=(4, 3), batch_size=48, hidden=16,
+                         cap_safety=3.0, steps=4, seed=seed)
+            print(json.dumps({"sampler": name, "parity_bit_exact": ok}),
+                  flush=True)
+        else:
+            ok = _pipeline_parity(ds, name, pipeline, fanouts=(4, 3),
+                                  batch_size=48, hidden=16, cap_safety=3.0,
+                                  steps=6, seed=seed)
+            print(json.dumps({"sampler": name, "pipeline": pipeline,
+                              "parity_ok": ok}), flush=True)
         if not ok:
             failures.append(name)
     if failures:
         print(f"PARITY FAILURES: {', '.join(failures)}", file=sys.stderr)
         sys.exit(1)
     print(f"parity OK for all {len(tuple(samplers.list_samplers()))} "
-          "registered samplers")
+          "registered samplers"
+          + (f" (pipeline={pipeline})" if pipeline != "off" else ""))
+
+
+def run_json(json_path, *, dataset="products", scale=0.003, steps=8,
+             batch_size=128, hidden=64, fanouts=(10, 10), cap_safety=2.0,
+             sampler_names=("ns", "labor-0"), seed=0):
+    """The committed trajectory point (``python -m benchmarks.run
+    fused``): fused / unfused / pipelined steps-per-sec rows at a fixed
+    small config, written to ``json_path`` (BENCH_fused.json is
+    gitignore-exempted so the history lands in the repo)."""
+    from repro.graph import paper_dataset as _pd
+    ds = _pd(dataset, scale=scale, seed=seed)
+    rows = [bench_sampler(ds, name, fanouts=fanouts, batch_size=batch_size,
+                          hidden=hidden, steps=steps, cap_safety=cap_safety,
+                          seed=seed)
+            for name in sampler_names]
+    payload = {
+        "bench": "fused_step",
+        "dataset": dataset, "scale": scale, "steps": steps,
+        "batch_size": batch_size, "hidden": hidden,
+        "fanouts": list(fanouts),
+        "results": rows,
+    }
+    with open(json_path, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+    print(json.dumps(payload, indent=1))
+    return payload
 
 
 def main():
@@ -211,11 +308,16 @@ def main():
     ap.add_argument("--check-parity", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="fast all-sampler parity gate for CI")
+    ap.add_argument("--pipeline", default="off",
+                    choices=["off", "prefetch", "full"],
+                    help="with --smoke: gate the staged pipeline driver "
+                         "against the serial fused engine instead of "
+                         "fused-vs-unfused")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.smoke:
-        smoke(seed=args.seed)
+        smoke(seed=args.seed, pipeline=args.pipeline)
         return
 
     fanouts = tuple(int(x) for x in args.fanouts.split(","))

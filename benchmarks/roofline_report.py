@@ -11,9 +11,8 @@ import os
 import sys
 
 ARCH_ORDER = [
-    "llama4-maverick-400b-a17b", "qwen3-moe-235b-a22b", "mamba2-370m",
-    "qwen1.5-110b", "stablelm-1.6b", "gemma2-2b", "minitron-4b",
-    "llama-3.2-vision-11b", "whisper-tiny", "zamba2-2.7b", "labor-gcn",
+    "qwen3-moe-235b-a22b", "mamba2-370m", "stablelm-1.6b", "gemma2-2b",
+    "zamba2-2.7b", "labor-gcn",
 ]
 SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
                "train_batch"]

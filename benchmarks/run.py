@@ -12,7 +12,7 @@ import time
 
 
 BENCHES = ("table2", "table3", "table4", "fig1", "fig2", "table5", "kernels",
-           "sampling")
+           "sampling", "fused")
 
 
 def main() -> None:
@@ -62,6 +62,11 @@ def main() -> None:
         # sample-vs-train phase split; writes BENCH_sampling.json
         from benchmarks import sampling_bench
         sampling_bench.main(json_path="BENCH_sampling.json", smoke=smoke)
+    if "fused" in which:
+        # fused vs unfused vs pipelined (prefetch/full) steps-per-sec
+        # trajectory point; BENCH_fused.json is committed
+        from benchmarks import fused_step
+        fused_step.run_json("BENCH_fused.json")
     print(f"# total bench time {time.time() - t0:.0f}s")
 
 

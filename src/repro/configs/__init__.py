@@ -12,28 +12,18 @@ from typing import Dict, List
 from repro.configs import (
     gemma2_2b,
     labor_gcn,
-    llama4_maverick_400b_a17b,
-    llama_3_2_vision_11b,
     mamba2_370m,
-    minitron_4b,
-    qwen1_5_110b,
     qwen3_moe_235b_a22b,
     stablelm_1_6b,
-    whisper_tiny,
     zamba2_2_7b,
 )
 from repro.models.transformer.config import LM_SHAPES, ShapeSpec, shape_by_name
 
 ARCHS = {
-    "llama4-maverick-400b-a17b": llama4_maverick_400b_a17b.config,
     "qwen3-moe-235b-a22b": qwen3_moe_235b_a22b.config,
     "mamba2-370m": mamba2_370m.config,
-    "qwen1.5-110b": qwen1_5_110b.config,
     "stablelm-1.6b": stablelm_1_6b.config,
     "gemma2-2b": gemma2_2b.config,
-    "minitron-4b": minitron_4b.config,
-    "llama-3.2-vision-11b": llama_3_2_vision_11b.config,
-    "whisper-tiny": whisper_tiny.config,
     "zamba2-2.7b": zamba2_2_7b.config,
 }
 

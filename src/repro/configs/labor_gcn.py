@@ -31,6 +31,10 @@ class GNNWorkloadConfig:
     cap_safety: float = 1.6
     grad_compression: str = "none"          # none | bf16 | int8
     backend: str = "auto"                   # graph-ops backend (repro.ops)
+    # "off" | "prefetch" | "full" — staged pipeline driver
+    # (repro.runtime.pipeline); launch/gnn_step.build_gnn_engine wraps
+    # the engine in a PipelinedEngine when != "off"
+    pipeline: str = "off"
     dtype: str = "float32"
 
 

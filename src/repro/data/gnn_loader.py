@@ -15,6 +15,7 @@ import dataclasses
 import queue
 import threading
 import time
+from collections import deque
 from typing import Iterator, Optional
 
 import jax
@@ -30,6 +31,9 @@ class LoaderStats:
     overflow_retries: int = 0
     overflow_replays: int = 0   # fused path: batches replayed one step late
     stragglers_skipped: int = 0
+    # pipelined path: in-flight batches re-sampled after a replay grew
+    # the cap schedule (runtime/pipeline.py)
+    pipeline_invalidations: int = 0
 
 
 class SeedBatches:
@@ -140,23 +144,46 @@ class OverflowLedger:
     polled flag vector also carries the distributed step's all-to-all
     overflow (seed routing, feature/hidden exchange), so one protocol
     heals every static cap in the program.
+
+    ``depth`` is the poll lag in recorded batches: a record only
+    surfaces a replay once ``depth`` newer batches sit on top of it, so
+    a pipeline with ``depth`` programs in flight never blocks the host
+    on an unretired program. The serial engine uses the historical
+    ``depth=1`` (poll the previous batch); the pipelined driver
+    (:mod:`repro.runtime.pipeline`) dispatches compute programs in
+    batch order through the same ``record``/``flush`` protocol, which
+    is what keeps the order of *applied* updates — and therefore the
+    replayed-batch off-by-one — identical to the serial trace at any
+    pipeline depth.
     """
 
-    def __init__(self, stats: Optional[LoaderStats] = None):
+    def __init__(self, stats: Optional[LoaderStats] = None, depth: int = 1):
+        if depth < 1:
+            raise ValueError(f"ledger depth must be >= 1, got {depth}")
         self.stats = stats or LoaderStats()
-        self._pending = None  # (tag, flags) of the most recent batch
+        self.depth = depth
+        self._pending: deque = deque()  # (tag, flags), oldest first
 
     def record(self, tag, flags):
         """Register batch ``tag`` with its device-side overflow flags.
-        Returns the tag of the *previous* batch if it overflowed and must
-        be replayed, else None."""
-        due, self._pending = self._pending, (tag, flags)
-        return self._overflowed(due)
+        Returns the tag of the oldest batch that fell out of the
+        ``depth``-deep window if it overflowed and must be replayed,
+        else None."""
+        self._pending.append((tag, flags))
+        if len(self._pending) > self.depth:
+            return self._overflowed(self._pending.popleft())
+        return None
 
     def flush(self):
-        """Final poll after the last step. Returns a replay tag or None."""
-        due, self._pending = self._pending, None
-        return self._overflowed(due)
+        """Drain the window after the last step: poll every still-pending
+        batch, oldest first. Returns the first overflowed tag (callers
+        re-invoke until None — a replayed batch is re-recorded by the
+        replay dispatch itself, never left pending here)."""
+        while self._pending:
+            due = self._overflowed(self._pending.popleft())
+            if due is not None:
+                return due
+        return None
 
     def _overflowed(self, entry):
         if entry is None:

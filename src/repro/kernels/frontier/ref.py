@@ -189,6 +189,37 @@ def segment_select(keys: jax.Array, slot: jax.Array, mask: jax.Array,
     return lt | (eq & (eq_rank < budget))
 
 
+def segment_select_lexsort(keys: jax.Array, slot: jax.Array,
+                           mask: jax.Array, seg_start: jax.Array,
+                           take: jax.Array, num_seeds: int) -> jax.Array:
+    """:func:`segment_select` as one stable global lexsort by
+    (segment, key) plus a rank filter — bit-identical inclusion set
+    (stable sort ties = arrival-order ties).
+
+    One O(E log E) sort instead of 31 O(E) prefix-sum passes: on CPU,
+    where XLA lowers each bisection pass to a separate serial scan, the
+    sort wins (~1.2x, benchmarks/sampling_bench.py); on TPU the
+    bisection's pure map/scan passes win. ``resolve_backend`` picks per
+    platform; both stay registered and parity-tested against each other.
+
+    Relies on the ``expand_seed_edges`` layout contract (masked entries
+    only on the global tail), so after the sort each real segment s
+    still starts at ``seg_start[s]`` and retains its full length.
+    """
+    E = keys.shape[0]
+    S = num_seeds
+    big = jnp.float32(3.4e38)
+    key_sorted = jnp.where(mask, keys.astype(jnp.float32), big)
+    slot_for = jnp.where(mask, slot, S)
+    order = jnp.lexsort((key_sorted, slot_for))
+    slot_s = slot_for[order]
+    cs = jnp.clip(slot_s, 0, S - 1)
+    pos = jnp.arange(E, dtype=jnp.int32)
+    pos_in_seg = pos - jnp.where(slot_s < S, seg_start[cs], 0)
+    inc_sorted = (slot_s < S) & (pos_in_seg < take[cs])
+    return jnp.zeros((E,), jnp.bool_).at[order].set(inc_sorted)
+
+
 def normalized_cdf(p: jax.Array, valid: jax.Array) -> jax.Array:
     """Masked cumulative distribution normalized by its own final value
     — so the last entry is exactly 1.0 and inverse-CDF draws can never

@@ -28,11 +28,15 @@ from repro.distributed import compression as comp
 from repro.models import gnn as gnn_models
 from repro.optim import adam
 from repro.runtime.engine import TrainEngine
+from repro.runtime.pipeline import PipelinedEngine
 
 
 def build_gnn_engine(mesh, cfg: GNNWorkloadConfig,
-                     lr: float = 1e-3) -> Tuple[TrainEngine, dict]:
-    """TrainEngine for ``cfg`` on ``mesh`` + launch metadata.
+                     lr: float = 1e-3) -> Tuple[object, dict]:
+    """TrainEngine for ``cfg`` on ``mesh`` + launch metadata; with
+    ``cfg.pipeline != "off"`` the engine comes wrapped in the staged
+    :class:`~repro.runtime.pipeline.PipelinedEngine` driver (the raw
+    engine stays reachable as ``driver.engine``).
 
     All cap geometry — LayerCaps and the per-peer all-to-all schedule —
     comes from the sampler registry, sized for the device-local batch.
@@ -60,7 +64,13 @@ def build_gnn_engine(mesh, cfg: GNNWorkloadConfig,
         peer_caps=list(sampler.spec.peer_caps),
         num_devices=num_devices,
         v_local=-(-cfg.num_vertices // num_devices),
+        pipeline=cfg.pipeline,
     )
+    if cfg.pipeline != "off":
+        # the staged driver wraps the same engine; callers route steps
+        # through driver.step/flush and keep engine for infer/AOT specs
+        driver = PipelinedEngine(engine, mode=cfg.pipeline)
+        return driver, meta
     return engine, meta
 
 

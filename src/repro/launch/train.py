@@ -63,6 +63,12 @@ def main():
                     default=True,
                     help="one-program sample+train step with donated "
                          "buffers (--no-fused for the eager baseline)")
+    ap.add_argument("--pipeline", default="off",
+                    choices=["off", "prefetch", "full"],
+                    help="staged pipeline driver (runtime/pipeline.py): "
+                         "off lowers to the single fused program; "
+                         "prefetch samples one batch ahead; full adds "
+                         "double-buffered feature gathers")
     ap.add_argument("--mesh-devices", type=int, default=0,
                     help="> 0: run the partition-aware distributed engine "
                          "over this many devices (set XLA_FLAGS="
@@ -106,7 +112,7 @@ def main():
             seed=args.seed, fused=args.fused,
             mesh_devices=args.mesh_devices,
             grad_compression=args.grad_compression,
-            backend=args.backend)
+            backend=args.backend, pipeline=args.pipeline)
         out = train_gnn(ds, cfg)
         val = evaluate_gnn(ds, out["params"], cfg, ds.val_idx)
         h = out["history"]

@@ -81,7 +81,15 @@ def compact_perm(keys: jax.Array, valid: jax.Array,
 def segment_select(keys: jax.Array, slot: jax.Array, mask: jax.Array,
                    seg_start: jax.Array, take: jax.Array, num_seeds: int,
                    max_take: int) -> jax.Array:
-    del max_take  # the bisection needs no static fanout bound
+    del max_take  # neither variant needs a static fanout bound
+    # platform pick (static per process, like interpret_mode): the
+    # 31-pass bit-bisection lowers to serial scans on CPU and loses to
+    # one stable lexsort there (~1.2x); elsewhere the sort-free
+    # bisection wins. Both variants are bit-identical by contract and
+    # parity-tested against each other (tests/test_frontier.py).
+    if jax.default_backend() == "cpu":
+        return _frontier.segment_select_lexsort(keys, slot, mask, seg_start,
+                                                take, num_seeds)
     return _frontier.segment_select(keys, slot, mask, seg_start, take,
                                     num_seeds)
 

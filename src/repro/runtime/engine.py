@@ -176,6 +176,117 @@ def _scatter_owned_rows(rows: jax.Array, valid: jax.Array, values: jax.Array,
     return out.at[rows_eff].set(values, mode="drop")
 
 
+def _owned_cap_schedule(spec, P: int):
+    """Owner-side seed buffer caps per layer + the deep-frontier cap.
+
+    Bounded by what the all-to-all can deliver, kept under the layer's
+    vertex buffer so next_seeds retains headroom for newly sampled
+    vertices (both double together on overflow replay)."""
+    caps, peer, L = spec.caps, spec.peer_caps, spec.num_layers
+    owned_caps = [min(P * peer[l], max(caps[l].vertex_cap // 2, 8))
+                  for l in range(L)]
+    deep_cap = min(P * peer[L], caps[-1].vertex_cap)
+    return owned_caps, deep_cap
+
+
+def _route_and_sample(sampler, mesh, axes, P: int, graph_l: Graph,
+                      v_local: int, my_part, seeds, salts, *,
+                      with_deep: bool):
+    """The partitioned sampling half: per layer, route the frontier to
+    its owners (``v % P``) and run the registry sampler partition-
+    locally with GLOBAL ids; optionally dedup the deepest frontier at
+    its owners (``with_deep`` — train only: |V^L| is the paper's
+    headline metric and the engine-parity comparison set).
+
+    Shared verbatim by the serial one-program step and the staged
+    sample program (runtime/pipeline.py) so their sampled sets are
+    bit-identical by construction. Returns (blocks, owned_rows,
+    route_ovf, frontiers, deep_n — None unless ``with_deep``)."""
+    spec = sampler.spec
+    L = spec.num_layers
+    peer = spec.peer_caps
+    owned_caps, deep_cap = _owned_cap_schedule(spec, P)
+    blocks, owned_rows, route_ovf, frontiers = [], [], [], []
+    frontier = seeds
+    for l in range(L):
+        owned, rows, _, r_ovf = _route_to_owners(
+            frontier, P, peer[l], axes, owned_caps[l], v_local, my_part)
+        blk = sampler.sample_layer_partitioned(
+            graph_l, owned, salts[l], l, seed_rows=rows,
+            num_vertices=P * v_local, axis_name=axes)
+        blocks.append(blk)
+        owned_rows.append(rows)
+        route_ovf.append(r_ovf)
+        frontiers.append(owned)
+        frontier = blk.next_seeds
+    deep_n = None
+    if with_deep:
+        deep_owned, _, deep_n, deep_ovf = _route_to_owners(
+            frontier, P, peer[L], axes, deep_cap, v_local, my_part)
+        frontiers.append(deep_owned)
+        route_ovf.append(deep_ovf)
+    return blocks, owned_rows, route_ovf, frontiers, deep_n
+
+
+def _forward_partitioned(layer_fn, params, blocks, owned_rows, h, peer,
+                         axes, v_local: int, backend):
+    """Partitioned multi-layer forward: between GNN layers the hidden
+    states cross partitions through the fixed-capacity all-to-all
+    (owners scatter their outputs into an owned-row buffer, consumers
+    fetch by global id). Returns (logits, hidden-exchange overflow
+    flags). Shared by the serial program and the staged compute
+    program."""
+    L = len(blocks)
+    h_ovfs = []
+    for b in range(L - 1, -1, -1):
+        h = layer_fn(params["layers"][L - 1 - b], blocks[b], h,
+                     is_last=b == 0, backend=backend)
+        if b > 0:
+            dense = _scatter_owned_rows(
+                owned_rows[b], blocks[b].seeds >= 0, h, v_local)
+            h, ovf_h = exchange_features(
+                dense, blocks[b - 1].next_seeds, axes, peer[b],
+                owner_mode="mod")
+            h_ovfs.append(ovf_h)
+    return h, h_ovfs
+
+
+@dataclasses.dataclass(frozen=True)
+class StagedFns:
+    """The fused step split at its stage boundaries — the jitted
+    programs the pipeline driver (:mod:`repro.runtime.pipeline`)
+    dispatches ahead of each other. Built per cap schedule by
+    :attr:`TrainEngine.staged`; ``pipeline=off`` never builds these
+    (the serial path lowers to the single fused program unchanged).
+
+    Single-host signatures::
+
+        sample(graph, seeds, key)                     -> blocks
+        gather(features, labels_all, blocks)          -> (feats, labels)
+        compute(params, opt, blocks, feats, labels)   -> (params, opt, m)
+        compute_gather(params, opt, features,
+                       labels_all, blocks)            -> (params, opt, m)
+
+    Distributed (per-device boundary leaves carry a leading axis of 1
+    so one ``P_(ax)`` prefix spec moves the whole pytree between
+    shard_map programs)::
+
+        sample(indptr, indices, labels, seeds, key)   -> (bnd, frontiers)
+        gather(features, bnd)                         -> (feats_in, f_ovf)
+        compute(params, opt, err, labels, bnd,
+                feats_in, f_ovf)                      -> (p, o, e, m)
+        compute_gather(params, opt, err, features,
+                       labels, bnd)                   -> (p, o, e, m)
+
+    ``compute_gather`` (the ``prefetch`` mode) folds the feature
+    gather/exchange into the update program; ``gather`` + ``compute``
+    (the ``full`` mode) double-buffer it as its own program."""
+    sample: Callable
+    gather: Callable
+    compute: Callable
+    compute_gather: Callable
+
+
 class TrainEngine:
     """The one train/infer step builder (see module docstring).
 
@@ -228,6 +339,7 @@ class TrainEngine:
         self._ledger = OverflowLedger(self.stats)
         self._step = None
         self._infer = None
+        self._staged = None
         if mesh is not None:
             self.axes = tuple(mesh.axis_names)
             self.num_parts = 1
@@ -377,6 +489,220 @@ class TrainEngine:
         return infer
 
     # ------------------------------------------------------------------
+    # the staged decomposition (pipeline driver programs)
+    # ------------------------------------------------------------------
+
+    @property
+    def staged(self) -> StagedFns:
+        """The fused step split into composable jitted stages (one
+        bundle per cap schedule; invalidated by :meth:`grow` exactly
+        like the fused program). Only the pipeline driver builds these
+        — ``pipeline=off`` keeps dispatching :attr:`step_fn`."""
+        if self._staged is None:
+            self._staged = (self._build_single_stages() if self.mesh is None
+                            else self._build_distributed_stages())
+        return self._staged
+
+    def _build_single_stages(self) -> StagedFns:
+        sampler, apply_fn = self.sampler, self.model_apply
+        opt_cfg, backend = self.opt_cfg, self.backend
+
+        @jax.jit
+        def sample(graph, seeds, key):
+            # salt-only: stateless in params, so batch t+1's frontier
+            # can be in flight while batch t trains. Same trace as the
+            # sampling half of the fused program -> bit-identical sets.
+            return tuple(sampler.sample(graph, seeds, sampler.spec.salts(key)))
+
+        def _gather(features, labels_all, blocks):
+            feats = gather_feats(features, blocks[-1])
+            seeds = blocks[0].seeds
+            labels = labels_all[jnp.where(seeds >= 0, seeds, 0)]
+            return feats, labels
+
+        gather = jax.jit(_gather)
+
+        def _epilogue(params, opt_state, blocks, feats, labels):
+            (loss, acc), grads = jax.value_and_grad(
+                lambda p: gnn_loss_fn(apply_fn, p, blocks, feats, labels,
+                                      backend),
+                has_aux=True,
+            )(params)
+            new_params, new_opt, m = adam.apply_updates(params, grads,
+                                                        opt_state, opt_cfg)
+            ovf = overflow_flags(blocks)
+            any_ovf = jnp.any(ovf)
+            gate = lambda new, old: jnp.where(any_ovf, old, new)
+            params_out = jax.tree.map(gate, new_params, params)
+            opt_out = jax.tree.map(gate, new_opt, opt_state)
+            m.update(loss=loss, acc=acc, overflow=ovf,
+                     **sampled_counts(blocks))
+            return params_out, opt_out, m
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def compute(params, opt_state, blocks, feats, labels):
+            return _epilogue(params, opt_state, blocks, feats, labels)
+
+        @partial(jax.jit, donate_argnums=(0, 1))
+        def compute_gather(params, opt_state, features, labels_all, blocks):
+            feats, labels = _gather(features, labels_all, blocks)
+            return _epilogue(params, opt_state, blocks, feats, labels)
+
+        return StagedFns(sample=sample, gather=gather, compute=compute,
+                         compute_gather=compute_gather)
+
+    def _build_distributed_stages(self) -> StagedFns:
+        mesh, axes, P = self.mesh, self.axes, self.num_parts
+        sampler, layer_fn = self.sampler, self._layer_fn
+        opt_cfg, comp_cfg, backend = (self.opt_cfg, self.comp_cfg,
+                                      self.backend)
+        spec = sampler.spec
+        L = spec.num_layers
+        peer = spec.peer_caps
+        # boundary convention: every per-device leaf crosses the stage
+        # boundary with a leading axis of 1, so a single P_(ax) prefix
+        # spec shards the whole pytree (scalars become (P,) globally)
+        expand = lambda t: jax.tree.map(lambda x: x[None], t)
+        unwrap = lambda t: jax.tree.map(lambda x: x[0], t)
+
+        def sample_body(indptr, indices, labels, seeds, salts):
+            graph_l = Graph(indptr=indptr[0], indices=indices[0])
+            v_local = labels.shape[0]
+            my_part = _flat_axis_index(mesh, axes)
+            blocks, owned_rows, route_ovf, frontiers, deep_n = (
+                _route_and_sample(sampler, mesh, axes, P, graph_l, v_local,
+                                  my_part, seeds, salts, with_deep=True))
+            bnd = dict(
+                blocks=tuple(expand(b) for b in blocks),
+                owned_rows=tuple(r[None] for r in owned_rows),
+                route_flags=jnp.stack(route_ovf)[None],
+                # psum here: replicated by construction, read back as a
+                # plain scalar metric by the compute stage
+                deep_n=jax.lax.psum(deep_n, axes)[None],
+            )
+            return bnd, tuple(frontiers)
+
+        def gather_body(features, bnd):
+            # the input-feature all-to-all — the |V^L|-sized collective
+            # LABOR shrinks — moved OFF the update's critical path
+            feats_in, f_ovf = exchange_features(
+                features, bnd["blocks"][-1].next_seeds[0], axes, peer[L],
+                owner_mode="mod")
+            return feats_in[None], f_ovf[None]
+
+        def compute_core(params, opt_state, err, labels, bnd, feats_in,
+                         f_ovf):
+            blocks = [unwrap(b) for b in bnd["blocks"]]
+            owned_rows = [r[0] for r in bnd["owned_rows"]]
+            route_flags = bnd["route_flags"][0]
+            v_local = labels.shape[0]
+
+            valid0 = blocks[0].seeds >= 0
+            labels_own = labels[jnp.where(valid0, owned_rows[0], 0)]
+            total_valid = jax.lax.psum(jnp.sum(valid0.astype(jnp.int32)),
+                                       axes)
+
+            def loss_fn(p):
+                logits, h_ovfs = _forward_partitioned(
+                    layer_fn, p, blocks, owned_rows, feats_in, peer, axes,
+                    v_local, backend)
+                safe = jnp.where(valid0, labels_own, 0)
+                lse = jax.nn.logsumexp(logits, axis=-1)
+                gold = jnp.take_along_axis(logits, safe[:, None],
+                                           axis=-1)[:, 0]
+                nll = jnp.where(valid0, lse - gold, 0.0)
+                # x P so the pmean of per-device grads below equals the
+                # gradient of the batch-global mean NLL
+                local = jnp.sum(nll) * P / jnp.maximum(total_valid, 1)
+                correct = jnp.sum((jnp.argmax(logits, -1) == safe) & valid0)
+                return local, (correct, h_ovfs)
+
+            (local_loss, (correct, h_ovfs)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            grads, new_err = comp.compressed_mean(grads, err, comp_cfg, axes)
+            new_params, new_opt, m = adam.apply_updates(params, grads,
+                                                        opt_state, opt_cfg)
+
+            flags = jnp.concatenate([
+                overflow_flags(blocks),
+                route_flags,
+                jnp.stack([f_ovf] + h_ovfs) if h_ovfs else f_ovf[None],
+            ])
+            ovf = jax.lax.pmax(flags.astype(jnp.int32), axes) > 0
+            any_ovf = jnp.any(ovf)
+            gate = lambda new, old: jnp.where(any_ovf, old, new)
+            params_out = jax.tree.map(gate, new_params, params)
+            opt_out = jax.tree.map(gate, new_opt, opt_state)
+            err_out = jax.tree.map(gate, new_err, err)
+            m.update(
+                loss=jax.lax.pmean(local_loss, axes),
+                acc=jax.lax.psum(correct, axes)
+                / jnp.maximum(total_valid, 1),
+                overflow=ovf,
+                sampled_v=bnd["deep_n"][0],
+                sampled_e=jax.lax.psum(sum(b.num_edges for b in blocks),
+                                       axes),
+            )
+            return params_out, opt_out, err_out, m
+
+        def compute_body(params, opt_state, err, labels, bnd, feats_in_b,
+                         f_ovf_b):
+            return compute_core(params, opt_state, err, labels, bnd,
+                                feats_in_b[0], f_ovf_b[0])
+
+        def compute_gather_body(params, opt_state, err, features, labels,
+                                bnd):
+            feats_in, f_ovf = exchange_features(
+                features, bnd["blocks"][-1].next_seeds[0], axes, peer[L],
+                owner_mode="mod")
+            return compute_core(params, opt_state, err, labels, bnd,
+                                feats_in, f_ovf)
+
+        rep = P_()
+        ax = self._ax_spec()
+        row, vec, bnd_spec = P_(ax, None), P_(ax), P_(ax)
+        front_specs = tuple(P_(ax) for _ in range(L + 1))
+
+        @jax.jit
+        def sample_fn(indptr, indices, labels, seeds, key):
+            salts = spec.salts(key)
+            return shard_map(
+                sample_body, mesh=mesh,
+                in_specs=(row, row, vec, vec, rep),
+                out_specs=(bnd_spec, front_specs),
+                check_rep=False)(indptr, indices, labels, seeds, salts)
+
+        @jax.jit
+        def gather_fn(features, bnd):
+            return shard_map(
+                gather_body, mesh=mesh, in_specs=(row, bnd_spec),
+                out_specs=(bnd_spec, vec),
+                check_rep=False)(features, bnd)
+
+        @partial(jax.jit, donate_argnums=(0, 1, 2))
+        def compute_fn(params, opt_state, err, labels, bnd, feats_in,
+                       f_ovf):
+            return shard_map(
+                compute_body, mesh=mesh,
+                in_specs=(rep, rep, rep, vec, bnd_spec, bnd_spec, vec),
+                out_specs=(rep, rep, rep, rep),
+                check_rep=False)(params, opt_state, err, labels, bnd,
+                                 feats_in, f_ovf)
+
+        @partial(jax.jit, donate_argnums=(0, 1, 2))
+        def compute_gather_fn(params, opt_state, err, features, labels,
+                              bnd):
+            return shard_map(
+                compute_gather_body, mesh=mesh,
+                in_specs=(rep, rep, rep, row, vec, bnd_spec),
+                out_specs=(rep, rep, rep, rep),
+                check_rep=False)(params, opt_state, err, features, labels,
+                                 bnd)
+
+        return StagedFns(sample=sample_fn, gather=gather_fn,
+                         compute=compute_fn, compute_gather=compute_gather_fn)
+
+    # ------------------------------------------------------------------
     # the partition-aware distributed program
     # ------------------------------------------------------------------
 
@@ -387,15 +713,7 @@ class TrainEngine:
                                       self.backend)
         spec = sampler.spec
         L = spec.num_layers
-        caps = spec.caps
         peer = spec.peer_caps
-        # owner-side seed buffers: bounded by what the all-to-all can
-        # deliver, kept under the layer's vertex buffer so next_seeds
-        # retains headroom for newly sampled vertices (both double
-        # together on overflow replay)
-        owned_caps = [min(P * peer[l], max(caps[l].vertex_cap // 2, 8))
-                      for l in range(L)]
-        deep_cap = min(P * peer[L], caps[-1].vertex_cap)
 
         def body(params, opt_state, err, indptr, indices, features, labels,
                  seeds, salts):
@@ -403,31 +721,14 @@ class TrainEngine:
             v_local = features.shape[0]
             my_part = _flat_axis_index(mesh, axes)
 
-            # ---- per-layer: route frontier to owners, sample locally
-            blocks, owned_rows, route_ovf, frontiers = [], [], [], []
-            frontier = seeds
-            for l in range(L):
-                owned, rows, _, r_ovf = _route_to_owners(
-                    frontier, P, peer[l], axes, owned_caps[l], v_local,
-                    my_part)
-                blk = sampler.sample_layer_partitioned(
-                    graph_l, owned, salts[l], l, seed_rows=rows,
-                    num_vertices=P * v_local, axis_name=axes)
-                blocks.append(blk)
-                owned_rows.append(rows)
-                route_ovf.append(r_ovf)
-                frontiers.append(owned)
-                frontier = blk.next_seeds
-            if train:
-                # the deepest frontier, deduplicated at its owners:
-                # |V^L| is the union's size (the paper's headline
-                # metric) and the set the engine-parity tests compare
-                # bit-exactly. Train-only: serving has no use for the
-                # extra all-to-all
-                deep_owned, _, deep_n, deep_ovf = _route_to_owners(
-                    frontier, P, peer[L], axes, deep_cap, v_local, my_part)
-                frontiers.append(deep_owned)
-                route_ovf.append(deep_ovf)
+            # ---- per-layer: route frontier to owners, sample locally;
+            # train additionally dedups the deepest frontier at its
+            # owners (|V^L|, the paper's headline metric and the set the
+            # engine-parity tests compare bit-exactly — serving has no
+            # use for the extra all-to-all)
+            blocks, owned_rows, route_ovf, frontiers, deep_n = (
+                _route_and_sample(sampler, mesh, axes, P, graph_l, v_local,
+                                  my_part, seeds, salts, with_deep=train))
 
             # ---- input features: the all-to-all LABOR shrinks
             feats_in, f_ovf = exchange_features(
@@ -440,18 +741,8 @@ class TrainEngine:
                                        axes)
 
             def forward(p, h):
-                h_ovfs = []
-                for b in range(L - 1, -1, -1):
-                    h = layer_fn(p["layers"][L - 1 - b], blocks[b], h,
-                                 is_last=b == 0, backend=backend)
-                    if b > 0:
-                        dense = _scatter_owned_rows(
-                            owned_rows[b], blocks[b].seeds >= 0, h, v_local)
-                        h, ovf_h = exchange_features(
-                            dense, blocks[b - 1].next_seeds, axes, peer[b],
-                            owner_mode="mod")
-                        h_ovfs.append(ovf_h)
-                return h, h_ovfs
+                return _forward_partitioned(layer_fn, p, blocks, owned_rows,
+                                            h, peer, axes, v_local, backend)
 
             def collect_flags(h_ovfs):
                 flags = jnp.concatenate([
@@ -573,6 +864,7 @@ class TrainEngine:
         self.sampler = self.sampler.doubled()
         self._step = None
         self._infer = None
+        self._staged = None
 
     def step(self, params, state: EngineState, data: EngineData, seeds, key,
              tag: Any = None):

@@ -27,6 +27,7 @@ from repro.models import gnn as gnn_models
 from repro.optim import adam
 from repro.runtime import checkpoint as ckpt_lib
 from repro.runtime.engine import TrainEngine, gather_feats, gnn_loss_fn
+from repro.runtime.pipeline import PipelinedEngine
 
 # the loss/gather helpers moved to the engine; re-exported here for the
 # unfused baseline's callers (benchmarks, fault-tolerance harness)
@@ -56,6 +57,13 @@ class GNNTrainConfig:
     # fuse sampling + gather + fwd/bwd + Adam into one XLA program with
     # donated buffers — every registered sampler traces inside it
     fused: bool = True
+    # "off": the single fused program above. "prefetch"/"full": the
+    # staged pipeline driver (repro.runtime.pipeline) — sample-ahead
+    # dispatch of the salt-only sampling program, and in "full" mode
+    # double-buffered feature gathers on their own program. Requires
+    # fused; parity vs "off" is bit-exact on sampled sets, fp-tolerance
+    # on params (tests/test_pipeline.py).
+    pipeline: str = "off"
     max_replay_retries: int = 3
     # > 0: run the partition-aware distributed engine over this many
     # devices (one shard_map; partitioned CSR + features; seed routing;
@@ -161,6 +169,12 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
                          stats=stats)
     data = engine.make_data_from_dataset(ds)
     state = engine.init_state(params)
+    driver = None
+    if cfg.pipeline != "off":
+        if not cfg.fused:
+            raise ValueError("pipeline modes require the fused engine "
+                             "(fused=True)")
+        driver = PipelinedEngine(engine, mode=cfg.pipeline)
     if not cfg.fused:
         feats = data.features
         labels_all = data.labels
@@ -220,6 +234,18 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
                                             **scalars(rm)}
         engine.replayed.clear()
 
+    def absorb(done):
+        """Fold the pipeline driver's retired batches into history —
+        retirement is FIFO in tag order, so appends land at the history
+        index the tag was assigned at dispatch."""
+        nonlocal m
+        for dtag, dm in done:
+            if history_metrics and dtag is not None:
+                device_history.append({"step": start_step + dtag + 1,
+                                       **scalars(dm)})
+            m = dm
+        drain_replays()
+
     def ckpt_meta():
         return {"loss": float(m["loss"]),
                 **ckpt_lib.engine_restore_meta(
@@ -236,7 +262,15 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
             epoch_iter = iter(batches.epoch())
             seeds = next(epoch_iter)
         key, sk = jax.random.split(key)
-        if cfg.fused:
+        if driver is not None:
+            # tag = the history index this batch will retire into
+            # (appended batches + batches still in flight ahead of it)
+            tag = (len(device_history) + driver.in_flight
+                   if history_metrics else None)
+            params, state, done = driver.step(params, state, data, seeds,
+                                              sk, tag=tag)
+            absorb(done)
+        elif cfg.fused:
             hist_idx = len(device_history) if history_metrics else None
             params, state, m = engine.step(params, state, data, seeds, sk,
                                            tag=hist_idx)
@@ -257,7 +291,13 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
                     "sampled_v": blocks[-1].num_next,
                     "sampled_e": sum(b.num_edges for b in blocks)})
         if saver and (step + 1) % cfg.ckpt_every == 0:
-            if cfg.fused:
+            if driver is not None:
+                # drain the whole pipeline before persisting: in-flight
+                # batches have no update yet, and a gated no-op batch
+                # must be replayed before its params are saved
+                params, state, done = driver.flush(params, state, data)
+                absorb(done)
+            elif cfg.fused:
                 # resolve the just-dispatched batch before persisting:
                 # if it overflowed its update was gated off on device and
                 # would otherwise be replayed only after the save
@@ -267,7 +307,10 @@ def train_gnn(ds: GraphDataset, cfg: GNNTrainConfig,
                     m = rm
             saver.save(step + 1, state_tree(params, state),
                        meta=ckpt_meta())
-    if cfg.fused:
+    if driver is not None:
+        params, state, done = driver.flush(params, state, data)
+        absorb(done)
+    elif cfg.fused:
         params, state, _ = engine.flush(params, state, data)
         drain_replays()
     wall = time.time() - t0

@@ -1,0 +1,269 @@
+"""Pipelined training driver (runtime/pipeline.py): staged-step parity
+vs the serial fused engine, the depth-aware OverflowLedger, and the
+in-flight invalidation protocol (docs/pipeline.md).
+
+The correctness bar: sampled sets are BIT-exact vs serial (the staged
+sample program inlines the identical sampling trace — LABOR's sets are
+salt-determined) and params match to fp tolerance (splitting the
+program moves XLA fusion boundaries, which changes rounding, nothing
+else)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import samplers
+from repro.core.interface import pad_seeds
+from repro.data.gnn_loader import LoaderStats, OverflowLedger
+from repro.graph.generators import DatasetSpec, generate
+from repro.models import gnn as gnn_models
+from repro.optim import adam
+from repro.runtime.engine import TrainEngine
+from repro.runtime.pipeline import PipelinedEngine
+from repro.runtime.trainer import GNNTrainConfig, train_gnn
+from tests._subproc import run_with_devices
+
+
+@pytest.fixture(scope="module")
+def ds():
+    spec = DatasetSpec("mini", 2000, 12.0, 16, 5, 0.5, 0.2, 0.6, 1000)
+    return generate(spec, scale=1.0, seed=0)
+
+
+def _leaves(params):
+    return [np.asarray(l) for l in jax.tree.leaves(params)]
+
+
+# ---------------------------------------------------------------------------
+# OverflowLedger depth semantics (unit)
+# ---------------------------------------------------------------------------
+
+def test_ledger_depth_window():
+    """A record surfaces a replay only once ``depth`` newer batches sit
+    on top of it; flush drains oldest-first."""
+    ovf = np.array([True])
+    ok = np.array([False])
+    led = OverflowLedger(LoaderStats(), depth=2)
+    assert led.record("a", ovf) is None       # window: [a]
+    assert led.record("b", ok) is None        # window: [a, b]
+    assert led.record("c", ok) == "a"         # a falls out -> replay
+    assert led.record("d", ovf) is None       # b falls out, clean
+    assert led.flush() == "d"                 # c clean, d overflowed
+    assert led.flush() is None
+    assert led.stats.overflow_replays == 2
+
+
+def test_ledger_depth_one_is_serial_protocol():
+    led = OverflowLedger(LoaderStats(), depth=1)
+    assert led.record("a", np.array([True])) is None
+    assert led.record("b", np.array([False])) == "a"
+    assert led.flush() is None  # b clean
+
+    with pytest.raises(ValueError):
+        OverflowLedger(LoaderStats(), depth=0)
+
+
+def test_pipelined_engine_rejects_bad_mode_and_depth(ds):
+    s = samplers.from_dataset("ns", ds, batch_size=32, fanouts=(4,),
+                              safety=3.0)
+    eng = TrainEngine(s, gnn_models.gcn_apply, adam.AdamConfig(lr=1e-2))
+    with pytest.raises(ValueError):
+        PipelinedEngine(eng, mode="turbo")
+    with pytest.raises(ValueError):
+        PipelinedEngine(eng, mode="full", depth=0)
+    assert PipelinedEngine(eng, mode="prefetch").depth == 1
+    assert PipelinedEngine(eng, mode="full").depth == 2
+
+
+# ---------------------------------------------------------------------------
+# single-host parity: every registry sampler, both modes
+# ---------------------------------------------------------------------------
+
+def _run(ds, cfg):
+    return train_gnn(ds, cfg)
+
+
+def _check_parity(r0, rp, atol=1e-6, rtol=1e-5):
+    assert len(r0["history"]) == len(rp["history"])
+    for a, b in zip(r0["history"], rp["history"]):
+        assert a["step"] == b["step"]
+        # sampled sets are salt-determined -> counts must be bit-exact
+        assert a["sampled_v"] == b["sampled_v"]
+        assert a["sampled_e"] == b["sampled_e"]
+    for a, b in zip(_leaves(r0["params"]), _leaves(rp["params"])):
+        np.testing.assert_allclose(a, b, rtol=rtol, atol=atol)
+
+
+@pytest.mark.parametrize("mode", ["prefetch", "full"])
+@pytest.mark.parametrize("sampler", list(samplers.list_samplers()))
+def test_pipeline_parity_all_samplers(ds, sampler, mode):
+    """pipeline=prefetch|full vs pipeline=off: identical history counts
+    and fp-equal params for every registered sampler."""
+    ls = (192, 144) if sampler in ("ladies", "pladies") else None
+    cfg = GNNTrainConfig(hidden=16, fanouts=(4, 3), sampler=sampler,
+                         layer_sizes=ls, batch_size=48, steps=5, lr=1e-2,
+                         seed=0, cap_safety=3.0)
+    _check_parity(_run(ds, cfg),
+                  _run(ds, dataclasses.replace(cfg, pipeline=mode)))
+
+
+def test_pipeline_off_lowers_to_fused_program(ds):
+    """pipeline=off must be the EXISTING single fused program — the
+    driver is never constructed and results are bit-identical to the
+    pre-pipeline engine path."""
+    cfg = GNNTrainConfig(hidden=16, fanouts=(4, 3), sampler="labor-0",
+                         batch_size=48, steps=4, lr=1e-2, seed=0,
+                         cap_safety=3.0, pipeline="off")
+    r0 = train_gnn(ds, cfg)
+    r1 = train_gnn(ds, dataclasses.replace(cfg))
+    for a, b in zip(_leaves(r0["params"]), _leaves(r1["params"])):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_pipeline_requires_fused(ds):
+    cfg = GNNTrainConfig(hidden=16, fanouts=(4,), sampler="ns",
+                         batch_size=48, steps=2, fused=False,
+                         pipeline="prefetch", cap_safety=3.0)
+    with pytest.raises(ValueError, match="fused"):
+        train_gnn(ds, cfg)
+
+
+# ---------------------------------------------------------------------------
+# the pipeline-aware replay protocol (the off-by-one regression)
+# ---------------------------------------------------------------------------
+
+def test_replay_off_by_one_with_two_in_flight(ds):
+    """Force overflow with two batches in flight (full mode, depth 2):
+    the doubled-caps replay must land in the same applied-update slot
+    as on the serial engine — params equal to serial at fp tolerance,
+    and the still-queued batches re-sampled at the grown caps."""
+    cfg = GNNTrainConfig(hidden=16, fanouts=(8,), sampler="ns",
+                         batch_size=128, steps=6, lr=1e-2, seed=0,
+                         cap_safety=0.02)   # guarantees early overflow
+    r0 = train_gnn(ds, cfg)
+    rp = train_gnn(ds, dataclasses.replace(cfg, pipeline="full"))
+    assert r0["stats"].overflow_replays >= 1
+    assert rp["stats"].overflow_replays == r0["stats"].overflow_replays
+    assert rp["stats"].overflow_retries == r0["stats"].overflow_retries
+    # a replay while batches are in flight must invalidate them
+    assert rp["stats"].pipeline_invalidations >= 1
+    _check_parity(r0, rp, atol=2e-5, rtol=1e-4)
+
+
+def test_invalidation_resamples_queued_batches(ds):
+    """Drive the raw driver: grow the engine mid-stream (as a replay
+    would) and check queued entries are re-sampled with the new caps."""
+    s = samplers.from_dataset("ns", ds, batch_size=48, fanouts=(4, 3),
+                              safety=3.0)
+    eng = TrainEngine(s, gnn_models.gcn_apply, adam.AdamConfig(lr=1e-2))
+    data = eng.make_data_from_dataset(ds)
+    drv = PipelinedEngine(eng, mode="full", depth=2)
+    params = gnn_models.gcn_init(jax.random.key(0), 16, 16, 5, 2)
+    state = eng.init_state(params)
+    seeds = pad_seeds(jnp.asarray(np.asarray(ds.train_idx[:48], np.int32)),
+                      48)
+    params, state, _ = drv.step(params, state, data, seeds,
+                                jax.random.key(0), tag=0)
+    params, state, _ = drv.step(params, state, data, seeds,
+                                jax.random.key(1), tag=1)
+    assert drv.in_flight == 2
+    old_cap = eng.sampler.caps[0].vertex_cap
+    eng.grow()                       # what _replay does on overflow
+    drv._invalidate(data)
+    assert eng.stats.pipeline_invalidations == 2
+    assert eng.sampler.caps[0].vertex_cap == 2 * old_cap
+    for ent in drv._queue:
+        assert ent.sampler is eng.sampler
+        # blocks were rebuilt at the doubled cap schedule
+        assert ent.blocks[0].next_cap == ent.sampler.caps[0].vertex_cap
+    params, state, done = drv.flush(params, state, data)
+    assert [t for t, _ in done] == [0, 1]
+
+
+# ---------------------------------------------------------------------------
+# 4-device mesh parity (subprocess: the host device count is locked at
+# first jax init, same pattern as tests/test_engine.py)
+# ---------------------------------------------------------------------------
+
+_MESH_PRELUDE = """
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import samplers
+from repro.core.interface import pad_seeds
+from repro.graph.generators import DatasetSpec, generate
+from repro.launch.mesh import make_mesh
+from repro.models import gnn as gnn_models
+from repro.optim import adam
+from repro.runtime.engine import TrainEngine
+from repro.runtime.pipeline import PipelinedEngine
+
+ds = generate(DatasetSpec("mini", 2000, 12.0, 16, 5, 0.5, 0.2, 0.6, 1000),
+              seed=0)
+P, B, fanouts = 4, 128, (4, 3)
+mesh = make_mesh((P,), ("data",))
+opt_cfg = adam.AdamConfig(lr=1e-2)
+base = gnn_models.gcn_init(jax.random.key(0), 16, 32, 5, len(fanouts))
+
+
+def mk(name):
+    s = samplers.from_dataset(name, ds, batch_size=B // P, fanouts=fanouts,
+                              safety=3.0, num_parts=P)
+    return TrainEngine(s, gnn_models.gcn_apply, opt_cfg, mesh=mesh)
+
+
+def seeds_for(t):
+    lo = t * B
+    return pad_seeds(jnp.asarray(np.asarray(ds.train_idx[lo:lo + B],
+                                            np.int32)), B)
+
+
+def check(name, mode, steps=3):
+    eS = mk(name)
+    dS = eS.make_data_from_dataset(ds)
+    pS = jax.tree.map(jnp.array, base)
+    stS = eS.init_state(pS)
+    histS = {}
+    for t in range(steps):
+        pS, stS, m = eS.step(pS, stS, dS, seeds_for(t), jax.random.key(t),
+                             tag=t)
+        histS[t] = m
+    pS, stS, _ = eS.flush(pS, stS, dS)
+
+    eP = mk(name)
+    dP = eP.make_data_from_dataset(ds)
+    drv = PipelinedEngine(eP, mode=mode)
+    pP = jax.tree.map(jnp.array, base)
+    stP = eP.init_state(pP)
+    histP = {}
+    for t in range(steps):
+        pP, stP, done = drv.step(pP, stP, dP, seeds_for(t),
+                                 jax.random.key(t), tag=t)
+        histP.update(dict(done))
+    pP, stP, done = drv.flush(pP, stP, dP)
+    histP.update(dict(done))
+
+    assert set(histS) == set(histP), (name, mode, "tags")
+    for t in histS:
+        assert not bool(jnp.any(histS[t]["overflow"])), (name, "overflow")
+        for fa, fb in zip(histS[t]["frontiers"], histP[t]["frontiers"]):
+            assert np.array_equal(np.asarray(fa), np.asarray(fb)), (
+                name, mode, t, "frontier sets")
+        assert int(histS[t]["sampled_v"]) == int(histP[t]["sampled_v"])
+        assert int(histS[t]["sampled_e"]) == int(histP[t]["sampled_e"])
+    for a, b in zip(jax.tree.leaves(pS), jax.tree.leaves(pP)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+    print(name, mode, "OK")
+"""
+
+
+@pytest.mark.slow
+def test_mesh_pipeline_parity():
+    """4-device mesh: pipelined driver vs the serial distributed engine
+    — bit-exact per-layer frontier sets, fp-tolerance params."""
+    run_with_devices(_MESH_PRELUDE + """
+for mode in ("prefetch", "full"):
+    for name in ("labor-0", "ns"):
+        check(name, mode)
+""", n=4, timeout=1200)
