@@ -12,7 +12,7 @@ import time
 
 
 BENCHES = ("table2", "table3", "table4", "fig1", "fig2", "table5", "kernels",
-           "sampling", "fused")
+           "sampling", "fused", "serving")
 
 
 def main() -> None:
@@ -67,6 +67,12 @@ def main() -> None:
         # trajectory point; BENCH_fused.json is committed
         from benchmarks import fused_step
         fused_step.run_json("BENCH_fused.json")
+    if "serving" in which:
+        # async continuous-batching driver vs sync per-request baseline
+        # on a Zipfian trace; BENCH_serving.json is committed
+        from benchmarks import serving_bench
+        serving_bench.main([], json_path="BENCH_serving.json",
+                           smoke_mode=smoke)
     print(f"# total bench time {time.time() - t0:.0f}s")
 
 

@@ -1,0 +1,202 @@
+"""Serving benchmark: the async continuous-batching driver vs the
+synchronous one-dispatch-per-request baseline, on a Zipfian trace.
+
+Production GNN serving traffic is many SMALL requests (a handful of
+seeds each — one user, one session) with a heavily skewed vertex
+popularity. The sync baseline (``launch/serve.py --driver off``) pays
+one fixed-shape fused-program dispatch per request, so a 4-seed
+request burns a full batch slot; the driver coalesces pending requests
+into shared dispatches and keeps hot vertices' feature rows device-
+resident (``repro.serving``). Both paths are timed warm — compile
+events are tagged and excluded (repro/serving/metrics.py) — over the
+SAME request trace.
+
+Reported per trace: warm nodes/sec and p50/p99 for both paths, the
+speedup, and the feature-cache hit rate. The acceptance gate for the
+serving tier is ``speedup_nodes_per_sec >= 2`` at the committed
+BENCH_serving.json settings.
+
+``--smoke`` is the CI parity gate: a small trace served three ways —
+sync, driver cache-off, driver cache-on — must yield bit-identical
+per-request logits between the two driver runs (cache transparency end
+to end), nonzero exit otherwise.
+
+  PYTHONPATH=src python benchmarks/serving_bench.py --json BENCH_serving.json
+  PYTHONPATH=src python benchmarks/serving_bench.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import samplers
+from repro.core.interface import pad_seeds
+from repro.graph import paper_dataset
+from repro.models import gnn as gnn_models
+from repro.optim import adam
+from repro.runtime.engine import TrainEngine
+from repro.serving import HiddenCache, ServingDriver, VertexCache
+from repro.serving.metrics import ServingStats
+
+
+def build(args):
+    ds = paper_dataset(args.dataset, scale=args.scale, seed=0)
+    fanouts = tuple(int(x) for x in args.fanouts.split(","))
+    sampler = samplers.from_dataset(args.sampler, ds,
+                                    batch_size=args.batch, fanouts=fanouts,
+                                    safety=2.0)
+    eng = TrainEngine(sampler, gnn_models.gcn_apply, adam.AdamConfig())
+    data = eng.make_data_from_dataset(ds)
+    params = gnn_models.gcn_init(jax.random.key(0), ds.features.shape[1],
+                                 args.hidden, int(ds.labels.max()) + 1,
+                                 len(fanouts))
+    return ds, eng, data, params
+
+
+def zipf_trace(ds, n_requests, request_size, a=1.1, seed=7):
+    """Skewed production-like traffic: request seeds drawn Zipfian over
+    the validation ids, so a small hot set dominates — the regime the
+    vertex caches are built for."""
+    idx = np.asarray(ds.val_idx)
+    ranks = np.arange(1, len(idx) + 1, dtype=np.float64)
+    p = ranks ** -a
+    p /= p.sum()
+    rng = np.random.default_rng(seed)
+    return [rng.choice(idx, size=request_size, p=p).astype(np.int32)
+            for _ in range(n_requests)]
+
+
+def run_sync(eng, data, params, trace, batch):
+    """The baseline: one fixed-shape dispatch per request, warm-timed
+    with the same compile-exclusion discipline as the driver."""
+    stats = ServingStats()
+    key = jax.random.key(1)
+    for i, seeds_np in enumerate(trace):
+        seeds = pad_seeds(jnp.asarray(seeds_np), batch)
+        t0 = time.perf_counter()
+        logits, grows = eng.infer_with_retry(params, data, seeds,
+                                             jax.random.fold_in(key, i))
+        np.asarray(logits)  # host sync — the request is answered
+        stats.record_batch(time.perf_counter() - t0, len(seeds_np), 1,
+                           compile_event=(i == 0 or grows > 0),
+                           grows=grows)
+        stats.served += 1
+    return stats
+
+
+def run_driver(eng, data, params, trace, batch, fc=None, hc=None, seed=1):
+    drv = ServingDriver(eng, params, data, batch_size=batch,
+                        feature_cache=fc, hidden_cache=hc, seed=seed)
+    tickets = [drv.submit(r) for r in trace]
+    drv.drain()
+    assert all(t.status == "ok" for t in tickets)
+    return drv.stats, tickets
+
+
+def bench(args):
+    ds, eng, data, params = build(args)
+    trace = zipf_trace(ds, args.requests, args.request_size, a=args.zipf_a)
+    fc = VertexCache(args.feature_cache, args.cache_policy)
+
+    sync = run_sync(eng, data, params, trace, args.batch)
+    drv_stats, _ = run_driver(eng, data, params, trace, args.batch, fc=fc)
+
+    s_nps, d_nps = sync.nodes_per_sec, drv_stats.nodes_per_sec
+    out = {
+        "bench": "serving",
+        "dataset": args.dataset, "scale": args.scale,
+        "sampler": args.sampler, "batch": args.batch,
+        "requests": args.requests, "request_size": args.request_size,
+        "zipf_a": args.zipf_a,
+        "feature_cache": args.feature_cache,
+        "cache_policy": args.cache_policy,
+        "sync": {
+            "nodes_per_sec": round(s_nps or 0.0, 1),
+            "p50_ms": round(sync.percentile_ms(50) or 0.0, 3),
+            "p99_ms": round(sync.percentile_ms(99) or 0.0, 3),
+            "batches": sync.batches,
+        },
+        "driver": {
+            "nodes_per_sec": round(d_nps or 0.0, 1),
+            "p50_ms": round(drv_stats.percentile_ms(50) or 0.0, 3),
+            "p99_ms": round(drv_stats.percentile_ms(99) or 0.0, 3),
+            "batches": drv_stats.batches,
+            "avg_batch_occupancy": round(
+                drv_stats.occupancy / max(drv_stats.batches, 1), 2),
+            "cache_hit_rate": (None if drv_stats.hit_rate is None
+                               else round(drv_stats.hit_rate, 4)),
+        },
+        "speedup_nodes_per_sec": (round(d_nps / s_nps, 2)
+                                  if s_nps and d_nps else None),
+    }
+    print("serving.path,nodes_per_sec,p50_ms,p99_ms")
+    for k in ("sync", "driver"):
+        r = out[k]
+        print(f"serving.{k},{r['nodes_per_sec']},{r['p50_ms']},"
+              f"{r['p99_ms']}")
+    print(f"serving.speedup,{out['speedup_nodes_per_sec']},,")
+    print(f"serving.cache_hit_rate,"
+          f"{out['driver']['cache_hit_rate']},,")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(out, f, indent=1)
+            f.write("\n")
+        print(f"# wrote {args.json}")
+    return out
+
+
+def smoke(args):
+    """CI gate: driver cache-on/off per-request logits bit-identical on
+    a shared trace (sync answers differ only by salt schedule, so the
+    transparency contract is driver-vs-driver)."""
+    args.scale, args.requests, args.request_size = 0.003, 16, 8
+    args.fanouts, args.hidden, args.batch = "4,3", 16, 32
+    ds, eng, data, params = build(args)
+    trace = zipf_trace(ds, args.requests, args.request_size)
+    _, base = run_driver(eng, data, params, trace, args.batch)
+    _, got = run_driver(eng, data, params, trace, args.batch,
+                        fc=VertexCache(256, args.cache_policy),
+                        hc=HiddenCache(256, max_age=0))
+    bad = 0
+    for tb, tg in zip(base, got):
+        if not np.array_equal(tb.logits, tg.logits):
+            bad += 1
+    if bad:
+        print(f"serving smoke FAIL: {bad}/{len(base)} requests diverged "
+              "with caches on")
+        return 1
+    print(f"serving smoke OK: {len(base)} requests bit-exact with "
+          "feature + hidden(max_age=0) caches on")
+    return 0
+
+
+def main(argv=None, json_path=None, smoke_mode=False):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dataset", default="products")
+    ap.add_argument("--scale", type=float, default=0.01)
+    ap.add_argument("--sampler", default="labor-0")
+    ap.add_argument("--fanouts", default="10,10")
+    ap.add_argument("--hidden", type=int, default=64)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=96)
+    ap.add_argument("--request-size", type=int, default=16)
+    ap.add_argument("--zipf-a", type=float, default=1.1)
+    ap.add_argument("--feature-cache", type=int, default=4096)
+    ap.add_argument("--cache-policy", default="fifo",
+                    choices=["fifo", "freq"])
+    ap.add_argument("--json", default=json_path)
+    ap.add_argument("--smoke", action="store_true", default=smoke_mode)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        sys.exit(smoke(args))
+    bench(args)
+
+
+if __name__ == "__main__":
+    main()

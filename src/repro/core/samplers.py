@@ -147,6 +147,41 @@ def resolve(name: str) -> RegistryEntry:
         f"{', '.join(list_samplers())} (plus labor-<i> for any i >= 0)")
 
 
+def sampler_arg_type(name: str) -> str:
+    """``argparse`` ``type=`` hook shared by every launcher: validate a
+    ``--sampler`` value against the registry at PARSE time, so an
+    unknown name is a usage error with the full listing instead of a
+    KeyError (or worse, a compiled program later) deep inside a
+    driver."""
+    import argparse
+    try:
+        resolve(name)
+    except UnknownSamplerError as e:
+        raise argparse.ArgumentTypeError(str(e))
+    return name
+
+
+def make_list_samplers_action():
+    """An ``argparse`` action class for ``--list-samplers``: print the
+    registry (one line per entry, plus the ``labor-<i>`` family) and
+    exit. Shared by ``launch/train.py`` and ``launch/serve.py`` so the
+    two CLIs cannot drift."""
+    import argparse
+
+    class ListSamplers(argparse.Action):
+        def __init__(self, option_strings, dest, **kw):
+            super().__init__(option_strings, dest, nargs=0, **kw)
+
+        def __call__(self, parser, namespace, values, option_string=None):
+            for name, doc in describe():
+                print(f"{name:10s} {doc}")
+            print(f"{'labor-<i>':10s} LABOR with any number of importance "
+                  "fixed-point iterations")
+            parser.exit()
+
+    return ListSamplers
+
+
 def get(name: str, budgets: Sequence[int],
         caps: Sequence[LayerCaps]) -> Sampler:
     """Build a registered sampler from explicit budgets + caps.

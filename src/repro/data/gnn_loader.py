@@ -36,6 +36,19 @@ class LoaderStats:
     pipeline_invalidations: int = 0
 
 
+class SamplingOverflowError(RuntimeError):
+    """Sampling (or all-to-all) overflow persisted after the cap-
+    doubling retry schedule was exhausted.
+
+    The ONE error type every overflow-retry surface raises — the eager
+    :func:`sample_with_retry`, the engine's async replay protocol
+    (``TrainEngine._replay``), and the serving retry
+    (``TrainEngine.infer_with_retry`` / the serving driver) — so
+    drivers catch cap exhaustion uniformly regardless of which path
+    sampled the batch. Subclasses ``RuntimeError`` for compatibility
+    with callers of the historical bare-RuntimeError contract."""
+
+
 class SeedBatches:
     """Shuffled, padded seed batches over training vertices.
 
@@ -125,7 +138,8 @@ def sample_with_retry(sampler, graph, seeds, key,
         if stats is not None:
             stats.overflow_retries += 1
         sampler = sampler.with_caps(double_caps(sampler.caps))
-    raise RuntimeError("sampling overflow persisted after cap doubling")
+    raise SamplingOverflowError(
+        "sampling overflow persisted after cap doubling")
 
 
 class OverflowLedger:

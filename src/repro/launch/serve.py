@@ -1,12 +1,23 @@
 """Serving drivers.
 
-GNN node-classification serving (the paper's workload): batched requests
-answered by a fused sample+gather+forward program built from the same
-registry ``Sampler`` the trainer uses — ``full`` gives exact
-(full-neighborhood) inference, any other entry gives sampled inference:
+GNN node-classification serving (the paper's workload): a stream of
+small seed requests answered from the same registry ``Sampler`` the
+trainer uses — ``full`` gives exact (full-neighborhood) inference, any
+other entry gives sampled inference. By default requests flow through
+the async serving driver (``repro.serving``): continuous batch
+coalescing into the engine's fixed-shape fused infer program, optional
+device-resident feature / stale hidden-state caches, deadline + SLO
+accounting (docs/serving.md):
 
   PYTHONPATH=src python -m repro.launch.serve --workload gnn \
-      --dataset products --scale 0.01 --sampler full --requests 16
+      --dataset products --scale 0.01 --sampler labor-0 \
+      --requests 64 --request-size 8 --feature-cache 4096
+
+``--driver off`` keeps the synchronous baseline — one fixed-shape
+dispatch per request — with honest latency accounting: compile time
+(first dispatch, and every ``engine.grow()`` cap retry, each a fresh
+jit specialization) is tagged and excluded from the warm p50/p99
+instead of silently folding into the tail.
 
 LM batched decode (CPU-scale demo of the serve_step the dry-run lowers
 at production scale):
@@ -21,13 +32,12 @@ import json
 import time
 
 
-def serve_gnn(args):
+def _build_gnn_serving(args):
+    """Shared setup of both GNN serve paths: dataset, params, engine."""
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from repro.core import samplers
-    from repro.core.interface import pad_seeds
     from repro.graph import paper_dataset
     from repro.models import gnn as gnn_models
     from repro.optim import adam
@@ -35,7 +45,6 @@ def serve_gnn(args):
     from repro.runtime.engine import TrainEngine
 
     ds = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
-    labels = np.asarray(ds.labels)
     fanouts = tuple(int(x) for x in args.fanouts.split(","))
     n_cls = int(ds.labels.max()) + 1
 
@@ -56,49 +65,122 @@ def serve_gnn(args):
     engine = TrainEngine(sampler, apply_fn, adam.AdamConfig(),
                          backend=args.backend)
     data = engine.make_data_from_dataset(ds)
+    return ds, engine, data, params, np.asarray(ds.labels)
 
-    idx = ds.val_idx
-    key = jax.random.key(args.seed + 1)
-    latencies, correct, total, timed_nodes = [], 0, 0, 0
+
+def _gnn_trace(args, ds):
+    """The request stream: ``--requests`` requests of ``--request-size``
+    seeds each over the validation ids — sequential scan, or a Zipfian
+    draw (``--trace zipf``) modelling skewed, repeat-heavy production
+    traffic."""
+    import numpy as np
+
+    idx = np.asarray(ds.val_idx)
+    size = args.request_size or args.batch
+    rng = np.random.default_rng(args.seed + 7)
+    out = []
     for r in range(args.requests):
-        lo = (r * args.batch) % max(len(idx) - args.batch, 1)
-        chunk = idx[lo:lo + args.batch]
-        seeds = pad_seeds(jnp.asarray(chunk), args.batch)
+        if args.trace == "zipf":
+            ranks = np.arange(1, len(idx) + 1, dtype=np.float64)
+            p = ranks ** -args.zipf_a
+            out.append(rng.choice(idx, size=size, p=p / p.sum()))
+        else:
+            lo = (r * size) % max(len(idx) - size, 1)
+            out.append(idx[lo:lo + size])
+    return out
+
+
+def _accuracy(requests, tickets_logits, labels):
+    import numpy as np
+    correct = total = 0
+    for seeds, logits in zip(requests, tickets_logits):
+        if logits is None:
+            continue
+        pred = np.argmax(logits, -1)
+        correct += int((pred == labels[seeds]).sum())
+        total += len(seeds)
+    return correct / max(total, 1)
+
+
+def serve_gnn_sync(args):
+    """The ``--driver off`` baseline: one fixed-shape fused infer
+    dispatch per request, synchronous. Retries follow the trainer's
+    ``sample_with_retry`` contract (``TrainEngine.infer_with_retry`` —
+    grow + same-key re-dispatch, ``SamplingOverflowError`` on
+    exhaustion), and every fresh jit specialization is recorded as a
+    tagged compile event, never folded into p50/p99."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.interface import pad_seeds
+    from repro.serving.metrics import ServingStats
+
+    ds, engine, data, params, labels = _build_gnn_serving(args)
+    requests = _gnn_trace(args, ds)
+    stats = ServingStats()
+    key = jax.random.key(args.seed + 1)
+    answers = []
+    for seeds_np in requests:
+        stats.submitted += 1
+        seeds = pad_seeds(jnp.asarray(seeds_np), args.batch)
         key, sk = jax.random.split(key)
+        gen_before = engine.generation
+        first = stats.batches == 0
         t0 = time.perf_counter()
-        logits, ovf = engine.infer(params, data, seeds, sk)
-        for _ in range(4):                      # overflow: grow and retry
-            if not bool(jnp.any(ovf)):
-                break
-            engine.grow()
-            logits, ovf = engine.infer(params, data, seeds, sk)
-        if bool(jnp.any(ovf)):
-            # same contract as sample_with_retry/engine replay: never
-            # score logits from a cap-truncated neighborhood
-            raise RuntimeError("sampling overflow persisted after cap "
-                               "doubling while serving")
-        pred = np.asarray(jnp.argmax(logits, -1))
-        lat = time.perf_counter() - t0
-        valid = np.asarray(seeds >= 0)
-        if r > 0:                               # exclude compile
-            latencies.append(lat)
-            timed_nodes += int(valid.sum())
-        correct += int(((pred == labels[np.asarray(jnp.where(seeds >= 0, seeds, 0))])
-                        & valid).sum())
-        total += int(valid.sum())
-    lat_ms = np.array(latencies) * 1e3 if latencies else np.array([0.0])
-    nodes_per_sec = (round(timed_nodes / (float(np.sum(lat_ms)) / 1e3), 1)
-                     if latencies else None)
-    print(json.dumps({
-        "sampler": engine.sampler.name,
-        "backend": engine.backend,
-        "exact": engine.sampler.name == "full",
-        "requests": args.requests, "batch": args.batch,
-        "latency_ms_p50": round(float(np.percentile(lat_ms, 50)), 2),
-        "latency_ms_p99": round(float(np.percentile(lat_ms, 99)), 2),
-        "nodes_per_sec": nodes_per_sec,
-        "accuracy": round(correct / max(total, 1), 4),
-    }, indent=1))
+        logits, grows = engine.infer_with_retry(params, data, seeds, sk)
+        logits = np.asarray(logits)[:len(seeds_np)]
+        dt = time.perf_counter() - t0
+        stats.grow_events += grows
+        stats.record_batch(
+            dt, len(seeds_np), 1,
+            compile_event=first or engine.generation != gen_before,
+            grows=grows)
+        stats.served += 1
+        answers.append(logits)
+    report = stats.report()
+    report.update(sampler=engine.sampler.name, backend=engine.backend,
+                  exact=engine.sampler.name == "full", driver="off",
+                  requests=args.requests,
+                  request_size=args.request_size or args.batch,
+                  batch=args.batch,
+                  accuracy=round(_accuracy(requests, answers, labels), 4))
+    print(json.dumps(report, indent=1))
+    return report
+
+
+def serve_gnn_driver(args):
+    """The async serving path: requests stream into the
+    :class:`~repro.serving.driver.ServingDriver`, which coalesces them
+    into the engine's fixed-shape program and scatters per-seed logits
+    back, with the device-resident caches exploiting request skew."""
+    from repro.serving import HiddenCache, ServingDriver, VertexCache
+
+    ds, engine, data, params, labels = _build_gnn_serving(args)
+    requests = _gnn_trace(args, ds)
+    fc = (VertexCache(args.feature_cache, args.cache_policy)
+          if args.feature_cache else None)
+    hc = (HiddenCache(args.hidden_cache, max_age=args.max_age,
+                      policy=args.cache_policy)
+          if args.hidden_cache else None)
+    driver = ServingDriver(engine, params, data, batch_size=args.batch,
+                           feature_cache=fc, hidden_cache=hc,
+                           deadline_ms=args.deadline_ms,
+                           max_queue=args.max_queue, seed=args.seed + 1)
+    tickets = [driver.submit(r) for r in requests]
+    driver.drain()
+    report = driver.stats.report()
+    report.update(sampler=engine.sampler.name, backend=engine.backend,
+                  exact=engine.sampler.name == "full", driver="async",
+                  requests=args.requests,
+                  request_size=args.request_size or args.batch,
+                  batch=args.batch,
+                  accuracy=round(_accuracy(
+                      requests,
+                      [t.logits if t.status == "ok" else None
+                       for t in tickets], labels), 4))
+    print(json.dumps(report, indent=1))
+    return report
 
 
 def serve_lm(args):
@@ -147,19 +229,27 @@ def serve_lm(args):
 
 
 def main():
+    from repro.core.samplers import (make_list_samplers_action,
+                                     sampler_arg_type)
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=["lm", "gnn"], default="lm")
     # lm
     ap.add_argument("--arch", default="stablelm-1.6b")
     ap.add_argument("--reduce", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lm: decode batch; gnn: the fused infer "
+                         "program's seed-buffer shape (the coalescing "
+                         "target)")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     # gnn
     ap.add_argument("--dataset", default="products")
     ap.add_argument("--scale", type=float, default=0.01)
-    ap.add_argument("--sampler", default="full",
-                    help="any registered sampler; 'full' = exact inference")
+    ap.add_argument("--sampler", default="full", type=sampler_arg_type,
+                    help="any registered sampler; 'full' = exact "
+                         "inference (see --list-samplers)")
+    ap.add_argument("--list-samplers", action=make_list_samplers_action(),
+                    help="print the sampler registry and exit")
     ap.add_argument("--model", default="gcn")
     ap.add_argument("--fanouts", default="10,10,10")
     ap.add_argument("--hidden", type=int, default=256)
@@ -169,14 +259,44 @@ def main():
                     help="graph-ops backend for the fused infer program "
                          "(repro.ops; auto = Pallas kernels on TPU)")
     ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--request-size", type=int, default=0,
+                    help="seeds per request (0 = one full batch per "
+                         "request, the historical baseline shape)")
+    ap.add_argument("--driver", default="async", choices=["async", "off"],
+                    help="async = continuous-batching request driver "
+                         "(repro.serving); off = one synchronous "
+                         "dispatch per request (baseline)")
+    ap.add_argument("--trace", default="scan", choices=["scan", "zipf"],
+                    help="request stream: sequential scan of val ids, "
+                         "or a Zipfian (skewed, repeat-heavy) draw")
+    ap.add_argument("--zipf-a", type=float, default=1.1,
+                    help="Zipf exponent of --trace zipf")
+    ap.add_argument("--feature-cache", type=int, default=0,
+                    help="device-resident feature-cache slots "
+                         "(0 = off; bit-exact either way)")
+    ap.add_argument("--hidden-cache", type=int, default=0,
+                    help="stale hidden-state cache slots (0 = off)")
+    ap.add_argument("--max-age", type=int, default=0,
+                    help="hidden-cache staleness bound in serve steps "
+                         "(0 = bit-exact, entries never served stale)")
+    ap.add_argument("--cache-policy", default="fifo",
+                    choices=["fifo", "freq"],
+                    help="cache slot eviction policy")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline for timeout/SLO "
+                         "accounting (async driver)")
+    ap.add_argument("--max-queue", type=int, default=1024,
+                    help="pending-request bound before admission "
+                         "rejects (backpressure)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
     if args.workload == "gnn":
-        from repro.core import samplers
-        samplers.resolve(args.sampler)   # fail fast on unknown names
-        serve_gnn(args)
+        if args.driver == "async":
+            serve_gnn_driver(args)
+        else:
+            serve_gnn_sync(args)
     else:
         serve_lm(args)
 

@@ -19,40 +19,17 @@ import dataclasses
 import json
 
 
-def _sampler_name(name: str) -> str:
-    """argparse type= hook: validate --sampler against the registry at
-    parse time (an unknown name used to surface as a bare KeyError deep
-    inside the trainer's sampler factory)."""
-    from repro.core import samplers
-    try:
-        samplers.resolve(name)
-    except samplers.UnknownSamplerError as e:
-        raise argparse.ArgumentTypeError(str(e))
-    return name
-
-
-class _ListSamplers(argparse.Action):
-    def __init__(self, option_strings, dest, **kw):
-        super().__init__(option_strings, dest, nargs=0, **kw)
-
-    def __call__(self, parser, namespace, values, option_string=None):
-        from repro.core import samplers
-        for name, doc in samplers.describe():
-            print(f"{name:10s} {doc}")
-        print(f"{'labor-<i>':10s} LABOR with any number of importance "
-              "fixed-point iterations")
-        parser.exit()
-
-
 def main():
+    from repro.core.samplers import (make_list_samplers_action,
+                                     sampler_arg_type)
     ap = argparse.ArgumentParser()
     ap.add_argument("--workload", choices=["gnn", "lm"], default="gnn")
     # gnn
     ap.add_argument("--dataset", default="products")
     ap.add_argument("--scale", type=float, default=0.01)
-    ap.add_argument("--sampler", default="labor-0", type=_sampler_name,
+    ap.add_argument("--sampler", default="labor-0", type=sampler_arg_type,
                     help="any registered sampler (see --list-samplers)")
-    ap.add_argument("--list-samplers", action=_ListSamplers,
+    ap.add_argument("--list-samplers", action=make_list_samplers_action(),
                     help="print the sampler registry and exit")
     ap.add_argument("--model", default="gcn")
     ap.add_argument("--fanouts", default="10,10,10")

@@ -63,7 +63,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P_
 
 from repro import ops as graph_ops
 from repro.core.interface import Sampler, overflow_flags, sampled_counts
-from repro.data.gnn_loader import LoaderStats, OverflowLedger
+from repro.data.gnn_loader import (LoaderStats, OverflowLedger,
+                                   SamplingOverflowError)
 from repro.distributed import compression as comp
 from repro.distributed.feature_exchange import (exchange_features,
                                                 request_layout)
@@ -340,6 +341,11 @@ class TrainEngine:
         self._step = None
         self._infer = None
         self._staged = None
+        self._infer_cached: Dict[Any, Callable] = {}
+        # program generation: bumped by grow(), so serving drivers can
+        # tag the next dispatch of each program as a fresh compile and
+        # know when to invalidate device caches keyed to the old shapes
+        self.generation = 0
         if mesh is not None:
             self.axes = tuple(mesh.axis_names)
             self.num_parts = 1
@@ -487,6 +493,83 @@ class TrainEngine:
             return logits, overflow_flags(blocks)
 
         return infer
+
+    def cached_infer_fn(self, feature_cache=None, hidden_cache=None):
+        """The cache-aware gather hook on the infer path: the same
+        fused sample + gather + forward program as :attr:`infer_fn`,
+        with the feature gather routed through a device-resident
+        :class:`~repro.serving.cache.VertexCache` (fetching only the
+        unique cache misses from the feature store) and, optionally,
+        the deepest layer's output substituted from a
+        :class:`~repro.serving.cache.HiddenCache` under its staleness
+        bound. Single-host only (the partitioned infer path already
+        owner-shards its feature reads).
+
+        Signature::
+
+            infer_c(params, graph, features, fc_state, hc_state,
+                    seeds, key) -> (logits, overflow_flags,
+                                    fc_state', hc_state', cache_metrics)
+
+        Pass ``None`` for a disabled cache's state. Feature-cache
+        values are verbatim feature rows, so ``logits`` are bit-exact
+        vs :attr:`infer_fn`; the hidden cache is bit-exact at
+        ``max_age=0`` by construction. One program is compiled per
+        (cache config, cap schedule) pair; :meth:`grow` invalidates
+        them alongside the other programs.
+        """
+        if self.mesh is not None:
+            raise NotImplementedError(
+                "cached inference is single-host; the partitioned infer "
+                "path reads owner-sharded features already")
+        cache_key = (feature_cache, hidden_cache)
+        fn = self._infer_cached.get(cache_key)
+        if fn is not None:
+            return fn
+        sampler, apply_fn = self.sampler, self.model_apply
+        backend = self.backend
+        layer_fn = None
+        if hidden_cache is not None:
+            layer_fn = gnn_models.LAYER_FNS.get(apply_fn)
+            if layer_fn is None:
+                raise ValueError(
+                    "the hidden-state cache needs a per-layer model "
+                    "(repro.models.gnn.LAYER_FNS); got "
+                    f"{getattr(apply_fn, '__name__', apply_fn)!r}")
+
+        @jax.jit
+        def infer_c(params, graph, features, fc_state, hc_state, seeds,
+                    key):
+            blocks = sampler.sample(graph, seeds, sampler.spec.salts(key))
+            metrics = {}
+            if feature_cache is not None:
+                feats, fc_state_out, fm = feature_cache.gather(
+                    fc_state, blocks[-1].next_seeds,
+                    lambda missed: jnp.take(features, missed, axis=0,
+                                            mode="fill", fill_value=0))
+                metrics.update(fm)
+            else:
+                feats, fc_state_out = gather_feats(features, blocks[-1]), None
+            if hidden_cache is None:
+                logits = apply_fn(params, blocks, feats, backend=backend)
+                hc_state_out = None
+            else:
+                L = len(blocks)
+                h = feats
+                for l, blk in enumerate(reversed(blocks)):
+                    h = layer_fn(params["layers"][l], blk, h,
+                                 is_last=l == L - 1, backend=backend)
+                    if l == 0 and L > 1:
+                        # deepest layer's output, keyed by its seed ids
+                        h, hc_state, hm = hidden_cache.substitute(
+                            hc_state, blk.seeds, h)
+                        metrics.update(hm)
+                logits, hc_state_out = h, hc_state
+            return (logits, overflow_flags(blocks), fc_state_out,
+                    hc_state_out, metrics)
+
+        self._infer_cached[cache_key] = infer_c
+        return infer_c
 
     # ------------------------------------------------------------------
     # the staged decomposition (pipeline driver programs)
@@ -865,6 +948,8 @@ class TrainEngine:
         self._step = None
         self._infer = None
         self._staged = None
+        self._infer_cached = {}
+        self.generation += 1
 
     def step(self, params, state: EngineState, data: EngineData, seeds, key,
              tag: Any = None):
@@ -901,7 +986,8 @@ class TrainEngine:
             if not bool(jnp.any(m["overflow"])):
                 return params, state, m
             sampler_then = self.sampler
-        raise RuntimeError("sampling overflow persisted after cap doubling")
+        raise SamplingOverflowError(
+            "sampling overflow persisted after cap doubling")
 
     def infer(self, params, data: EngineData, seeds, key):
         """Fused inference through the engine (see :attr:`infer_fn`)."""
@@ -910,6 +996,32 @@ class TrainEngine:
                                  key)
         return self.infer_fn(params, data.indptr, data.indices,
                              data.features, seeds, key)
+
+    def infer_with_retry(self, params, data: EngineData, seeds, key, *,
+                         max_retries: int = 4):
+        """:meth:`infer` under the trainer's overflow-retry contract:
+        on overflow, :meth:`grow` (doubled caps, fresh specialization)
+        and re-run with the SAME key — the sampled set is
+        salt-determined, so the retry answers the same request, just
+        un-truncated. Raises
+        :class:`~repro.data.gnn_loader.SamplingOverflowError` (the
+        same type ``sample_with_retry`` and the async replay raise)
+        when ``max_retries`` doublings don't clear it, so serving
+        drivers catch cap exhaustion uniformly with training drivers.
+
+        Returns ``(logits, grows)`` — ``grows`` > 0 tells the caller
+        the dispatch paid one or more fresh compiles (latency
+        accounting must tag, not fold, that time)."""
+        grows = 0
+        for _ in range(max_retries + 1):
+            out = self.infer(params, data, seeds, key)
+            if not bool(jnp.any(out[-1])):    # overflow flags, both paths
+                return (out[0] if self.mesh is None else out), grows
+            self.grow()
+            self.stats.overflow_retries += 1
+            grows += 1
+        raise SamplingOverflowError(
+            "sampling overflow persisted after cap doubling while serving")
 
     # ------------------------------------------------------------------
     # AOT lowering support (launch/perf.py roofline accounting)

@@ -1,0 +1,23 @@
+"""The serving subsystem: continuous batching + device-resident vertex
+caches behind an async request driver (docs/serving.md).
+
+LABOR bounds the sampled vertex set per seed, which makes per-request
+inference work small and — under real skewed traffic — highly
+cacheable. This package exploits both: :class:`ServingDriver` packs a
+stream of small requests into the engine's fixed-shape fused infer
+program (continuous batching, deadline/SLO accounting), and
+:class:`VertexCache` / :class:`HiddenCache` keep hot vertices' feature
+rows and lower-layer hidden states resident on device, keyed by vertex
+id through the frontier ``hash_dedup`` primitive.
+"""
+from repro.serving.batcher import (AdmissionError, Batch, Ticket, coalesce,
+                                   scatter_back)
+from repro.serving.cache import CacheState, HiddenCache, VertexCache
+from repro.serving.driver import ServingDriver
+from repro.serving.metrics import ServingStats
+
+__all__ = [
+    "AdmissionError", "Batch", "Ticket", "coalesce", "scatter_back",
+    "CacheState", "HiddenCache", "VertexCache",
+    "ServingDriver", "ServingStats",
+]

@@ -1,0 +1,253 @@
+"""Device-resident vertex caches for the serving tier.
+
+Real inference traffic is skewed and repeat-heavy: a small set of hot
+vertices shows up in most requests. LABOR bounds the sampled vertex set
+per seed (the paper's whole point), so the per-request working set is
+small enough to cache on device. Two caches exploit that:
+
+:class:`VertexCache` (the feature cache)
+    A cap-bounded table ``keys int32[C] / values f32[C, F]`` keyed by
+    vertex id. The lookup is the frontier ``hash_dedup`` primitive
+    (``repro/ops/frontier.py``): one call against the cache's key
+    column returns, for every queried id, its slot in ``[keys ; new]``
+    — slot < C is a hit at cache row ``slot``, slot >= C points into
+    the deduplicated miss list ``new``. The gather stage therefore
+    fetches ONLY the unique missed rows from the backing feature store
+    and serves hits straight from the cache, then inserts the missed
+    rows under a cheap slot-eviction policy (``fifo`` ring or ``freq``
+    least-frequently-used). Values are verbatim rows of the feature
+    matrix, so the cache-on gather is bit-exact vs the cache-off
+    ``gather_feats`` by construction.
+
+:class:`HiddenCache` (the optional stale hidden-state cache)
+    Same table machinery, but holding the output of the deepest GNN
+    layer keyed by vertex id, with a staleness bound: a hit is only
+    served while ``step - born[slot] <= max_age`` (age in serve steps).
+    ``max_age=0`` can never serve an entry from an earlier step, so the
+    bit-exact-off contract holds trivially; ``max_age>0`` substitutes a
+    hidden state computed under an earlier request's salts — an
+    identically-distributed LABOR estimate of the same quantity, exact
+    for the deterministic ``full`` sampler — and expired entries are
+    refreshed in place. The program still computes fresh lower-layer
+    states for every vertex (the fixed-shape program cannot shrink);
+    what the cache buys is a knob for future request-local programs and
+    a measured-staleness contract, surfaced per step as
+    ``hidden_hits`` / ``max_served_age``.
+
+Both classes are frozen (hashable) config objects whose methods trace
+inside a jitted program; all mutable state lives in the
+:class:`CacheState` pytree threaded through
+``TrainEngine.cached_infer_fn``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.ops import frontier as frontier_ops
+
+POLICIES = ("fifo", "freq")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class CacheState:
+    """Device-resident cache table (one per cache instance).
+
+    keys:   int32[C] vertex id held by each slot, -1 = empty.
+    values: f32[C, F] cached row per slot.
+    freq:   int32[C] request-hit counter (``freq`` eviction policy).
+    born:   int32[C] serve step the slot's value was computed at.
+    ptr:    int32[] FIFO ring insertion cursor.
+    step:   int32[] serve-step clock, incremented per program.
+    """
+    keys: jax.Array
+    values: jax.Array
+    freq: jax.Array
+    born: jax.Array
+    ptr: jax.Array
+    step: jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class VertexCache:
+    """Cap-bounded device-resident feature cache keyed by vertex id.
+
+    ``capacity`` is the slot count C; ``policy`` picks the eviction
+    order for missed-row inserts: ``fifo`` overwrites a ring of slots
+    (oldest-inserted first), ``freq`` evicts the least-frequently-hit
+    slots (empty slots first; new entries start at freq 1).
+    """
+    capacity: int
+    policy: str = "fifo"
+
+    def __post_init__(self):
+        if self.capacity < 1:
+            raise ValueError(f"cache capacity must be >= 1, got "
+                             f"{self.capacity}")
+        if self.policy not in POLICIES:
+            raise ValueError(f"cache policy must be one of {POLICIES}, "
+                             f"got {self.policy!r}")
+
+    def init_state(self, feat_dim: int, dtype=jnp.float32) -> CacheState:
+        C = self.capacity
+        return CacheState(
+            keys=jnp.full((C,), -1, jnp.int32),
+            values=jnp.zeros((C, feat_dim), dtype),
+            freq=jnp.zeros((C,), jnp.int32),
+            born=jnp.zeros((C,), jnp.int32),
+            ptr=jnp.int32(0),
+            step=jnp.int32(0),
+        )
+
+    # ------------------------------------------------------------------
+    # traced cache ops
+    # ------------------------------------------------------------------
+
+    def _lookup(self, state: CacheState, ids: jax.Array):
+        """One hash_dedup call against the key column: per-id slot in
+        ``[keys ; new]``, hit mask, and the deduplicated miss list.
+        ``new_cap = len(ids)`` can never overflow (<= len(ids) distinct
+        missed ids exist), so the cache path adds no overflow flag."""
+        T = ids.shape[0]
+        dd = frontier_ops.hash_dedup(ids, ids >= 0, state.keys, T)
+        hit = (dd.slots >= 0) & (dd.slots < self.capacity)
+        return dd, hit
+
+    def _insert(self, state: CacheState, missed: jax.Array,
+                num_miss: jax.Array, rows: jax.Array,
+                hit_slots: jax.Array, hit_mask: jax.Array) -> CacheState:
+        """Insert the (unique) missed ids + their fetched rows, evicting
+        per policy; bump hit frequencies; advance the step clock."""
+        C, T = self.capacity, missed.shape[0]
+        # duplicate queried ids share a slot, so dup hits accumulate —
+        # freq counts requests, which is what skew-aware eviction wants
+        freq = state.freq.at[jnp.where(hit_mask, hit_slots, C)].add(
+            1, mode="drop")
+        n_ins = jnp.minimum(num_miss, C)
+        take = jnp.arange(T, dtype=jnp.int32) < n_ins
+        if self.policy == "fifo":
+            tgt = (state.ptr + jnp.arange(T, dtype=jnp.int32)) % C
+            ptr = (state.ptr + n_ins) % C
+        else:
+            # least-frequently-used: empty slots first (key -1 sorts
+            # below any real count), then ascending hit count;
+            # stable argsort keeps eviction deterministic
+            order = jnp.argsort(jnp.where(state.keys >= 0, freq, -1),
+                                stable=True).astype(jnp.int32)
+            tgt = order[jnp.arange(T, dtype=jnp.int32) % C]
+            ptr = state.ptr
+        tgt_eff = jnp.where(take, tgt, C)  # dropped past n_ins (<= C,
+        #                                    so targets stay distinct)
+        keys = state.keys.at[tgt_eff].set(missed, mode="drop")
+        values = state.values.at[tgt_eff].set(
+            rows.astype(state.values.dtype), mode="drop")
+        freq = freq.at[tgt_eff].set(1, mode="drop")
+        born = state.born.at[tgt_eff].set(state.step, mode="drop")
+        return CacheState(keys=keys, values=values, freq=freq, born=born,
+                          ptr=ptr, step=state.step + 1)
+
+    def gather(self, state: CacheState, ids: jax.Array,
+               fetch: Callable[[jax.Array], jax.Array]):
+        """Cache-aware gather: rows for (padded, -1) ``ids`` with only
+        the unique missed ids going through ``fetch``.
+
+        ``fetch(missed int32[T] unique ascending, -1 pad) -> f32[T, F]``
+        reads the backing store (0-filled on pad slots). Returns
+        ``(rows f32[T, F], new_state, metrics)`` where metrics carries
+        device scalars ``hits`` / ``misses`` (unique missed ids) for
+        the driver's hit-rate accounting. Bit-exact vs a direct
+        store gather: hits serve previously fetched rows verbatim.
+        """
+        C = self.capacity
+        dd, hit = self._lookup(state, ids)
+        fetched = fetch(dd.new)
+        hit_rows = state.values[jnp.clip(dd.slots, 0, C - 1)]
+        miss_rows = fetched[jnp.clip(dd.slots - C, 0, ids.shape[0] - 1)]
+        rows = jnp.where(hit[:, None], hit_rows, miss_rows)
+        rows = jnp.where((ids >= 0)[:, None], rows, 0)
+        new_state = self._insert(state, dd.new, dd.num_new, fetched,
+                                 jnp.clip(dd.slots, 0, C - 1), hit)
+        valid = jnp.sum((ids >= 0).astype(jnp.int32))
+        hits = jnp.sum(hit.astype(jnp.int32))
+        metrics = {"hits": hits, "misses": valid - hits,
+                   "unique_misses": dd.num_new}
+        return rows, new_state, metrics
+
+
+@dataclasses.dataclass(frozen=True)
+class HiddenCache:
+    """Stale hidden-state cache: substitute the deepest GNN layer's
+    output for hot vertices, bounded by ``max_age`` serve steps.
+
+    ``max_age=0`` is the bit-exact-off contract: no entry from an
+    earlier step can be served. ``max_age=k`` serves entries computed
+    up to k steps ago (an identically-distributed LABOR estimate under
+    an earlier salt; exact for the deterministic ``full`` sampler) and
+    refreshes expired hits in place.
+    """
+    capacity: int
+    max_age: int = 0
+    policy: str = "fifo"
+
+    def __post_init__(self):
+        if self.max_age < 0:
+            raise ValueError(f"max_age must be >= 0, got {self.max_age}")
+        self._table  # constructing it validates capacity/policy
+
+    @property
+    def _table(self) -> VertexCache:
+        return VertexCache(self.capacity, self.policy)
+
+    def init_state(self, hidden_dim: int, dtype=jnp.float32) -> CacheState:
+        return self._table.init_state(hidden_dim, dtype)
+
+    def substitute(self, state: CacheState, ids: jax.Array,
+                   fresh: jax.Array):
+        """Serve cached rows for unexpired hits, ``fresh`` otherwise;
+        insert fresh rows for misses and refresh expired hits in place.
+
+        ``fresh f32[S, H]`` is this step's computed hidden state for
+        ``ids`` (the fixed-shape program computes it regardless — the
+        cache bounds staleness, it does not shrink the program).
+        Returns ``(rows, new_state, metrics)`` with ``hidden_hits`` /
+        ``max_served_age`` device scalars (the tested age invariant:
+        max_served_age <= max_age on every step).
+        """
+        C, S = self.capacity, ids.shape[0]
+        dd, hit = self._table._lookup(state, ids)
+        slot = jnp.clip(dd.slots, 0, C - 1)
+        age = state.step - state.born[slot]
+        live = hit & (age <= self.max_age)
+        rows = jnp.where(live[:, None], state.values[slot],
+                         fresh.astype(state.values.dtype))
+        rows = jnp.where((ids >= 0)[:, None], rows, 0)
+
+        # refresh expired hits in place (same slot, new value/birth)
+        expired = hit & ~live
+        exp_tgt = jnp.where(expired, slot, C)
+        values = state.values.at[exp_tgt].set(
+            fresh.astype(state.values.dtype), mode="drop")
+        born = state.born.at[exp_tgt].set(state.step, mode="drop")
+        refreshed = CacheState(keys=state.keys, values=values,
+                               freq=state.freq, born=born, ptr=state.ptr,
+                               step=state.step)
+
+        # misses insert their fresh rows: reuse the table insert, but
+        # rows must be scattered to the miss list's order first
+        # (dd.new is the dedup'd ascending miss list; slots - C maps
+        # each queried id to its row there)
+        miss_pos = jnp.where((dd.slots >= C), dd.slots - C, S)
+        fresh_by_miss = jnp.zeros((S, fresh.shape[-1]),
+                                  state.values.dtype).at[miss_pos].set(
+            fresh.astype(state.values.dtype), mode="drop")
+        new_state = self._table._insert(refreshed, dd.new, dd.num_new,
+                                        fresh_by_miss, slot, live)
+        served_age = jnp.where(live, age, 0)
+        metrics = {"hidden_hits": jnp.sum(live.astype(jnp.int32)),
+                   "hidden_expired": jnp.sum(expired.astype(jnp.int32)),
+                   "max_served_age": jnp.max(served_age)}
+        return rows, new_state, metrics
