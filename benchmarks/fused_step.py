@@ -22,7 +22,12 @@ sampled-vertices/step for up to three pipelines:
 ``speedup`` is fused vs. the legacy baseline (null for samplers with no
 legacy pipeline); ``speedup_vs_unfused`` isolates the pure pipeline
 effect with identical sampler math; ``pipeline_speedup_vs_fused`` is
-the best pipelined row over the single fused program.
+the best pipelined row over the single fused program. The
+``stage_{sample,gather,compute}_us`` rows time the staged programs the
+pipelined driver dispatches, each in isolation with a sync after the
+loop — on a host/device with real async dispatch the best pipelined
+step approaches max(stage times), on the single-stream CPU backend it
+degrades to their sum (see docs/pipeline.md).
 
 ``--check-parity`` additionally trains 10 steps from the same init on
 the fused and unfused paths and verifies bit-exact parameter equality.
@@ -155,6 +160,48 @@ def bench_sampler(ds, name, *, fanouts, batch_size, hidden, steps,
     jax.block_until_ready(blocks[-1].next_seeds)
     sample_sps = steps / (time.perf_counter() - t0)
 
+    # per-stage wall times of the STAGED decomposition the pipelined
+    # driver dispatches (TrainEngine.staged): sample / gather / compute
+    # timed in isolation with a sync after each loop, so a pipeline
+    # regression is attributable to a specific stage rather than showing
+    # up only as a steps-per-sec delta
+    eng = TrainEngine(sampler, gnn_models.gcn_apply, opt_cfg)
+    sdata = eng.make_data_from_dataset(ds)
+    st = eng.staged
+    if eng.mesh is None:
+        def stage_us(fn, warm):
+            jax.block_until_ready(jax.tree.leaves(warm()))
+            t0 = time.perf_counter()
+            for _ in range(steps):
+                r = fn()
+            jax.block_until_ready(jax.tree.leaves(r))
+            return 1e6 * (time.perf_counter() - t0) / steps
+
+        kb = jax.random.fold_in(key, 1)
+        sblocks = st.sample(sdata.graph, seeds, kb)
+        sample_us = stage_us(lambda: st.sample(sdata.graph, seeds, kb),
+                             lambda: sblocks)
+        sg = st.gather(sdata.features, sdata.labels, sblocks)
+        gather_us = stage_us(
+            lambda: st.gather(sdata.features, sdata.labels, sblocks),
+            lambda: sg)
+        # compute donates its params/opt buffers — thread them through
+        sfeats, slabels = sg
+        p, o = fresh()
+        p, o, m = st.compute(p, o, sblocks, sfeats, slabels)
+        jax.block_until_ready(m["loss"])
+        t0 = time.perf_counter()
+        for _ in range(steps):
+            p, o, m = st.compute(p, o, sblocks, sfeats, slabels)
+        jax.block_until_ready(m["loss"])
+        compute_us = 1e6 * (time.perf_counter() - t0) / steps
+        stage_rows = {"stage_sample_us": round(sample_us, 1),
+                      "stage_gather_us": round(gather_us, 1),
+                      "stage_compute_us": round(compute_us, 1)}
+    else:  # mesh engines stage differently; not part of this bench
+        stage_rows = {"stage_sample_us": None, "stage_gather_us": None,
+                      "stage_compute_us": None}
+
     out = {
         "sampler": name,
         "fused_steps_per_sec": round(fused_sps, 3),
@@ -167,6 +214,7 @@ def bench_sampler(ds, name, *, fanouts, batch_size, hidden, steps,
         "sampled_vertices_per_step": round(fused_v, 1),
         "sample_phase_us": round(1e6 / sample_sps, 1),
         "sample_phase_frac": round(fused_sps / sample_sps, 3),
+        **stage_rows,
     }
 
     # legacy: op-by-op eager sampling + cold-start iterative c_s solver

@@ -147,6 +147,63 @@ def run(v=400_000, batch=512, fanout=10, reps=5, smoke=False):
         rows.append((f"masked_cdf_draw_{backend_name}",
                      _time(f, p, u, reps=reps), bnote))
 
+    # ---- serial vs grid-parallel Pallas kernels, FULL scale: the
+    # committed trajectory columns for the tiled kernel rewrite. Both
+    # run under the same interpret/compiled mode, on identical inputs,
+    # through the kernel wrappers directly (no registry indirection) —
+    # the speedup column is pure kernel structure. Bit-exactness of the
+    # pair is CI-gated in tests/test_frontier.py; here we only time.
+    from repro.kernels.frontier import ops as fk_serial
+    from repro.kernels.frontier import parallel as fk_par
+
+    nc_f = caps.vertex_cap - batch
+    keys_i = jnp.clip(blk.src_slot, -1, nc_f - 1)
+    slot_s = jnp.clip(exp["seed_slot"], -1, batch - 1)
+    mask_s = exp["mask"] & (slot_s >= 0)
+    keys_f = rng_lib.hash_uniform(jnp.uint32(1), exp["src"])
+    take = jnp.minimum(fanout, exp["deg"][:batch])
+    segst = jnp.clip(exp["seg_start"][:batch], 0, E - 1)
+    p_f = jnp.abs(jnp.asarray(rng.normal(size=E), jnp.float32))
+    u_f = rng_lib.hash_uniform(jnp.uint32(2), jnp.arange(batch))
+    pairs = [
+        ("hash_dedup",
+         jax.jit(lambda: fk_serial.hash_dedup_block(
+             blk.src, blk.edge_mask, seeds, nc_f, interpret=INTERPRET)),
+         jax.jit(lambda: fk_par.hash_dedup_block_parallel(
+             blk.src, blk.edge_mask, seeds, nc_f, interpret=INTERPRET))),
+        ("compact",
+         jax.jit(lambda: fk_serial.compact_block(
+             include, caps.edge_cap, interpret=INTERPRET)),
+         jax.jit(lambda: fk_par.compact_block_parallel(
+             include, caps.edge_cap, interpret=INTERPRET))),
+        ("compact_perm",
+         jax.jit(lambda: fk_serial.compact_perm_block(
+             keys_i, blk.edge_mask, nc_f, interpret=INTERPRET)),
+         jax.jit(lambda: fk_par.compact_perm_block_parallel(
+             keys_i, blk.edge_mask, nc_f, interpret=INTERPRET))),
+        ("segment_select",
+         jax.jit(lambda: fk_serial.segment_select_block(
+             keys_f, slot_s, mask_s, take, batch, fanout,
+             interpret=INTERPRET)),
+         jax.jit(lambda: fk_par.segment_select_block_parallel(
+             keys_f, slot_s, mask_s, segst, take, batch,
+             interpret=INTERPRET))),
+        ("masked_cdf_draw",
+         jax.jit(lambda: fk_serial.masked_cdf_draw_block(
+             p_f, p_f > 0, u_f, interpret=INTERPRET)),
+         jax.jit(lambda: fk_par.masked_cdf_draw_block_parallel(
+             p_f, p_f > 0, u_f, interpret=INTERPRET))),
+    ]
+    par_speedups = {}
+    for pname, f_ser, f_par in pairs:
+        t_ser = _time(f_ser, reps=reps)
+        t_par = _time(f_par, reps=reps)
+        par_speedups[pname] = round(t_ser / max(t_par, 1e-9), 2)
+        rows.append((f"frontier_serial_{pname}", t_ser, note))
+        rows.append((f"frontier_parallel_{pname}", t_par, note))
+    par_geo = round(float(np.exp(np.mean(
+        [np.log(s) for s in par_speedups.values()]))), 2)
+
     # ---- dense O(V) baselines of the same jobs, at full scale
     new_cap = caps.vertex_cap - batch
     f = jax.jit(lambda es, em, s: _dense_dedup(es, em, s, V, new_cap))
@@ -216,6 +273,8 @@ def run(v=400_000, batch=512, fanout=10, reps=5, smoke=False):
         "build_block_frontier_us": round(t_new, 1),
         "build_block_dense_us": round(t_old, 1),
         "epilogue_speedup_vs_dense": round(t_old / max(t_new, 1e-9), 2),
+        "parallel_vs_serial_speedup": par_speedups,
+        "parallel_vs_serial_geomean": par_geo,
     }
     return rows, summary
 

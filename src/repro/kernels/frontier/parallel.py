@@ -1,0 +1,533 @@
+"""Grid-parallel tiled Pallas kernels for the frontier primitives.
+
+The serial kernels (kernels/frontier/frontier.py) are single-grid-step
+scalar scans — one ``fori_loop`` iteration per element. These kernels
+replace the element-at-a-time loops with lane-parallel work over tiles:
+
+  * ``hash_dedup``   — a grid over value tiles builds per-tile stripes
+                       (tile-local bitonic sort → first-of-run dedup →
+                       seed filter by vectorized binary search), then a
+                       cooperative merge pass sorts the stripe buffer,
+                       counts distinct survivors, and compacts them to
+                       the ascending ``new`` contract; the value→slot
+                       lookup is a batched binary search over the
+                       sorted ``[seeds ; new]`` table.
+  * ``compact``      — block-parallel prefix-scan compaction: each grid
+                       step sorts one tile's flag positions, reads the
+                       running cross-tile offset (the scan carry, in
+                       SMEM), and stores its compacted run contiguously.
+  * ``compact_perm`` — one tiled bitonic sort; when the key range fits,
+                       (key, index) packs into a single int32 word
+                       (stability for free — packed words are unique),
+                       else a two-word lexicographic compare-exchange.
+  * ``segment_select`` — a tiled (slot, key-bits) sort extracts every
+                       segment's take-th-smallest threshold in one
+                       pass, replacing the 31-pass serial bisection;
+                       inclusion then replays the reference's
+                       threshold/tie-rank formula in arrival order.
+  * ``masked_cdf_draw`` — all draws binary-search the VMEM CDF in
+                       lockstep (log2(C) vectorized steps), instead of
+                       one ``while_loop`` per draw.
+
+Bit-compatibility: identical to kernels/frontier/ref.py on every
+contractual output (see ref.py's notes) whenever no stripe overflows —
+and the default ``stripe_cap == tile`` makes stripe overflow
+impossible, since a tile holds at most ``tile`` distinct values.
+Forcing ``stripe_cap < tile`` (tests, and the doubled-caps drill)
+exercises the cross-tile overflow propagation: any tile with more
+survivors than its stripe raises the same give-up flag the serial
+hash-table path raises, healed by the doubled-caps replay.
+
+Tile sizes are the knobs the autotune cache (repro/ops/autotune.py)
+tunes; every wrapper takes them as static arguments with deterministic
+defaults. Sort/search widths are padded to powers of two — padding is
+cap-derived, so the no-V-sized-buffer property of the family is
+preserved (and re-checked by the jaxpr-walk gate).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.frontier.ref import DedupResult, normalized_cdf
+
+_INT_MAX = jnp.int32(2**31 - 1)
+
+DEFAULT_TILE = 512
+_MIN_TILE = 8  # keeps padded dims off the jaxpr gate's prime V window
+
+
+def _pow2_at_least(x: int) -> int:
+    p = _MIN_TILE
+    while p < x:
+        p *= 2
+    return p
+
+
+def _col(x):
+    return jnp.reshape(x, (-1, 1))
+
+
+def _i32(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def _iota(n: int):
+    return jax.lax.broadcasted_iota(jnp.int32, (n,), 0)
+
+
+# ---------------------------------------------------------------------------
+# in-kernel building blocks: bitonic compare-exchange networks + scans
+# ---------------------------------------------------------------------------
+
+def _cmp_exchange(keys, pays, d: int, desc):
+    """One bitonic step at distance ``d``: lexicographic over the
+    ``keys`` words, ``pays`` carried through the swaps. Arrays are
+    (..., N); ``desc`` is the per-block direction, (N // 2d, 1)."""
+    shp = keys[0].shape
+    n = shp[-1]
+    resh = lambda x: x.reshape(shp[:-1] + (n // (2 * d), 2, d))
+    a_k = [resh(k)[..., 0, :] for k in keys]
+    b_k = [resh(k)[..., 1, :] for k in keys]
+    a_p = [resh(p)[..., 0, :] for p in pays]
+    b_p = [resh(p)[..., 1, :] for p in pays]
+    gt = a_k[0] > b_k[0]
+    eq = a_k[0] == b_k[0]
+    for i in range(1, len(keys)):
+        gt |= eq & (a_k[i] > b_k[i])
+        eq &= a_k[i] == b_k[i]
+    swap = gt != desc
+
+    def merge(a, b):
+        na = jnp.where(swap, b, a)
+        nb = jnp.where(swap, a, b)
+        return jnp.stack([na, nb], axis=-2).reshape(shp)
+
+    return ([merge(a, b) for a, b in zip(a_k, b_k)],
+            [merge(a, b) for a, b in zip(a_p, b_p)])
+
+
+def _bitonic_sort(keys: Sequence, pays: Sequence = ()) -> Tuple[list, list]:
+    """Ascending bitonic sort over the last axis (a static power of
+    two). ``keys`` are compared lexicographically; ``pays`` ride along.
+    log^2(N) fully vectorized compare-exchange steps — every lane works
+    every step, unlike the serial kernels' one-element loops."""
+    keys, pays = list(keys), list(pays)
+    n = keys[0].shape[-1]
+    for st in range(n.bit_length() - 1):
+        for sub in range(st, -1, -1):
+            d = 1 << sub
+            m = _iota(n // (2 * d))
+            desc = ((((m * (2 * d)) >> (st + 1)) & 1) != 0)[:, None]
+            keys, pays = _cmp_exchange(keys, pays, d, desc)
+    return keys, pays
+
+
+def _prefix_incl(x):
+    """Inclusive prefix sum by Hillis-Steele doubling shifts: log2(N)
+    vectorized add steps (the block-parallel scan the compaction and
+    tie-ranking passes share)."""
+    n = x.shape[0]
+    d = 1
+    while d < n:
+        x = x + jnp.concatenate([jnp.zeros((d,), x.dtype), x[:-d]])
+        d *= 2
+    return x
+
+
+def _searchsorted(tbl, q, hi_cap: int):
+    """Vectorized left binary search of every ``q`` in sorted ``tbl``
+    (all queries advance in lockstep — log2 steps of gathers)."""
+    lo = jnp.zeros(q.shape, jnp.int32)
+    hi = jnp.full(q.shape, hi_cap, jnp.int32)
+    for _ in range(max(hi_cap.bit_length(), 1)):
+        mid = (lo + hi) >> 1
+        ge = tbl[jnp.clip(mid, 0, hi_cap - 1)] >= q
+        lo = jnp.where(ge, lo, mid + 1)
+        hi = jnp.where(ge, mid, hi)
+    return lo
+
+
+# ---------------------------------------------------------------------------
+# hash_dedup — tile stripes (grid) -> cooperative merge -> batched lookup
+# ---------------------------------------------------------------------------
+
+def dedup_tiles_kernel(values_ref, mask_ref, sseeds_ref, stripes_ref,
+                       ovf_ref, *, stripe: int):
+    """Grid step t: dedup tile t into its stripe. Tile-local bitonic
+    sort makes duplicates adjacent; survivors (first-of-run, not a
+    seed) compact to the stripe head via a second payload-carrying
+    sort. A tile with more survivors than ``stripe`` raises the shared
+    overflow flag — the cross-tile analogue of the serial hash table's
+    give-up."""
+    t = pl.program_id(0)
+    bt = values_ref.shape[0]
+    sp = sseeds_ref.shape[0]
+
+    @pl.when(t == 0)
+    def _():
+        ovf_ref[0, 0] = jnp.int32(0)
+
+    imax = jnp.int32(2**31 - 1)
+    v = values_ref[:, 0]
+    valid = (mask_ref[:, 0] != 0) & (v >= 0)
+    (vs,), _ = _bitonic_sort((jnp.where(valid, v, imax),))
+    present = vs != imax
+    uniq = present & jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), vs[1:] != vs[:-1]])
+    seeds = sseeds_ref[:, 0]
+    j = jnp.clip(_searchsorted(seeds, vs, sp), 0, sp - 1)
+    keep = uniq & (seeds[j] != vs)
+    cnt = jnp.sum(keep.astype(jnp.int32))
+    (_, ), (pv,) = _bitonic_sort(
+        (jnp.where(keep, _iota(bt), bt + _iota(bt)),), (vs,))
+    stripes_ref[...] = jnp.where(_iota(stripe) < cnt, pv[:stripe],
+                                 imax)[:, None]
+
+    @pl.when(cnt > stripe)
+    def _():
+        ovf_ref[0, 0] = jnp.int32(1)
+
+
+def dedup_merge_kernel(stripes_ref, new_ref, num_ref):
+    """Cooperative merge: one sort makes cross-tile duplicates
+    adjacent, the distinct survivors are counted exactly, and a second
+    sort compacts them — already ascending, the ``new`` contract, with
+    no insertion-order fixup needed."""
+    m = new_ref.shape[0]
+    imax = jnp.int32(2**31 - 1)
+    (s,), _ = _bitonic_sort((stripes_ref[:, 0],))
+    uniq = (s != imax) & jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), s[1:] != s[:-1]])
+    num_ref[0, 0] = jnp.sum(uniq.astype(jnp.int32))
+    (s3,), _ = _bitonic_sort((jnp.where(uniq, s, imax),))
+    head = s3[:m]
+    new_ref[...] = jnp.where((_iota(m) < num_ref[0, 0]) & (head != imax),
+                             head, -1)[:, None]
+
+
+def lookup_batched_kernel(tvs_ref, slots_tbl_ref, values_ref, mask_ref,
+                          out_ref):
+    """Batched value→slot lookup: every edge binary-searches the sorted
+    ``[seeds ; new]`` table in lockstep (replacing one linear-probe
+    ``while_loop`` per edge)."""
+    kp = tvs_ref.shape[0]
+    tvs = tvs_ref[:, 0]
+    v = values_ref[:, 0]
+    valid = (mask_ref[:, 0] != 0) & (v >= 0)
+    j = jnp.clip(_searchsorted(tvs, v, kp), 0, kp - 1)
+    found = valid & (tvs[j] == v)
+    out_ref[...] = jnp.where(found, slots_tbl_ref[:, 0][j], -1)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("new_cap", "tile", "stripe_cap",
+                                             "interpret"))
+def _dedup_parallel(values, mask, seeds_in, new_cap: int, tile: int,
+                    stripe_cap: int, interpret: bool):
+    e = values.shape[0]
+    ep = ((e + tile - 1) // tile) * tile
+    t = ep // tile
+    vp = jnp.pad(values.astype(jnp.int32), (0, ep - e), constant_values=-1)
+    mp = jnp.pad(mask.astype(jnp.int32), (0, ep - e))
+    s = seeds_in.shape[0]
+    sp = _pow2_at_least(s)
+    sseeds = jnp.sort(jnp.pad(
+        jnp.where(seeds_in >= 0, seeds_in, _INT_MAX), (0, sp - s),
+        constant_values=_INT_MAX.item()))
+    cp = _pow2_at_least(t * stripe_cap)
+    stripes, ovf = pl.pallas_call(
+        functools.partial(dedup_tiles_kernel, stripe=stripe_cap),
+        grid=(t,),
+        in_specs=[pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((tile, 1), lambda i: (i, 0)),
+                  pl.BlockSpec((sp, 1), lambda i: (0, 0))],
+        out_specs=(pl.BlockSpec((stripe_cap, 1), lambda i: (i, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))),
+        out_shape=(_i32((t * stripe_cap, 1)), _i32((1, 1))),
+        interpret=interpret,
+    )(_col(vp), _col(mp), _col(sseeds))
+    spad = jnp.pad(stripes[:, 0], (0, cp - t * stripe_cap),
+                   constant_values=_INT_MAX.item())
+    m = min(new_cap, cp)
+    new_raw, num = pl.pallas_call(
+        dedup_merge_kernel,
+        out_shape=(_i32((m, 1)), _i32((1, 1))),
+        interpret=interpret,
+    )(_col(spad))
+    new = jnp.pad(new_raw[:, 0], (0, new_cap - m), constant_values=-1)
+    return new, num[0, 0], ovf[0, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def _lookup_parallel(next_vals, values, mask, interpret: bool):
+    k = next_vals.shape[0]
+    kp = _pow2_at_least(k)
+    tbl = jnp.pad(jnp.where(next_vals >= 0, next_vals, _INT_MAX),
+                  (0, kp - k), constant_values=_INT_MAX.item())
+    order = jnp.argsort(tbl).astype(jnp.int32)
+    slots_tbl = jnp.where(order < k, order, -1)
+    out = pl.pallas_call(
+        lookup_batched_kernel,
+        out_shape=_i32((values.shape[0], 1)),
+        interpret=interpret,
+    )(_col(tbl[order]), _col(slots_tbl), _col(values.astype(jnp.int32)),
+      _col(mask.astype(jnp.int32)))
+    return out[:, 0]
+
+
+def hash_dedup_block_parallel(values: jax.Array, mask: jax.Array,
+                              seeds: Optional[jax.Array], new_cap: int,
+                              tile: int = DEFAULT_TILE,
+                              stripe_cap: Optional[int] = None,
+                              interpret: bool = False) -> DedupResult:
+    """Grid-parallel hash_dedup: per-tile stripes + cooperative merge +
+    batched lookup. Bit-exact vs ref.hash_dedup (and the serial kernel)
+    whenever no stripe overflows — guaranteed at the default
+    ``stripe_cap == tile``. Smaller stripes trade merge width for a
+    possible flagged give-up, exactly like an undersized serial hash
+    table."""
+    e = values.shape[0]
+    tile = min(_pow2_at_least(tile), _pow2_at_least(e))
+    if stripe_cap is None:
+        stripe_cap = tile
+    stripe_cap = max(1, min(stripe_cap, tile))
+    seeds_in = (jnp.full((1,), -1, jnp.int32) if seeds is None
+                else seeds.astype(jnp.int32))
+    new, num_new, stripe_ovf = _dedup_parallel(
+        values, mask, seeds_in, new_cap, tile, stripe_cap, interpret)
+    if seeds is not None:
+        next_vals = jnp.concatenate([seeds.astype(jnp.int32), new])
+    else:
+        next_vals = new
+    slots = _lookup_parallel(next_vals, values, mask, interpret)
+    overflow = (num_new > new_cap) | (stripe_ovf != 0)
+    return DedupResult(new=new, slots=slots, num_new=num_new,
+                       overflow=overflow)
+
+
+# ---------------------------------------------------------------------------
+# compact — per-tile sorted positions + cross-tile scan carry (grid)
+# ---------------------------------------------------------------------------
+
+def compact_tiles_kernel(flags_ref, sel_ref, num_ref, scratch_ref, off_ref):
+    """Grid step t: compact tile t's set flags and store the run at the
+    running offset (the prefix-scan carry over tile counts, in SMEM).
+    Within the tile a bitonic sort of flagged local positions replaces
+    the serial running-counter loop — order is preserved, so the
+    concatenated runs equal ``jnp.nonzero``'s output exactly."""
+    t = pl.program_id(0)
+    nt = pl.num_programs(0)
+    bt = flags_ref.shape[0]
+    cap = sel_ref.shape[0]
+
+    @pl.when(t == 0)
+    def _():
+        off_ref[0] = jnp.int32(0)
+        scratch_ref[...] = jnp.zeros(scratch_ref.shape, jnp.int32)
+
+    f = flags_ref[:, 0] != 0
+    cnt = jnp.sum(f.astype(jnp.int32))
+    (k,), _ = _bitonic_sort((jnp.where(f, _iota(bt), bt + _iota(bt)),))
+    run = jnp.where(_iota(bt) < cnt, k + t * bt, 0)
+    off = off_ref[0]
+
+    @pl.when(off < cap)
+    def _():
+        scratch_ref[pl.ds(off, bt), :] = run[:, None]
+
+    off_ref[0] = off + cnt
+
+    @pl.when(t == nt - 1)
+    def _():
+        num_ref[0, 0] = off + cnt
+        sel_ref[...] = scratch_ref[pl.ds(0, cap), :]
+
+
+@functools.partial(jax.jit, static_argnames=("cap", "tile", "interpret"))
+def compact_block_parallel(flags: jax.Array, cap: int,
+                           tile: int = DEFAULT_TILE,
+                           interpret: bool = False):
+    """Block-parallel stream compaction (contract of ref.compact)."""
+    e = flags.shape[0]
+    tile = min(_pow2_at_least(tile), _pow2_at_least(e))
+    ep = ((e + tile - 1) // tile) * tile
+    t = ep // tile
+    fp = jnp.pad(flags.astype(jnp.int32), (0, ep - e))
+    sel, num = pl.pallas_call(
+        compact_tiles_kernel,
+        grid=(t,),
+        in_specs=[pl.BlockSpec((tile, 1), lambda i: (i, 0))],
+        out_specs=(pl.BlockSpec((cap, 1), lambda i: (0, 0)),
+                   pl.BlockSpec((1, 1), lambda i: (0, 0))),
+        out_shape=(_i32((cap, 1)), _i32((1, 1))),
+        scratch_shapes=[pltpu.VMEM((cap + tile, 1), jnp.int32),
+                        pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(_col(fp))
+    num = num[0, 0]
+    emask = jnp.arange(cap) < jnp.minimum(num, cap)
+    return sel[:, 0], emask, num
+
+
+# ---------------------------------------------------------------------------
+# compact_perm — one tiled sort (packed single-word when the range fits)
+# ---------------------------------------------------------------------------
+
+def sort_packed_kernel(packed_ref, out_ref, *, idx_mask: int):
+    """Sort (key * N + index) packed words; unpacking the index is a
+    lane-wise AND (N is a power of two). Packed words are unique, so
+    the unstable bitonic network still yields the stable-by-key
+    permutation."""
+    (s,), _ = _bitonic_sort((packed_ref[:, 0],))
+    out_ref[...] = (s & idx_mask)[:, None]
+
+
+def sort_pairs_kernel(a_ref, b_ref, out_ref):
+    """Two-word lexicographic (key, index) sort for ranges too wide to
+    pack; the index word both carries the payload and breaks ties in
+    arrival order (stability)."""
+    _, (b,) = _bitonic_sort((a_ref[:, 0],), (b_ref[:, 0],))
+    out_ref[...] = b[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_keys", "interpret"))
+def compact_perm_block_parallel(keys: jax.Array, valid: jax.Array,
+                                num_keys: int,
+                                interpret: bool = False) -> jax.Array:
+    """Stable ascending-key permutation (contract of ref.compact_perm)
+    by one tiled bitonic sort instead of the serial counting sort."""
+    e = keys.shape[0]
+    ep = _pow2_at_least(e)
+    eff = jnp.where(valid, jnp.clip(keys, -1, num_keys - 1), num_keys) + 1
+    effp = jnp.pad(eff.astype(jnp.int32), (0, ep - e),
+                   constant_values=num_keys + 1)
+    idx = _iota(ep)
+    if (num_keys + 2) * ep < 2**31:
+        out = pl.pallas_call(
+            functools.partial(sort_packed_kernel, idx_mask=ep - 1),
+            out_shape=_i32((ep, 1)),
+            interpret=interpret,
+        )(_col(effp * ep + idx))
+    else:
+        # padded entries carry idx >= E, sorting after every real entry
+        # of the same key — the slice below drops exactly them
+        out = pl.pallas_call(
+            sort_pairs_kernel,
+            out_shape=_i32((ep, 1)),
+            interpret=interpret,
+        )(_col(effp), _col(idx))
+    return out[:e, 0]
+
+
+# ---------------------------------------------------------------------------
+# segment_select — tiled (slot, key) sort -> thresholds -> rank filter
+# ---------------------------------------------------------------------------
+
+def select_sort_kernel(keys_ref, slot_ref, segstart_ref, take_ref, inc_ref,
+                       *, e_real: int):
+    """One tiled two-word sort ranks every edge within its segment;
+    each segment's take-th-smallest key pops out by position (segments
+    stay contiguous under the (slot, key) order), replacing the serial
+    bisection's 31 masked counting passes. Inclusion then follows the
+    reference's threshold / tie-budget formula in arrival order —
+    bit-identical ties."""
+    ep = keys_ref.shape[0]
+    s = segstart_ref.shape[0]
+    u = jax.lax.bitcast_convert_type(keys_ref[:, 0], jnp.int32)
+    slot = slot_ref[:, 0]
+    maskv = slot >= 0
+    sl = jnp.where(maskv, slot, s)
+    _, (us,) = _bitonic_sort((sl, u), (u,))
+
+    nv = jnp.sum(maskv.astype(jnp.int32))
+    starts = jnp.clip(segstart_ref[:, 0], 0, e_real)
+    ends = jnp.concatenate([starts[1:], jnp.full((1,), e_real, jnp.int32)])
+    present = jnp.clip(jnp.minimum(ends, nv) - starts, 0, None)
+    take = take_ref[:, 0]
+    # the take-th smallest key of segment s sits at its sorted start +
+    # take - 1; a segment whose buffer holds fewer than take edges
+    # (expand truncation, already overflow-flagged) saturates the
+    # threshold and includes everything present — same as the bisection
+    at = jnp.clip(jnp.minimum(starts, nv) + take - 1, 0, ep - 1)
+    thresh = jnp.where(take == 0, 0,
+                       jnp.where(take <= present, us[at],
+                                 jnp.int32(2**31 - 1)))
+
+    cslot = jnp.clip(slot, 0, s - 1)
+    te = thresh[cslot]
+    lt = maskv & (u < te)
+    ex = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                          _prefix_incl(lt.astype(jnp.int32))])
+    cnt_lt = ex[ends] - ex[starts]
+    eq = maskv & (u == te)
+    excl = _prefix_incl(eq.astype(jnp.int32)) - eq.astype(jnp.int32)
+    base = excl[jnp.clip(segstart_ref[:, 0], 0, ep - 1)]
+    eq_rank = excl - base[cslot]
+    budget = (take - cnt_lt)[cslot]
+    inc = lt | (eq & (eq_rank < budget))
+    inc_ref[...] = inc.astype(jnp.int32)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("num_seeds", "interpret"))
+def segment_select_block_parallel(keys: jax.Array, slot: jax.Array,
+                                  mask: jax.Array, seg_start: jax.Array,
+                                  take: jax.Array, num_seeds: int,
+                                  interpret: bool = False) -> jax.Array:
+    """Per-segment smallest-``take`` selection (ref.segment_select
+    contract) via one tiled sort. Unlike the serial insertion-buffer
+    kernel this needs ``seg_start`` (like the XLA reference) and has no
+    static fanout bound."""
+    e = keys.shape[0]
+    ep = _pow2_at_least(e)
+    slot_in = jnp.where(mask, slot, -1).astype(jnp.int32)
+    kp = jnp.pad(keys.astype(jnp.float32), (0, ep - e))
+    sp = jnp.pad(slot_in, (0, ep - e), constant_values=-1)
+    inc = pl.pallas_call(
+        functools.partial(select_sort_kernel, e_real=e),
+        out_shape=_i32((ep, 1)),
+        interpret=interpret,
+    )(_col(kp), _col(sp), _col(seg_start.astype(jnp.int32)),
+      _col(take.astype(jnp.int32)))
+    return inc[:e, 0] != 0
+
+
+# ---------------------------------------------------------------------------
+# masked_cdf_draw — lockstep batched binary search
+# ---------------------------------------------------------------------------
+
+def batched_search_kernel(cdf_ref, u_ref, out_ref):
+    """All draws advance one bisection level per step over the
+    VMEM-resident CDF — log2(C) vectorized steps total, versus one
+    serial ``while_loop`` per draw."""
+    c = cdf_ref.shape[0]
+    cdf = cdf_ref[:, 0]
+    u = u_ref[:, 0]
+    lo = jnp.zeros(u.shape, jnp.int32)
+    hi = jnp.full(u.shape, c, jnp.int32)
+    for _ in range(max(c.bit_length(), 1)):
+        mid = (lo + hi) >> 1
+        ge = cdf[jnp.clip(mid, 0, c - 1)] >= u
+        lo = jnp.where(ge, lo, mid + 1)
+        hi = jnp.where(ge, mid, hi)
+    out_ref[...] = jnp.clip(lo, 0, c - 1)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def masked_cdf_draw_block_parallel(p: jax.Array, valid: jax.Array,
+                                   u: jax.Array,
+                                   interpret: bool = False) -> jax.Array:
+    """Inverse-CDF draws (ref.masked_cdf_draw contract); the CDF comes
+    from the shared ``normalized_cdf`` so draws cannot drift across
+    backends."""
+    cdf = normalized_cdf(p, valid)
+    out = pl.pallas_call(
+        batched_search_kernel,
+        out_shape=_i32((u.shape[0], 1)),
+        interpret=interpret,
+    )(_col(cdf.astype(jnp.float32)), _col(u.astype(jnp.float32)))
+    return out[:, 0]

@@ -40,8 +40,10 @@ import numpy as np
 
 from repro.kernels.edge_softmax.ops import edge_softmax_block
 from repro.kernels.frontier import ops as frontier_ops
+from repro.kernels.frontier import parallel as frontier_par
 from repro.kernels.spmm.ops import (gather_dst_block, scatter_sorted_block,
                                     spmm_block)
+from repro.ops import autotune
 from repro.ops.backend import interpret_mode
 
 if TYPE_CHECKING:  # pragma: no cover
@@ -188,33 +190,70 @@ def edge_softmax(blk: SampledLayer, logits: jax.Array) -> jax.Array:
 # data motion, so no custom VJPs are needed
 # ---------------------------------------------------------------------------
 
+# Each frontier primitive resolves its tuning params (serial vs
+# grid-parallel, tile width) through repro.ops.autotune at trace time —
+# shapes are static under jit, so the cache lookup never enters the
+# traced program and a re-tune only changes which kernel gets traced.
+# Both implementations are bit-exact by contract (tests/test_frontier.py)
+# so the choice is pure perf.
+
 def hash_dedup(values: jax.Array, mask: jax.Array,
                seeds: Optional[jax.Array], new_cap: int):
-    return frontier_ops.hash_dedup_block(values, mask, seeds, new_cap,
-                                         interpret=interpret_mode())
+    p = autotune.get_params("hash_dedup", E=values.shape[0],
+                            S=0 if seeds is None else seeds.shape[0])
+    if p["impl"] == "serial":
+        s = 0 if seeds is None else seeds.shape[0]
+        load = float(p.get("table_load", 2.0))
+        cap = max(8, 1 << (int(load * (s + values.shape[0])) - 1)
+                  .bit_length())
+        return frontier_ops.hash_dedup_block(values, mask, seeds, new_cap,
+                                             table_cap=cap,
+                                             interpret=interpret_mode())
+    return frontier_par.hash_dedup_block_parallel(
+        values, mask, seeds, new_cap, tile=int(p.get("tile", 512)),
+        interpret=interpret_mode())
 
 
 def compact(flags: jax.Array, cap: int):
-    return frontier_ops.compact_block(flags, cap,
-                                      interpret=interpret_mode())
+    p = autotune.get_params("compact", E=flags.shape[0])
+    if p["impl"] == "serial":
+        return frontier_ops.compact_block(flags, cap,
+                                          interpret=interpret_mode())
+    return frontier_par.compact_block_parallel(
+        flags, cap, tile=int(p.get("tile", 512)), interpret=interpret_mode())
 
 
 def compact_perm(keys: jax.Array, valid: jax.Array,
                  num_keys: int) -> jax.Array:
-    return frontier_ops.compact_perm_block(keys, valid, num_keys,
-                                           interpret=interpret_mode())
+    p = autotune.get_params("compact_perm", E=keys.shape[0], S=num_keys)
+    if p["impl"] == "serial":
+        return frontier_ops.compact_perm_block(keys, valid, num_keys,
+                                               interpret=interpret_mode())
+    return frontier_par.compact_perm_block_parallel(
+        keys, valid, num_keys, interpret=interpret_mode())
 
 
 def segment_select(keys: jax.Array, slot: jax.Array, mask: jax.Array,
                    seg_start: jax.Array, take: jax.Array, num_seeds: int,
                    max_take: int) -> jax.Array:
-    del seg_start  # the kernel re-derives segment bounds from the scan
-    return frontier_ops.segment_select_block(keys, slot, mask, take,
-                                             num_seeds, max_take,
-                                             interpret=interpret_mode())
+    p = autotune.get_params("segment_select", E=keys.shape[0], S=num_seeds)
+    if p["impl"] == "serial":
+        # the serial kernel re-derives segment bounds from its scan and
+        # never reads seg_start; the parallel sort/select needs it
+        return frontier_ops.segment_select_block(keys, slot, mask, take,
+                                                 num_seeds, max_take,
+                                                 interpret=interpret_mode())
+    return frontier_par.segment_select_block_parallel(
+        keys, slot, mask, seg_start, take, num_seeds,
+        interpret=interpret_mode())
 
 
 def masked_cdf_draw(p: jax.Array, valid: jax.Array,
                     u: jax.Array) -> jax.Array:
-    return frontier_ops.masked_cdf_draw_block(p, valid, u,
-                                              interpret=interpret_mode())
+    params = autotune.get_params("masked_cdf_draw", E=p.shape[0],
+                                 S=u.shape[0])
+    if params["impl"] == "serial":
+        return frontier_ops.masked_cdf_draw_block(p, valid, u,
+                                                  interpret=interpret_mode())
+    return frontier_par.masked_cdf_draw_block_parallel(
+        p, valid, u, interpret=interpret_mode())

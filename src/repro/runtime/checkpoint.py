@@ -152,10 +152,18 @@ def engine_restore_meta(sampler, mesh_devices: int = 0,
     (``TrainEngine.backend`` — "xla" or "pallas", never "auto").
     Stored in every checkpoint's meta.json so restore can rebuild the
     identical program.
+
+    Also records the frontier-kernel tuning-cache fingerprint
+    (``repro.ops.autotune.cache_fingerprint``, None = pure defaults).
+    Unlike the backend it is INFORMATIONAL: tile sizes are bit-exact-
+    neutral, so a mismatch on restore warns instead of raising.
     """
+    from repro.ops import autotune
+
     spec = sampler.spec
     return {
         **({} if backend is None else {"backend": backend}),
+        "frontier_tuning": autotune.cache_fingerprint(),
         "sampler": {
             "name": spec.name,
             "budgets": list(spec.budgets),
@@ -224,6 +232,18 @@ def validate_restore_meta(meta: dict, sampler, mesh_devices: int = 0,
             "checkpoint was trained under a different engine "
             "specialization — refusing to resume:\n  "
             + "\n  ".join(problems))
+    if "frontier_tuning" in meta:
+        from repro.ops import autotune
+        cur = autotune.cache_fingerprint()
+        ckpt_fp = meta["frontier_tuning"]
+        if ckpt_fp != cur:
+            import warnings
+            warnings.warn(
+                f"frontier tuning cache differs from the checkpoint's "
+                f"({ckpt_fp} vs {cur}); results are unaffected "
+                "(tile sizes are bit-exact-neutral) but step timing "
+                "may differ — re-run python -m repro.ops.autotune to "
+                "re-tune", stacklevel=2)
     caps = tuple(LayerCaps(*c) for c in rec["caps"])
     peer = None if rec["peer_caps"] is None else tuple(rec["peer_caps"])
     import dataclasses as _dc

@@ -202,11 +202,22 @@ class PipelinedEngine:
         batch whose compute was dispatched this call — empty while the
         pipeline fills (the first ``depth`` calls), one entry per call
         in steady state. Replay metrics land in ``engine.replayed``,
-        exactly as on the serial path."""
-        self._enqueue(data, seeds, key, tag)
+        exactly as on the serial path.
+
+        Retire BEFORE enqueue. The retire path ends in a host sync (the
+        ledger polls the retired compute's overflow flag), so on a
+        single execution stream enqueue-first orders the device queue
+        ``sample(t), compute(t-1)`` and the poll of compute(t-1) then
+        waits behind the whole of sample(t) — the pipeline runs *slower*
+        than the serial fused step. Retiring first keeps the poll
+        adjacent to its compute while preserving the identical FIFO
+        compute order, fill/steady done schedule, and replay protocol;
+        it also detects a replay before this call's sample, saving one
+        stale-caps invalidation."""
         done: List[Tuple[Any, Any]] = []
-        while len(self._queue) > self.depth:
+        while len(self._queue) >= self.depth:
             params, state = self._retire(params, state, data, done)
+        self._enqueue(data, seeds, key, tag)
         return params, state, done
 
     def flush(self, params, state: EngineState, data: EngineData):

@@ -491,3 +491,237 @@ def test_dense_baseline_does_have_vertex_sized_intermediates(ds):
     avals = []
     _collect_avals(closed.jaxpr, avals)
     assert any(any(d == V for d in a.shape) for a in avals)
+
+
+# ---------------------------------------------------------------------------
+# grid-parallel kernels: bit-exact parity vs the serial kernels + refs
+# ---------------------------------------------------------------------------
+
+from repro.kernels.frontier import parallel as frontier_par
+from repro.kernels.frontier import ref as frontier_ref
+
+# sizes straddling tile boundaries under a forced tiny tile (8): below,
+# exactly at, and one past one/two/four tile widths, plus non-multiples
+TILE_EDGE_SIZES = (5, 8, 9, 16, 17, 31, 33, 64, 65)
+TINY_TILES = (8, 16)
+
+
+def _dedup_equal(a, b, msg=""):
+    for f, x, y in zip(a._fields, a, b):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                      err_msg=f"{msg}: {f}")
+
+
+@pytest.mark.parametrize("E", TILE_EDGE_SIZES)
+@pytest.mark.parametrize("tile", TINY_TILES)
+def test_parallel_dedup_parity_across_tile_boundaries(E, tile):
+    """Forced tiny tiles: the per-tile stripes + cooperative merge must
+    reproduce the serial kernel and the XLA ref bit for bit at sizes
+    below/at/past every tile boundary (new_cap = E: never gives up, so
+    the FULL contract is in force)."""
+    rng = np.random.default_rng(E * 31 + tile)
+    vals = jnp.asarray(rng.integers(0, max(2, E), size=E).astype(np.int32))
+    mask = jnp.asarray(rng.random(E) < 0.8)
+    seeds = jnp.asarray(np.unique(
+        rng.integers(0, max(2, E), size=max(1, E // 3)).astype(np.int32)))
+    r_ref = frontier_ref.hash_dedup(vals, mask, seeds, E)
+    r_ser = frontier_kernel_ops.hash_dedup_block(vals, mask, seeds, E,
+                                                 interpret=True)
+    r_par = frontier_par.hash_dedup_block_parallel(vals, mask, seeds, E,
+                                                   tile=tile, interpret=True)
+    _dedup_equal(r_ser, r_ref, f"serial E={E}")
+    _dedup_equal(r_par, r_ref, f"parallel E={E} tile={tile}")
+
+
+def test_parallel_dedup_stripe_overflow_propagates_across_tiles():
+    """A stripe too small for ONE tile's unique count must surface as
+    the overflow flag even when the merge output fits new_cap — and the
+    flag must propagate from whichever grid step tripped it."""
+    # every value unique: each 8-wide tile carries 8 uniques
+    vals = jnp.asarray(np.arange(64, dtype=np.int32))
+    mask = jnp.ones((64,), bool)
+    r = frontier_par.hash_dedup_block_parallel(vals, mask, None, 64,
+                                               tile=8, stripe_cap=2,
+                                               interpret=True)
+    assert bool(r.overflow)
+    # overflow arising ONLY in the last tile still propagates
+    v2 = np.zeros(64, np.int32)
+    v2[56:] = np.arange(100, 108)          # 8 uniques, final tile only
+    r2 = frontier_par.hash_dedup_block_parallel(
+        jnp.asarray(v2), mask, None, 64, tile=8, stripe_cap=4,
+        interpret=True)
+    assert bool(r2.overflow)
+    # same inputs, default stripe (== tile, provably sufficient): exact
+    r3 = frontier_par.hash_dedup_block_parallel(vals, mask, None, 64,
+                                                tile=8, interpret=True)
+    assert not bool(r3.overflow)
+    np.testing.assert_array_equal(np.asarray(r3.new), np.asarray(vals))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_parallel_dedup_property(data):
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    tile = data.draw(st.sampled_from((8, 16, 32, 512)))
+    rng = np.random.default_rng(seed)
+    vals, mask, seeds, _ = _random_dedup_case(rng)
+    E = len(vals)
+    r_ref = frontier_ref.hash_dedup(jnp.asarray(vals), jnp.asarray(mask),
+                                    jnp.asarray(seeds), E)
+    r_par = frontier_par.hash_dedup_block_parallel(
+        jnp.asarray(vals), jnp.asarray(mask), jnp.asarray(seeds), E,
+        tile=tile, interpret=True)
+    _dedup_equal(r_par, r_ref, f"seed={seed} tile={tile}")
+
+
+@pytest.mark.parametrize("E", TILE_EDGE_SIZES)
+@pytest.mark.parametrize("tile", TINY_TILES)
+def test_parallel_compact_parity_across_tile_boundaries(E, tile):
+    rng = np.random.default_rng(E * 17 + tile)
+    flags = jnp.asarray(rng.random(E) < rng.random())
+    for cap in (1, max(1, E // 2), E):
+        sel_r, em_r, n_r = frontier_ref.compact(flags, cap)
+        sel_p, em_p, n_p = frontier_par.compact_block_parallel(
+            flags, cap, tile=tile, interpret=True)
+        msg = f"E={E} tile={tile} cap={cap}"
+        np.testing.assert_array_equal(np.asarray(sel_p), np.asarray(sel_r),
+                                      err_msg=msg)
+        np.testing.assert_array_equal(np.asarray(em_p), np.asarray(em_r),
+                                      err_msg=msg)
+        assert int(n_p) == int(n_r), msg
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.data())
+def test_parallel_perm_and_draw_property(data):
+    seed = data.draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    E = int(rng.integers(1, 200))
+    K = int(rng.integers(1, 40))
+    keys = jnp.asarray(rng.integers(-1, K, size=E).astype(np.int32))
+    valid = jnp.asarray(rng.random(E) < 0.7)
+    np.testing.assert_array_equal(
+        np.asarray(frontier_par.compact_perm_block_parallel(
+            keys, valid, K, interpret=True)),
+        np.asarray(frontier_ref.compact_perm(keys, valid, K)))
+    p = jnp.asarray(np.abs(rng.normal(size=E)).astype(np.float32))
+    v = jnp.asarray(rng.random(E) < 0.8)
+    if not bool(v.any()):
+        v = v.at[0].set(True)
+    u = jnp.asarray(rng.random(max(1, E // 3)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(frontier_par.masked_cdf_draw_block_parallel(
+            p, v, u, interpret=True)),
+        np.asarray(frontier_ref.masked_cdf_draw(p, v, u)))
+
+
+@pytest.mark.parametrize("trial", range(8))
+def test_parallel_segment_select_parity(trial):
+    """The tiled sort/select against the ref bisection AND the serial
+    kernel, on random segment layouts with ties."""
+    rng = np.random.default_rng(700 + trial)
+    keys, slot, mask, seg_start, deg, take, S, k = _random_segments(rng)
+    args = (jnp.asarray(keys), jnp.asarray(slot), jnp.asarray(mask))
+    r_ref = frontier_ref.segment_select(*args, jnp.asarray(seg_start),
+                                        jnp.asarray(take), S)
+    r_ser = frontier_kernel_ops.segment_select_block(
+        *args, jnp.asarray(take), S, k, interpret=True)
+    r_par = frontier_par.segment_select_block_parallel(
+        *args, jnp.asarray(seg_start), jnp.asarray(take), S, interpret=True)
+    np.testing.assert_array_equal(np.asarray(r_ser), np.asarray(r_ref))
+    np.testing.assert_array_equal(np.asarray(r_par), np.asarray(r_ref))
+
+
+def test_registry_dispatch_parallel_serial_switch(monkeypatch):
+    """The pallas backend must route by REPRO_FRONTIER_IMPL and return
+    identical results either way (the CI forced-impl matrix)."""
+    from repro.ops import autotune
+    rng = np.random.default_rng(9)
+    vals = jnp.asarray(rng.integers(0, 500, 300).astype(np.int32))
+    mask = jnp.asarray(rng.random(300) < 0.9)
+    seeds = jnp.asarray(np.unique(rng.integers(0, 500, 40).astype(np.int32)))
+    ref = frontier_ref.hash_dedup(vals, mask, seeds, 300)
+    for impl in ("parallel", "serial"):
+        monkeypatch.setenv(autotune.IMPL_ENV, impl)
+        got = O.hash_dedup(vals, mask, seeds, 300, backend="pallas")
+        _dedup_equal(got, ref, impl)
+
+
+# ---------------------------------------------------------------------------
+# the autotune cache: roundtrip / corrupt file / missing-entry fallback
+# ---------------------------------------------------------------------------
+
+from repro.ops import autotune
+
+
+@pytest.fixture
+def tune_cache(tmp_path, monkeypatch):
+    path = tmp_path / "tune.json"
+    monkeypatch.setenv(autotune.CACHE_ENV, str(path))
+    monkeypatch.delenv(autotune.IMPL_ENV, raising=False)
+    monkeypatch.delenv(autotune.TILE_ENV, raising=False)
+    autotune.reload()
+    yield path
+    autotune.reload()
+
+
+def test_autotune_missing_cache_falls_back_to_defaults(tune_cache):
+    assert not tune_cache.exists()
+    for prim, want in autotune.DEFAULT_PARAMS.items():
+        assert autotune.get_params(prim, E=40960, S=512) == want
+    assert autotune.cache_fingerprint() is None
+
+
+def test_autotune_roundtrip(tune_cache):
+    key = autotune.bucket_key("compact", jax.default_backend(),
+                              {"E": 40960})
+    c = autotune.TuneCache.load(str(tune_cache))
+    c.put(key, {"impl": "serial", "tile": 128, "us": 42.0})
+    c.save()
+    autotune.reload()
+    got = autotune.get_params("compact", E=40000)  # same pow2 bucket
+    assert got["impl"] == "serial" and got["tile"] == 128
+    assert "us" not in got                         # timing not a knob
+    # different bucket: untouched -> defaults
+    assert autotune.get_params("compact", E=1000) == \
+        autotune.DEFAULT_PARAMS["compact"]
+    assert autotune.cache_fingerprint() is not None
+
+
+def test_autotune_corrupt_file_degrades_to_defaults(tune_cache, capsys):
+    tune_cache.write_text("{not json at all")
+    autotune.reload()
+    assert autotune.get_params("hash_dedup", E=512, S=64) == \
+        autotune.DEFAULT_PARAMS["hash_dedup"]
+    assert "ignoring unusable tuning cache" in capsys.readouterr().err
+    # wrong schema is equally survivable
+    tune_cache.write_text('{"version": 999, "entries": []}')
+    autotune.reload()
+    assert autotune.get_params("compact", E=512) == \
+        autotune.DEFAULT_PARAMS["compact"]
+
+
+def test_autotune_env_overrides_beat_cache(tune_cache, monkeypatch):
+    key = autotune.bucket_key("hash_dedup", jax.default_backend(),
+                              {"E": 512, "S": 64})
+    c = autotune.TuneCache.load(str(tune_cache))
+    c.put(key, {"impl": "serial", "tile": 256})
+    c.save()
+    autotune.reload()
+    monkeypatch.setenv(autotune.IMPL_ENV, "parallel")
+    monkeypatch.setenv(autotune.TILE_ENV, "16")
+    got = autotune.get_params("hash_dedup", E=512, S=64)
+    assert got["impl"] == "parallel" and got["tile"] == 16
+
+
+def test_autotune_smoke_writes_and_reads_back(tune_cache):
+    """The CI round-trip: a smoke tune must persist winners for every
+    primitive and read them back through dispatch."""
+    winners = autotune.autotune(sizes=[(256, 32)], smoke=True,
+                                verbose=False)
+    assert set(k.split("|")[0] for k in winners) == set(autotune.PRIMITIVES)
+    autotune.reload()
+    assert autotune.cache_fingerprint() is not None
+    for prim in autotune.PRIMITIVES:
+        got = autotune.get_params(prim, E=256, S=32)
+        assert got["impl"] in ("serial", "parallel")
