@@ -23,6 +23,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.interface import double_caps, pad_seeds
+from repro.runtime.guard import RetryPolicy
 
 
 @dataclasses.dataclass
@@ -63,8 +64,10 @@ class SeedBatches:
                  drop_last: bool = True):
         self.train_idx = np.asarray(train_idx)
         self.batch_size = batch_size
+        self.seed = seed
         self.rng = np.random.default_rng(seed)
         self.drop_last = drop_last
+        self._at_cache: Optional[tuple] = None  # (epoch, permutation)
 
     def epoch(self) -> Iterator[jnp.ndarray]:
         perm = self.rng.permutation(self.train_idx)
@@ -77,6 +80,33 @@ class SeedBatches:
         rem = len(perm) - n_full * self.batch_size
         if rem and not self.drop_last:
             yield pad_seeds(jnp.asarray(perm[-rem:]), self.batch_size)
+
+    @property
+    def per_epoch(self) -> int:
+        """Full batches per epoch (the :meth:`at` schedule is full
+        batches only — a constant epoch length is what makes the step
+        index -> batch map a pure function)."""
+        return max(len(self.train_idx) // self.batch_size, 1)
+
+    def at(self, step: int) -> jnp.ndarray:
+        """The batch for global ``step``, as a pure function of
+        ``(seed, step)`` — the random-access counterpart of the
+        :meth:`epoch` stream, required by the guardrail's rollback
+        resume (docs/robustness.md): after restoring step ``s`` the
+        trainer replays ``at(s), at(s+1), ...`` and lands, bit-exactly,
+        on the trajectory an unfaulted run would have taken. Epoch
+        ``step // per_epoch`` gets its own independently-seeded
+        permutation (cached, so sequential access stays O(1) shuffles
+        per epoch)."""
+        epoch, i = divmod(step, self.per_epoch)
+        if self._at_cache is None or self._at_cache[0] != epoch:
+            rng = np.random.default_rng((self.seed, epoch))
+            self._at_cache = (epoch, rng.permutation(self.train_idx))
+        perm = self._at_cache[1]
+        return pad_seeds(
+            jnp.asarray(perm[i * self.batch_size:(i + 1) * self.batch_size]),
+            self.batch_size,
+        )
 
 
 class PrefetchIterator:
@@ -131,15 +161,24 @@ def sample_with_retry(sampler, graph, seeds, key,
     batch to read the overflow flags before the optimizer step may run.
     The fused pipeline uses :class:`OverflowLedger` instead, which defers
     the check by one step so dispatch never stalls."""
-    for attempt in range(max_retries + 1):
-        blocks = sampler.sample_with_key(graph, seeds, key)
-        if not any(bool(b.overflow) for b in blocks):
-            return blocks, sampler
+    box = {"sampler": sampler}
+
+    def attempt(_i):
+        blocks = box["sampler"].sample_with_key(graph, seeds, key)
+        if any(bool(b.overflow) for b in blocks):
+            return None
+        return blocks
+
+    def grow(_i):
         if stats is not None:
             stats.overflow_retries += 1
-        sampler = sampler.with_caps(double_caps(sampler.caps))
-    raise SamplingOverflowError(
-        "sampling overflow persisted after cap doubling")
+        box["sampler"] = box["sampler"].with_caps(
+            double_caps(box["sampler"].caps))
+
+    blocks = RetryPolicy(max_retries).run(
+        attempt, grow=grow, error=SamplingOverflowError,
+        describe="sampling overflow persisted after cap doubling")
+    return blocks, box["sampler"]
 
 
 class OverflowLedger:

@@ -154,6 +154,9 @@ def serve_gnn_driver(args):
     :class:`~repro.serving.driver.ServingDriver`, which coalesces them
     into the engine's fixed-shape program and scatters per-seed logits
     back, with the device-resident caches exploiting request skew."""
+    import os
+
+    from repro.runtime import inject as inject_lib
     from repro.serving import HiddenCache, ServingDriver, VertexCache
 
     ds, engine, data, params, labels = _build_gnn_serving(args)
@@ -163,10 +166,15 @@ def serve_gnn_driver(args):
     hc = (HiddenCache(args.hidden_cache, max_age=args.max_age,
                       policy=args.cache_policy)
           if args.hidden_cache else None)
+    inject_spec = ",".join(
+        s for s in (os.environ.get(inject_lib.ENV_VAR),
+                    getattr(args, "inject", None)) if s)
     driver = ServingDriver(engine, params, data, batch_size=args.batch,
                            feature_cache=fc, hidden_cache=hc,
                            deadline_ms=args.deadline_ms,
-                           max_queue=args.max_queue, seed=args.seed + 1)
+                           max_queue=args.max_queue, seed=args.seed + 1,
+                           inject=inject_lib.parse(inject_spec),
+                           cache_fault_limit=args.cache_fault_limit)
     tickets = [driver.submit(r) for r in requests]
     driver.drain()
     report = driver.stats.report()
@@ -288,6 +296,15 @@ def main():
     ap.add_argument("--max-queue", type=int, default=1024,
                     help="pending-request bound before admission "
                          "rejects (backpressure)")
+    ap.add_argument("--inject", default=None,
+                    help="fault-injection plan (repro.runtime.inject "
+                         "spec, e.g. 'cache_corrupt@2,pump_death@1'); "
+                         "concatenated with $REPRO_INJECT; async "
+                         "driver only")
+    ap.add_argument("--cache-fault-limit", type=int, default=2,
+                    help="nonfinite-logit faults under an enabled "
+                         "cache before the driver falls back to "
+                         "cache-off for good (graceful degradation)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()

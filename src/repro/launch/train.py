@@ -66,6 +66,21 @@ def main():
                     help="shrink the arch for CPU-scale runs")
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--guard", default="off",
+                    choices=["off", "quarantine", "rollback"],
+                    help="guardrail (docs/robustness.md): detect "
+                         "NaN/Inf loss/grads and loss spikes on device "
+                         "(polled one step late, no per-step host sync) "
+                         "and recover by batch quarantine or checkpoint "
+                         "rollback")
+    ap.add_argument("--guard-warmup", type=int, default=5,
+                    help="clean batches before spike detection arms")
+    ap.add_argument("--guard-spike-factor", type=float, default=4.0,
+                    help="loss > factor x EMA flags a spike")
+    ap.add_argument("--inject", default=None,
+                    help="fault-injection plan (repro.runtime.inject "
+                         "spec, e.g. 'nan_grad@5,torn_ckpt@1'); "
+                         "concatenated with $REPRO_INJECT")
     # common
     ap.add_argument("--steps", type=int, default=100)
     ap.add_argument("--lr", type=float, default=1e-3)
@@ -74,13 +89,20 @@ def main():
     args = ap.parse_args()
 
     if args.workload == "gnn":
+        import os
+
         from repro.graph import paper_dataset
+        from repro.runtime import inject as inject_lib
         from repro.runtime.trainer import GNNTrainConfig, evaluate_gnn, train_gnn
 
         ds = paper_dataset(args.dataset, scale=args.scale, seed=args.seed)
         fanouts = tuple(int(x) for x in args.fanouts.split(","))
         layer_sizes = (tuple(int(x) for x in args.layer_sizes.split(","))
                        if args.layer_sizes else None)
+        # --inject and $REPRO_INJECT are concatenated: the env var arms
+        # a whole CI job, the flag arms one launch
+        inject_spec = ",".join(
+            s for s in (os.environ.get(inject_lib.ENV_VAR), args.inject) if s)
         cfg = GNNTrainConfig(
             model=args.model, fanouts=fanouts, num_layers=len(fanouts),
             sampler=args.sampler, layer_sizes=layer_sizes,
@@ -89,18 +111,31 @@ def main():
             seed=args.seed, fused=args.fused,
             mesh_devices=args.mesh_devices,
             grad_compression=args.grad_compression,
-            backend=args.backend, pipeline=args.pipeline)
+            backend=args.backend, pipeline=args.pipeline,
+            guard=args.guard, guard_warmup=args.guard_warmup,
+            guard_spike_factor=args.guard_spike_factor,
+            inject=inject_lib.parse(inject_spec))
         out = train_gnn(ds, cfg)
         val = evaluate_gnn(ds, out["params"], cfg, ds.val_idx)
         h = out["history"]
-        print(json.dumps({
+        report = {
             "final_loss": h[-1]["loss"], "val_acc": val,
             "wall_time_s": round(out["wall_time"], 1),
             "avg_sampled_vertices": sum(x["sampled_v"] for x in h) / len(h),
             "stragglers_skipped": out["stats"].stragglers_skipped,
             "overflow_retries": out["stats"].overflow_retries,
             "overflow_replays": out["stats"].overflow_replays,
-        }, indent=1))
+        }
+        if "guard_stats" in out:
+            gs = out["guard_stats"]
+            report.update(guard=args.guard,
+                          guard_quarantines=gs.quarantines,
+                          guard_rollbacks=gs.rollbacks,
+                          guard_nonfinite_batches=gs.nonfinite_batches,
+                          guard_spike_batches=gs.spike_batches)
+        if "inject_log" in out:
+            report["inject_fired"] = [list(x) for x in out["inject_log"]]
+        print(json.dumps(report, indent=1))
     else:
         import jax
         import jax.numpy as jnp

@@ -6,6 +6,15 @@ checkpoint). ``latest_step`` scans for the newest complete checkpoint;
 ``restore`` device_puts with target shardings, so the same checkpoint
 restores onto a *different* mesh/device-count (elastic re-scale path —
 see repro/runtime/elastic.py).
+
+Integrity: ``save`` records a CRC32 per stored array under meta.json's
+``"integrity"`` key; ``verify`` re-reads the npz and checks every CRC,
+and both ``restore`` and ``latest_good_step`` use it to detect a torn
+or bit-rotted checkpoint that survived the atomic-rename discipline
+(e.g. truncated by a crashed filesystem after publish). The guardrail's
+rollback path (docs/robustness.md) restores ``latest_good_step``, so a
+corrupt newest step is *skipped* to the previous good one rather than
+poisoning the resumed trajectory.
 """
 from __future__ import annotations
 
@@ -14,12 +23,18 @@ import os
 import shutil
 import threading
 import time
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
 _SEP = "///"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed CRC verification (or could not be read at
+    all) — torn write, truncation, or bit rot after publish."""
 
 
 def _flatten(tree: Any):
@@ -56,7 +71,11 @@ def _unflatten_into(tree: Any, arrays) -> Any:
 
 
 def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None,
-         keep: int = 3) -> str:
+         keep: int = 3, inject: Any = None) -> str:
+    """``inject`` is an optional :class:`repro.runtime.inject.FaultPlan`;
+    the ``torn_ckpt`` injector truncates arrays.npz between write and
+    publish, modelling a torn write that the rename discipline cannot
+    catch (tests + the chaos CI job prove the CRC path skips it)."""
     os.makedirs(ckpt_dir, exist_ok=True)
     final = os.path.join(ckpt_dir, f"step_{step:010d}")
     tmp = final + ".tmp"
@@ -64,9 +83,22 @@ def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None,
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     arrays = _flatten(tree)
-    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    npz_path = os.path.join(tmp, "arrays.npz")
+    np.savez(npz_path, **arrays)
+    integrity = {k: zlib.crc32(np.ascontiguousarray(v).tobytes())
+                 for k, v in arrays.items()}
     with open(os.path.join(tmp, "meta.json"), "w") as f:
-        json.dump({"step": step, "time": time.time(), **(meta or {})}, f)
+        json.dump({"step": step, "time": time.time(),
+                   "integrity": integrity, **(meta or {})}, f)
+    if inject is not None:
+        spec = inject.fires("torn_ckpt", _save_ordinal(ckpt_dir))
+        if spec is not None:
+            size = os.path.getsize(npz_path)
+            with open(npz_path, "r+b") as f:
+                f.truncate(max(1, int(size * spec.effect)))
+        if inject.fires("ckpt_error", _save_ordinal(ckpt_dir)) is not None:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise OSError(f"injected checkpoint write failure at step {step}")
     if os.path.exists(final):
         shutil.rmtree(final)
     os.rename(tmp, final)  # atomic publish
@@ -74,20 +106,80 @@ def save(ckpt_dir: str, step: int, tree: Any, meta: Optional[dict] = None,
     return final
 
 
-class AsyncSaver:
-    """Overlaps checkpoint I/O with training (single in-flight save)."""
+def _save_ordinal(ckpt_dir: str) -> int:
+    """Save-count ordinal for the checkpoint injectors (how many steps
+    are already published) — deterministic in the call sequence."""
+    return len(latest_steps(ckpt_dir))
 
-    def __init__(self, ckpt_dir: str, keep: int = 3):
+
+def verify(ckpt_dir: str, step: int) -> None:
+    """Raise :class:`CheckpointCorruptError` unless every stored array
+    round-trips with the CRC32 recorded at save time. Checkpoints
+    predating the integrity record (no ``"integrity"`` key) pass — only
+    readability is checked for those."""
+    path = os.path.join(ckpt_dir, f"step_{step:010d}")
+    try:
+        meta = read_meta(ckpt_dir, step)
+        with np.load(os.path.join(path, "arrays.npz")) as z:
+            arrays = {k: z[k] for k in z.files}
+    except Exception as e:
+        raise CheckpointCorruptError(
+            f"checkpoint step {step} unreadable: {e}") from e
+    integrity = meta.get("integrity")
+    if integrity is None:
+        return
+    if set(integrity) != set(arrays):
+        raise CheckpointCorruptError(
+            f"checkpoint step {step}: array set differs from manifest "
+            f"({sorted(set(integrity) ^ set(arrays))})")
+    for k, want in integrity.items():
+        got = zlib.crc32(np.ascontiguousarray(arrays[k]).tobytes())
+        if got != want:
+            raise CheckpointCorruptError(
+                f"checkpoint step {step}: CRC mismatch on {k!r} "
+                f"({got:#010x} != {want:#010x})")
+
+
+def latest_good_step(ckpt_dir: str) -> Optional[int]:
+    """Newest step that passes :func:`verify` — the rollback target.
+    A torn/corrupt newest step is skipped to the previous good one."""
+    for s in reversed(latest_steps(ckpt_dir)):
+        try:
+            verify(ckpt_dir, s)
+            return s
+        except CheckpointCorruptError:
+            continue
+    return None
+
+
+class AsyncSaver:
+    """Overlaps checkpoint I/O with training (single in-flight save).
+
+    An exception in the daemon save thread is captured and re-raised on
+    the training thread at the next ``save()`` or ``wait()`` — a failed
+    write must not be silently dropped, or the run would keep training
+    past checkpoints that do not exist and roll back further than it
+    believes it can."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3, inject: Any = None):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
+        self.inject = inject
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def _run(self, step, host_tree, meta):
+        try:
+            save(self.ckpt_dir, step, host_tree, meta, self.keep,
+                 inject=self.inject)
+        except BaseException as e:  # surfaced on the training thread
+            self._error = e
 
     def save(self, step: int, tree: Any, meta: Optional[dict] = None):
         self.wait()
         host_tree = jax.tree.map(np.asarray, tree)  # snapshot before mutation
         self._thread = threading.Thread(
-            target=save, args=(self.ckpt_dir, step, host_tree, meta, self.keep),
-            daemon=True,
+            target=self._run, args=(step, host_tree, meta), daemon=True,
         )
         self._thread.start()
 
@@ -95,6 +187,9 @@ class AsyncSaver:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
 
 
 def _gc(ckpt_dir: str, keep: int):
@@ -115,13 +210,19 @@ def latest_steps(ckpt_dir: str):
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
-    steps = latest_steps(ckpt_dir)
-    return steps[-1] if steps else None
+    """Newest VERIFIED step — an alias of :func:`latest_good_step`, so
+    every resume path (trainer, serving launcher) transparently skips a
+    torn/corrupt newest checkpoint to the previous good one."""
+    return latest_good_step(ckpt_dir)
 
 
 def restore(ckpt_dir: str, step: int, like: Any, shardings: Any = None) -> Any:
     """Restore into the structure of ``like``; optionally device_put with
-    target shardings (may differ from the mesh that saved it)."""
+    target shardings (may differ from the mesh that saved it). Verifies
+    the integrity manifest first — restoring a torn checkpoint raises
+    :class:`CheckpointCorruptError` instead of loading garbage weights
+    (callers fall back to :func:`latest_good_step`)."""
+    verify(ckpt_dir, step)
     path = os.path.join(ckpt_dir, f"step_{step:010d}")
     with np.load(os.path.join(path, "arrays.npz")) as z:
         arrays = {k: z[k] for k in z.files}

@@ -65,6 +65,8 @@ from repro import ops as graph_ops
 from repro.core.interface import Sampler, overflow_flags, sampled_counts
 from repro.data.gnn_loader import (LoaderStats, OverflowLedger,
                                    SamplingOverflowError)
+from repro.runtime.guard import (GuardConfig, RetryPolicy, guard_update,
+                                 init_guard_state)
 from repro.distributed import compression as comp
 from repro.distributed.feature_exchange import (exchange_features,
                                                 request_layout)
@@ -122,9 +124,26 @@ class EngineData:
 @dataclasses.dataclass(frozen=True)
 class EngineState:
     """Optimizer state plus the gradient-compression error feedback
-    (``err`` is None when compression is off)."""
+    (``err`` is None when compression is off) and the guardrail's loss
+    EMA (``guard`` is None unless the engine was built with a
+    :class:`~repro.runtime.guard.GuardConfig` — see docs/robustness.md).
+    All three ride in checkpoints."""
     opt: Any
     err: Any
+    guard: Any = None
+
+
+def _guard_gate(guard_cfg, loss, grads, gstate, any_ovf):
+    """The traced guard hook every train epilogue shares: returns
+    ``(bad, gstate', extra_metrics)`` where ``bad`` extends the overflow
+    gate with the guard's [nonfinite, spike] flags. With the guard off
+    this is the identity on the overflow protocol — the lowered program
+    is byte-identical to the unguarded build."""
+    if guard_cfg is None:
+        return any_ovf, None, {}
+    gflags, gstate_out = guard_update(guard_cfg, loss, grads, gstate,
+                                      any_ovf)
+    return any_ovf | jnp.any(gflags), gstate_out, {"guard_flags": gflags}
 
 
 def _flat_axis_index(mesh, axes):
@@ -318,11 +337,27 @@ class TrainEngine:
                  opt_cfg: adam.AdamConfig, mesh=None, *,
                  backend: Optional[str] = None, grad_compression: str = "none",
                  max_replay_retries: int = 3,
-                 stats: Optional[LoaderStats] = None):
+                 stats: Optional[LoaderStats] = None,
+                 guard: Optional[GuardConfig] = None,
+                 inject: Any = None):
         self.sampler = sampler
         self.model_apply = model_apply
         self.opt_cfg = opt_cfg
         self.mesh = mesh
+        # guardrail: when set, every train program additionally computes
+        # the [nonfinite, spike] flag pair, gates the update on it (a
+        # flagged batch is a device-side no-op, like an overflowed one)
+        # and returns it in m["guard_flags"]; the step signatures gain a
+        # guard-state arg. None leaves every program byte-identical to
+        # the historical build.
+        self.guard = guard
+        # fault-injection plan (repro.runtime.inject.FaultPlan); the
+        # engine owns the overflow_storm site — see _read_overflow
+        self.inject = inject
+        # dispatched train programs (tests assert a clean guarded run
+        # adds zero dispatches over an unguarded one)
+        self.dispatches = 0
+        self._ovf_reads = 0
         # the graph-ops backend ("auto"/None resolves by platform HERE,
         # once — every step this engine builds, single-host or
         # partitioned, runs the same resolved MODEL primitive set, and
@@ -373,7 +408,9 @@ class TrainEngine:
 
     def init_state(self, params) -> EngineState:
         return EngineState(opt=adam.init_state(params, self.opt_cfg),
-                           err=comp.init_error_state(params, self.comp_cfg))
+                           err=comp.init_error_state(params, self.comp_cfg),
+                           guard=(None if self.guard is None
+                                  else init_guard_state()))
 
     def make_data(self, graph: Graph, features, labels) -> EngineData:
         """Stage the step-invariant inputs on device: replicated arrays
@@ -438,6 +475,10 @@ class TrainEngine:
         return self._step
 
     @property
+    def guarded(self) -> bool:
+        return self.guard is not None
+
+    @property
     def infer_fn(self):
         """Fused sample + gather + forward, from the same sampler object.
 
@@ -456,10 +497,10 @@ class TrainEngine:
 
     def _build_single_train(self):
         sampler, apply_fn = self.sampler, self.model_apply
-        opt_cfg, backend = self.opt_cfg, self.backend
+        opt_cfg, backend, guard_cfg = self.opt_cfg, self.backend, self.guard
 
-        @partial(jax.jit, donate_argnums=(0, 1))
-        def step(params, opt_state, graph, features, labels_all, seeds, key):
+        def body(params, opt_state, gstate, graph, features, labels_all,
+                 seeds, key):
             blocks = sampler.sample(graph, seeds, sampler.spec.salts(key))
             feats = gather_feats(features, blocks[-1])
             labels = labels_all[jnp.where(seeds >= 0, seeds, 0)]
@@ -472,14 +513,32 @@ class TrainEngine:
                                                         opt_state, opt_cfg)
             ovf = overflow_flags(blocks)
             any_ovf = jnp.any(ovf)
-            gate = lambda new, old: jnp.where(any_ovf, old, new)
+            bad, gstate_out, gm = _guard_gate(guard_cfg, loss, grads, gstate,
+                                              any_ovf)
+            gate = lambda new, old: jnp.where(bad, old, new)
             params_out = jax.tree.map(gate, new_params, params)
             opt_out = jax.tree.map(gate, new_opt, opt_state)
-            m.update(loss=loss, acc=acc, overflow=ovf,
+            m.update(loss=loss, acc=acc, overflow=ovf, **gm,
                      **sampled_counts(blocks))
-            return params_out, opt_out, m
+            return params_out, opt_out, gstate_out, m
 
-        return step
+        if guard_cfg is None:
+            @partial(jax.jit, donate_argnums=(0, 1))
+            def step(params, opt_state, graph, features, labels_all, seeds,
+                     key):
+                p, o, _, m = body(params, opt_state, None, graph, features,
+                                  labels_all, seeds, key)
+                return p, o, m
+
+            return step
+
+        @partial(jax.jit, donate_argnums=(0, 1, 2))
+        def gstep(params, opt_state, gstate, graph, features, labels_all,
+                  seeds, key):
+            return body(params, opt_state, gstate, graph, features,
+                        labels_all, seeds, key)
+
+        return gstep
 
     def _build_single_infer(self):
         sampler, apply_fn = self.sampler, self.model_apply
@@ -588,7 +647,7 @@ class TrainEngine:
 
     def _build_single_stages(self) -> StagedFns:
         sampler, apply_fn = self.sampler, self.model_apply
-        opt_cfg, backend = self.opt_cfg, self.backend
+        opt_cfg, backend, guard_cfg = self.opt_cfg, self.backend, self.guard
 
         @jax.jit
         def sample(graph, seeds, key):
@@ -605,7 +664,7 @@ class TrainEngine:
 
         gather = jax.jit(_gather)
 
-        def _epilogue(params, opt_state, blocks, feats, labels):
+        def _epilogue(params, opt_state, gstate, blocks, feats, labels):
             (loss, acc), grads = jax.value_and_grad(
                 lambda p: gnn_loss_fn(apply_fn, p, blocks, feats, labels,
                                       backend),
@@ -615,21 +674,41 @@ class TrainEngine:
                                                         opt_state, opt_cfg)
             ovf = overflow_flags(blocks)
             any_ovf = jnp.any(ovf)
-            gate = lambda new, old: jnp.where(any_ovf, old, new)
+            bad, gstate_out, gm = _guard_gate(guard_cfg, loss, grads, gstate,
+                                              any_ovf)
+            gate = lambda new, old: jnp.where(bad, old, new)
             params_out = jax.tree.map(gate, new_params, params)
             opt_out = jax.tree.map(gate, new_opt, opt_state)
-            m.update(loss=loss, acc=acc, overflow=ovf,
+            m.update(loss=loss, acc=acc, overflow=ovf, **gm,
                      **sampled_counts(blocks))
-            return params_out, opt_out, m
+            return params_out, opt_out, gstate_out, m
 
-        @partial(jax.jit, donate_argnums=(0, 1))
-        def compute(params, opt_state, blocks, feats, labels):
-            return _epilogue(params, opt_state, blocks, feats, labels)
+        if guard_cfg is None:
+            @partial(jax.jit, donate_argnums=(0, 1))
+            def compute(params, opt_state, blocks, feats, labels):
+                p, o, _, m = _epilogue(params, opt_state, None, blocks,
+                                       feats, labels)
+                return p, o, m
 
-        @partial(jax.jit, donate_argnums=(0, 1))
-        def compute_gather(params, opt_state, features, labels_all, blocks):
-            feats, labels = _gather(features, labels_all, blocks)
-            return _epilogue(params, opt_state, blocks, feats, labels)
+            @partial(jax.jit, donate_argnums=(0, 1))
+            def compute_gather(params, opt_state, features, labels_all,
+                               blocks):
+                feats, labels = _gather(features, labels_all, blocks)
+                p, o, _, m = _epilogue(params, opt_state, None, blocks,
+                                       feats, labels)
+                return p, o, m
+        else:
+            @partial(jax.jit, donate_argnums=(0, 1, 2))
+            def compute(params, opt_state, gstate, blocks, feats, labels):
+                return _epilogue(params, opt_state, gstate, blocks, feats,
+                                 labels)
+
+            @partial(jax.jit, donate_argnums=(0, 1, 2))
+            def compute_gather(params, opt_state, gstate, features,
+                               labels_all, blocks):
+                feats, labels = _gather(features, labels_all, blocks)
+                return _epilogue(params, opt_state, gstate, blocks, feats,
+                                 labels)
 
         return StagedFns(sample=sample, gather=gather, compute=compute,
                          compute_gather=compute_gather)
@@ -673,8 +752,8 @@ class TrainEngine:
                 owner_mode="mod")
             return feats_in[None], f_ovf[None]
 
-        def compute_core(params, opt_state, err, labels, bnd, feats_in,
-                         f_ovf):
+        def compute_core(params, opt_state, err, gstate, labels, bnd,
+                         feats_in, f_ovf):
             blocks = [unwrap(b) for b in bnd["blocks"]]
             owned_rows = [r[0] for r in bnd["owned_rows"]]
             route_flags = bnd["route_flags"][0]
@@ -713,32 +792,38 @@ class TrainEngine:
             ])
             ovf = jax.lax.pmax(flags.astype(jnp.int32), axes) > 0
             any_ovf = jnp.any(ovf)
-            gate = lambda new, old: jnp.where(any_ovf, old, new)
+            # guard math on replicated values (pmean'd loss, all-reduced
+            # grads) so the flags — and the gate — agree on every device
+            gloss = jax.lax.pmean(local_loss, axes)
+            bad, gstate_out, gm = _guard_gate(guard_cfg, gloss, grads,
+                                              gstate, any_ovf)
+            gate = lambda new, old: jnp.where(bad, old, new)
             params_out = jax.tree.map(gate, new_params, params)
             opt_out = jax.tree.map(gate, new_opt, opt_state)
             err_out = jax.tree.map(gate, new_err, err)
             m.update(
-                loss=jax.lax.pmean(local_loss, axes),
+                loss=gloss,
                 acc=jax.lax.psum(correct, axes)
                 / jnp.maximum(total_valid, 1),
                 overflow=ovf,
+                **gm,
                 sampled_v=bnd["deep_n"][0],
                 sampled_e=jax.lax.psum(sum(b.num_edges for b in blocks),
                                        axes),
             )
-            return params_out, opt_out, err_out, m
+            return params_out, opt_out, err_out, gstate_out, m
 
-        def compute_body(params, opt_state, err, labels, bnd, feats_in_b,
-                         f_ovf_b):
-            return compute_core(params, opt_state, err, labels, bnd,
+        def compute_body(params, opt_state, err, gstate, labels, bnd,
+                         feats_in_b, f_ovf_b):
+            return compute_core(params, opt_state, err, gstate, labels, bnd,
                                 feats_in_b[0], f_ovf_b[0])
 
-        def compute_gather_body(params, opt_state, err, features, labels,
-                                bnd):
+        def compute_gather_body(params, opt_state, err, gstate, features,
+                                labels, bnd):
             feats_in, f_ovf = exchange_features(
                 features, bnd["blocks"][-1].next_seeds[0], axes, peer[L],
                 owner_mode="mod")
-            return compute_core(params, opt_state, err, labels, bnd,
+            return compute_core(params, opt_state, err, gstate, labels, bnd,
                                 feats_in, f_ovf)
 
         rep = P_()
@@ -762,25 +847,65 @@ class TrainEngine:
                 out_specs=(bnd_spec, vec),
                 check_rep=False)(features, bnd)
 
-        @partial(jax.jit, donate_argnums=(0, 1, 2))
-        def compute_fn(params, opt_state, err, labels, bnd, feats_in,
-                       f_ovf):
-            return shard_map(
-                compute_body, mesh=mesh,
-                in_specs=(rep, rep, rep, vec, bnd_spec, bnd_spec, vec),
-                out_specs=(rep, rep, rep, rep),
-                check_rep=False)(params, opt_state, err, labels, bnd,
-                                 feats_in, f_ovf)
+        guard_cfg = self.guard
+        if guard_cfg is None:
+            # unguarded bodies drop the (None) guard state inside the
+            # shard_map so no None pytree crosses the spec boundary and
+            # the historical 4-output signature is preserved
+            def compute_body_u(params, opt_state, err, labels, bnd,
+                               feats_in_b, f_ovf_b):
+                p, o, e, _, m = compute_body(params, opt_state, err, None,
+                                             labels, bnd, feats_in_b,
+                                             f_ovf_b)
+                return p, o, e, m
 
-        @partial(jax.jit, donate_argnums=(0, 1, 2))
-        def compute_gather_fn(params, opt_state, err, features, labels,
-                              bnd):
-            return shard_map(
-                compute_gather_body, mesh=mesh,
-                in_specs=(rep, rep, rep, row, vec, bnd_spec),
-                out_specs=(rep, rep, rep, rep),
-                check_rep=False)(params, opt_state, err, features, labels,
-                                 bnd)
+            def compute_gather_body_u(params, opt_state, err, features,
+                                      labels, bnd):
+                p, o, e, _, m = compute_gather_body(params, opt_state, err,
+                                                    None, features, labels,
+                                                    bnd)
+                return p, o, e, m
+
+            @partial(jax.jit, donate_argnums=(0, 1, 2))
+            def compute_fn(params, opt_state, err, labels, bnd, feats_in,
+                           f_ovf):
+                return shard_map(
+                    compute_body_u, mesh=mesh,
+                    in_specs=(rep, rep, rep, vec, bnd_spec, bnd_spec, vec),
+                    out_specs=(rep, rep, rep, rep),
+                    check_rep=False)(params, opt_state, err, labels, bnd,
+                                     feats_in, f_ovf)
+
+            @partial(jax.jit, donate_argnums=(0, 1, 2))
+            def compute_gather_fn(params, opt_state, err, features, labels,
+                                  bnd):
+                return shard_map(
+                    compute_gather_body_u, mesh=mesh,
+                    in_specs=(rep, rep, rep, row, vec, bnd_spec),
+                    out_specs=(rep, rep, rep, rep),
+                    check_rep=False)(params, opt_state, err, features,
+                                     labels, bnd)
+        else:
+            @partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+            def compute_fn(params, opt_state, err, gstate, labels, bnd,
+                           feats_in, f_ovf):
+                return shard_map(
+                    compute_body, mesh=mesh,
+                    in_specs=(rep, rep, rep, rep, vec, bnd_spec, bnd_spec,
+                              vec),
+                    out_specs=(rep, rep, rep, rep, rep),
+                    check_rep=False)(params, opt_state, err, gstate, labels,
+                                     bnd, feats_in, f_ovf)
+
+            @partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+            def compute_gather_fn(params, opt_state, err, gstate, features,
+                                  labels, bnd):
+                return shard_map(
+                    compute_gather_body, mesh=mesh,
+                    in_specs=(rep, rep, rep, rep, row, vec, bnd_spec),
+                    out_specs=(rep, rep, rep, rep, rep),
+                    check_rep=False)(params, opt_state, err, gstate,
+                                     features, labels, bnd)
 
         return StagedFns(sample=sample_fn, gather=gather_fn,
                          compute=compute_fn, compute_gather=compute_gather_fn)
@@ -798,8 +923,10 @@ class TrainEngine:
         L = spec.num_layers
         peer = spec.peer_caps
 
-        def body(params, opt_state, err, indptr, indices, features, labels,
-                 seeds, salts):
+        guard_cfg = self.guard
+
+        def body(params, opt_state, err, gstate, indptr, indices, features,
+                 labels, seeds, salts):
             graph_l = Graph(indptr=indptr[0], indices=indices[0])
             v_local = features.shape[0]
             my_part = _flat_axis_index(mesh, axes)
@@ -861,25 +988,36 @@ class TrainEngine:
 
             ovf = collect_flags(h_ovfs)
             any_ovf = jnp.any(ovf)
-            gate = lambda new, old: jnp.where(any_ovf, old, new)
+            # guard math on replicated values (pmean'd loss, all-reduced
+            # grads) so the flags — and the gate — agree on every device
+            gloss = jax.lax.pmean(local_loss, axes)
+            bad, gstate_out, gm = _guard_gate(guard_cfg, gloss, grads,
+                                              gstate, any_ovf)
+            gate = lambda new, old: jnp.where(bad, old, new)
             params_out = jax.tree.map(gate, new_params, params)
             opt_out = jax.tree.map(gate, new_opt, opt_state)
             err_out = jax.tree.map(gate, new_err, err)
             m.update(
-                loss=jax.lax.pmean(local_loss, axes),
+                loss=gloss,
                 acc=jax.lax.psum(correct, axes)
                 / jnp.maximum(total_valid, 1),
                 overflow=ovf,
+                **gm,
                 sampled_v=jax.lax.psum(deep_n, axes),
                 sampled_e=jax.lax.psum(sum(b.num_edges for b in blocks),
                                        axes),
             )
-            return params_out, opt_out, err_out, m, tuple(frontiers)
+            return params_out, opt_out, err_out, gstate_out, m, \
+                tuple(frontiers)
 
         rep = P_()
         ax = self._ax_spec()
         front_specs = tuple(P_(ax) for _ in range(L + 1))
-        if train:
+        if train and guard_cfg is not None:
+            in_specs = (rep, rep, rep, rep, P_(ax, None), P_(ax, None),
+                        P_(ax, None), P_(ax), P_(ax), rep)
+            out_specs = (rep, rep, rep, rep, rep, front_specs)
+        elif train:
             in_specs = (rep, rep, rep, P_(ax, None), P_(ax, None),
                         P_(ax, None), P_(ax), P_(ax), rep)
             out_specs = (rep, rep, rep, rep, front_specs)
@@ -889,25 +1027,50 @@ class TrainEngine:
             out_specs = (P_(ax), P_(ax, None), rep)
 
         if train:
-            @partial(jax.jit, donate_argnums=(0, 1, 2))
-            def step(params, opt_state, err, indptr, indices, features,
-                     labels, seeds, key):
+            if guard_cfg is None:
+                def train_body(params, opt_state, err, indptr, indices,
+                               features, labels, seeds, salts):
+                    p, o, e, _, m, fronts = body(
+                        params, opt_state, err, None, indptr, indices,
+                        features, labels, seeds, salts)
+                    return p, o, e, m, fronts
+
+                @partial(jax.jit, donate_argnums=(0, 1, 2))
+                def step(params, opt_state, err, indptr, indices, features,
+                         labels, seeds, key):
+                    salts = spec.salts(key)
+                    sharded = shard_map(
+                        train_body, mesh=mesh, in_specs=in_specs,
+                        out_specs=out_specs, check_rep=False)
+                    p, o, e, m, fronts = sharded(params, opt_state, err,
+                                                 indptr, indices, features,
+                                                 labels, seeds, salts)
+                    m["frontiers"] = fronts
+                    return p, o, e, m
+
+                return step
+
+            @partial(jax.jit, donate_argnums=(0, 1, 2, 3))
+            def gstep(params, opt_state, err, gstate, indptr, indices,
+                      features, labels, seeds, key):
                 salts = spec.salts(key)
                 sharded = shard_map(
-                    body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                    check_rep=False)
-                p, o, e, m, fronts = sharded(params, opt_state, err, indptr,
-                                             indices, features, labels,
-                                             seeds, salts)
+                    body, mesh=mesh, in_specs=in_specs,
+                    out_specs=out_specs, check_rep=False)
+                p, o, e, g, m, fronts = sharded(params, opt_state, err,
+                                                gstate, indptr, indices,
+                                                features, labels, seeds,
+                                                salts)
                 m["frontiers"] = fronts
-                return p, o, e, m
+                return p, o, e, g, m
 
-            return step
+            return gstep
 
         def infer_body(params, indptr, indices, features, seeds, salts):
-            return body(params, None, None, indptr, indices, features,
-                        jnp.zeros((features.shape[0],), jnp.int32), seeds,
-                        salts)
+            out = body(params, None, None, None, indptr, indices, features,
+                       jnp.zeros((features.shape[0],), jnp.int32), seeds,
+                       salts)
+            return out
 
         @jax.jit
         def infer(params, indptr, indices, features, seeds, key):
@@ -925,20 +1088,50 @@ class TrainEngine:
 
     def _dispatch(self, params, state: EngineState, data: EngineData, seeds,
                   key):
+        self.dispatches += 1
         if self.mesh is None:
-            params, opt, m = self.step_fn(params, state.opt, data.graph,
-                                          data.features, data.labels, seeds,
-                                          key)
-            return params, EngineState(opt=opt, err=state.err), m
+            if self.guard is None:
+                params, opt, m = self.step_fn(params, state.opt, data.graph,
+                                              data.features, data.labels,
+                                              seeds, key)
+                return params, EngineState(opt=opt, err=state.err), m
+            params, opt, g, m = self.step_fn(params, state.opt, state.guard,
+                                             data.graph, data.features,
+                                             data.labels, seeds, key)
+            return params, EngineState(opt=opt, err=state.err, guard=g), m
         if seeds.shape[0] % self.num_parts:
             raise ValueError(
                 f"global seed batch {seeds.shape[0]} must divide over "
                 f"{self.num_parts} devices (pad with pad_seeds)")
-        params, opt, err, m = self.step_fn(params, state.opt, state.err,
-                                           data.indptr, data.indices,
-                                           data.features, data.labels,
-                                           seeds, key)
-        return params, EngineState(opt=opt, err=err), m
+        if self.guard is None:
+            params, opt, err, m = self.step_fn(params, state.opt, state.err,
+                                               data.indptr, data.indices,
+                                               data.features, data.labels,
+                                               seeds, key)
+            return params, EngineState(opt=opt, err=err), m
+        params, opt, err, g, m = self.step_fn(params, state.opt, state.err,
+                                              state.guard, data.indptr,
+                                              data.indices, data.features,
+                                              data.labels, seeds, key)
+        return params, EngineState(opt=opt, err=err, guard=g), m
+
+    def _read_overflow(self, m):
+        """The ONE place step metrics' overflow flags are read for the
+        ledger/replay protocol — and therefore the ``overflow_storm``
+        injection site: a firing storm replaces the device flags with
+        all-TRUE, driving the grow/replay surface exactly as a real
+        persistent overflow would."""
+        flags = m["overflow"]
+        if self.inject is not None and self.inject.armed("overflow_storm"):
+            if self.inject.fires("overflow_storm", self._ovf_reads) is not None:
+                flags = jnp.ones_like(flags)
+        self._ovf_reads += 1
+        return flags
+
+    def reset_protocol(self):
+        """Drop the in-flight overflow window (the guardrail's rollback
+        path: pending entries describe a discarded trajectory)."""
+        self._ledger = OverflowLedger(self.stats, depth=self._ledger.depth)
 
     def grow(self):
         """Double every static cap (LayerCaps + per-peer all-to-all) and
@@ -960,7 +1153,7 @@ class TrainEngine:
         THIS batch; replay metrics land in :attr:`replayed`."""
         params, state, m = self._dispatch(params, state, data, seeds, key)
         due = self._ledger.record((seeds, key, tag, self.sampler),
-                                  m["overflow"])
+                                  self._read_overflow(m))
         if due is not None:
             params, state, _ = self._replay(params, state, data, *due)
         return params, state, m
@@ -976,18 +1169,24 @@ class TrainEngine:
         return self._replay(params, state, data, *due)
 
     def _replay(self, params, state, data, seeds, key, tag, sampler_then):
-        for _ in range(self.max_replay_retries + 1):
-            if self.sampler is sampler_then:
+        box = {"params": params, "state": state, "then": sampler_then}
+
+        def attempt(_i):
+            if self.sampler is box["then"]:
                 self.stats.overflow_retries += 1
                 self.grow()
-            params, state, m = self._dispatch(params, state, data, seeds,
-                                              key)
+            p, s, m = self._dispatch(box["params"], box["state"], data,
+                                     seeds, key)
+            box["params"], box["state"] = p, s
             self.replayed.append((tag, m))
-            if not bool(jnp.any(m["overflow"])):
-                return params, state, m
-            sampler_then = self.sampler
-        raise SamplingOverflowError(
-            "sampling overflow persisted after cap doubling")
+            if bool(jnp.any(self._read_overflow(m))):
+                box["then"] = self.sampler
+                return None
+            return (p, s, m)
+
+        return RetryPolicy(self.max_replay_retries).run(
+            attempt, error=SamplingOverflowError,
+            describe="sampling overflow persisted after cap doubling")
 
     def infer(self, params, data: EngineData, seeds, key):
         """Fused inference through the engine (see :attr:`infer_fn`)."""
@@ -1012,16 +1211,24 @@ class TrainEngine:
         Returns ``(logits, grows)`` — ``grows`` > 0 tells the caller
         the dispatch paid one or more fresh compiles (latency
         accounting must tag, not fold, that time)."""
-        grows = 0
-        for _ in range(max_retries + 1):
+        grows = {"n": 0}
+
+        def attempt(_i):
             out = self.infer(params, data, seeds, key)
-            if not bool(jnp.any(out[-1])):    # overflow flags, both paths
-                return (out[0] if self.mesh is None else out), grows
+            if bool(jnp.any(out[-1])):    # overflow flags, both paths
+                return None
+            return out
+
+        def escalate(_i):
             self.grow()
             self.stats.overflow_retries += 1
-            grows += 1
-        raise SamplingOverflowError(
-            "sampling overflow persisted after cap doubling while serving")
+            grows["n"] += 1
+
+        out = RetryPolicy(max_retries).run(
+            attempt, grow=escalate, error=SamplingOverflowError,
+            describe="sampling overflow persisted after cap doubling "
+                     "while serving")
+        return (out[0] if self.mesh is None else out), grows["n"]
 
     # ------------------------------------------------------------------
     # AOT lowering support (launch/perf.py roofline accounting)

@@ -29,17 +29,25 @@ class Preemptor:
             raise SimulatedPreemption(f"preempted at step {step}")
 
 
-def run_with_restarts(job: Callable[[], dict], max_restarts: int = 3) -> dict:
+def run_with_restarts(job: Callable[[], dict], max_restarts: int = 3,
+                      restartable: tuple = (SimulatedPreemption,)) -> dict:
     """Run ``job`` (which auto-resumes from its checkpoint dir), restarting
-    on simulated preemption. Returns the final job result and the number
-    of restarts it took."""
+    on any exception in ``restartable``. Returns the final job result and
+    the number of restarts it took.
+
+    ``restartable`` defaults to preemption only; a supervisor that also
+    wants process-level restart on e.g. a torn-checkpoint
+    :class:`~repro.runtime.checkpoint.CheckpointCorruptError` or an
+    exhausted :class:`~repro.runtime.guard.GuardFault` widens it —
+    anything NOT in the tuple still fails fast, so a deterministic bug
+    never turns into a restart loop."""
     restarts = 0
     while True:
         try:
             out = job()
             out["restarts"] = restarts
             return out
-        except SimulatedPreemption:
+        except restartable:
             restarts += 1
             if restarts > max_restarts:
                 raise

@@ -1,0 +1,272 @@
+"""Guardrail runtime: NaN/Inf + loss-spike detection with quarantine /
+checkpoint-rollback recovery, and the one shared :class:`RetryPolicy`
+behind every bounded recovery loop in the repo.
+
+The detector follows the engine's async ``OverflowLedger`` pattern
+(docs/pipeline.md): the fused train step computes a tiny device-side
+flag vector — ``[nonfinite, spike]`` — alongside the update, *gates*
+the parameter/optimizer/EMA update off when a flag fires (a bad batch
+is a device-side no-op, exactly like an overflowed one), and returns
+the flags as a device array in the step metrics. The host polls the
+flags one step late, by which time the program has retired, so a clean
+run pays ZERO extra host syncs and ZERO extra program dispatches
+(tests/test_guard.py proves both). Only when a flag fires does the
+host act:
+
+``quarantine``
+    Re-draw the batch under a fresh ``fold_in`` salt (the corruption
+    may be sample-determined — a pathological frontier) and re-dispatch;
+    bounded by the retry policy, escalating to rollback when re-draws
+    keep faulting.
+
+``rollback``
+    Restore the last *verified* checkpoint (``checkpoint.latest_good_
+    step`` — CRC-checked, so a torn write is skipped to the previous
+    good step) and resume deterministically: the trainer's per-step
+    keys are ``fold_in(base, step)`` and its batches are
+    ``SeedBatches.at(step)``, both pure functions of the step index, so
+    the replayed trajectory is bit-identical to an unfaulted run once
+    the (transient) fault stops firing.
+
+Spike detection keeps a loss EMA in a ``{"ema", "steps"}`` state dict
+that rides in :class:`~repro.runtime.engine.EngineState` (and therefore
+in checkpoints): a batch whose loss exceeds ``spike_factor`` x the EMA
+after ``warmup`` clean batches is quarantined before its update lands.
+The EMA never absorbs a flagged or overflowed batch.
+
+Numerically-delicate samplers to come (GraphSAINT normalization, bandit
+logits — ROADMAP) ride on this unchanged: anything that turns the loss
+or a gradient nonfinite, or detonates the loss, is caught by the same
+two flags regardless of which estimator produced it.
+
+This module is import-light by design (jax + numpy only): it sits
+below ``data.gnn_loader`` and ``runtime.engine`` in the import graph so
+both can share :class:`RetryPolicy` without a cycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Deque, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from collections import deque
+
+
+class GuardFault(RuntimeError):
+    """A guarded training run could not be healed: quarantine re-draws
+    and checkpoint rollbacks both exhausted their retry budgets while
+    the fault kept firing."""
+
+
+# ----------------------------------------------------------------------
+# the one shared retry policy
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded, deterministic retry schedule — the ONE loop shape every
+    recovery surface uses (docs/robustness.md): eager sampling retry
+    (``sample_with_retry``), the engine's async overflow replay
+    (``TrainEngine._replay``), serving retry (``infer_with_retry``,
+    ``ServingDriver._infer_batch``), and the guardrail's quarantine /
+    rollback escalation.
+
+    ``max_retries`` bounds the retries AFTER the first attempt, so a
+    surface makes at most ``max_retries + 1`` attempts. ``grow`` is the
+    surface's escalation action (cap doubling, salt re-draw, checkpoint
+    rollback); it runs after every failed attempt, so cap growth stays
+    logarithmic and the schedule is a pure function of the attempt
+    index — no randomized backoff, every retry trace is replayable.
+    """
+    max_retries: int = 3
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+
+    def run(self, attempt: Callable[[int], Any], *,
+            grow: Optional[Callable[[int], None]] = None,
+            error: type = RuntimeError,
+            describe: str = "retry budget exhausted"):
+        """Run ``attempt(i)`` until it returns non-None (the result) or
+        the budget is spent, calling ``grow(i)`` after each failure.
+        Raises ``error(describe)`` on exhaustion."""
+        for i in range(self.max_retries + 1):
+            out = attempt(i)
+            if out is not None:
+                return out
+            if grow is not None:
+                grow(i)
+        raise error(describe)
+
+
+# ----------------------------------------------------------------------
+# device side: the traced guard update
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GuardConfig:
+    """Static configuration of the traced guard (hashable: it is closed
+    over by the jitted step).
+
+    mode: ``quarantine`` re-draws a flagged batch under a fresh salt
+        (escalating to rollback when re-draws keep faulting);
+        ``rollback`` goes straight to the last good checkpoint.
+    spike_factor: loss > factor * EMA flags a spike (after warmup).
+    warmup: clean batches the EMA must absorb before spike detection
+        arms — early-training loss is legitimately volatile.
+    ema_beta: EMA decay per clean batch.
+    max_quarantine: fresh-salt re-draws per flagged batch.
+    max_rollbacks: checkpoint rollbacks per run before
+        :class:`GuardFault`.
+    """
+    mode: str = "quarantine"
+    spike_factor: float = 4.0
+    warmup: int = 5
+    ema_beta: float = 0.9
+    max_quarantine: int = 2
+    max_rollbacks: int = 3
+
+    def __post_init__(self):
+        if self.mode not in ("quarantine", "rollback"):
+            raise ValueError(f"guard mode must be 'quarantine' or "
+                             f"'rollback', got {self.mode!r}")
+        if self.spike_factor <= 1.0:
+            raise ValueError("spike_factor must exceed 1.0")
+
+    def quarantine_policy(self) -> RetryPolicy:
+        return RetryPolicy(self.max_quarantine)
+
+    def rollback_policy(self) -> RetryPolicy:
+        return RetryPolicy(self.max_rollbacks)
+
+
+def init_guard_state():
+    """Device-side guard state: the loss EMA and the count of clean
+    batches it has absorbed. Rides in ``EngineState.guard`` (and in
+    checkpoints) so spike detection survives restore/rollback."""
+    return {"ema": jnp.float32(0.0), "steps": jnp.int32(0)}
+
+
+def guard_update(cfg: GuardConfig, loss, grads, gstate, suppress):
+    """The traced guard half-step: detect, and advance the EMA.
+
+    Returns ``(flags, gstate')`` where ``flags`` is ``bool[2]`` =
+    ``[nonfinite, spike]``. ``suppress`` (the batch's overflow flag)
+    keeps an overflowed no-op batch out of both detection and the EMA.
+    Cost: one scalar reduction per gradient leaf — no host interaction,
+    no extra outputs beyond the 2-element flag vector.
+    """
+    total = loss
+    for g in jax.tree.leaves(grads):
+        total = total + jnp.sum(g).astype(jnp.float32)
+    nonfinite = ~jnp.isfinite(total)
+    steps, ema = gstate["steps"], gstate["ema"]
+    armed = steps >= cfg.warmup
+    spike = armed & jnp.isfinite(loss) & (loss > cfg.spike_factor * ema)
+    bad = nonfinite | spike
+    absorb = ~(bad | suppress)
+    ema_new = jnp.where(
+        steps == 0, loss,
+        cfg.ema_beta * ema + (1.0 - cfg.ema_beta) * loss)
+    gstate_out = {
+        "ema": jnp.where(absorb, ema_new, ema),
+        "steps": jnp.where(absorb, steps + 1, steps),
+    }
+    flags = jnp.stack([nonfinite, spike])
+    flags = jnp.where(suppress, jnp.zeros_like(flags), flags)
+    return flags, gstate_out
+
+
+# ----------------------------------------------------------------------
+# host side: the polling window + recovery bookkeeping
+# ----------------------------------------------------------------------
+
+@dataclasses.dataclass
+class GuardStats:
+    quarantines: int = 0          # fresh-salt re-draw dispatches
+    rollbacks: int = 0            # checkpoint restores
+    nonfinite_batches: int = 0    # flagged [nonfinite]
+    spike_batches: int = 0        # flagged [spike]
+
+
+@dataclasses.dataclass
+class _Watched:
+    """One dispatched batch in the guard window."""
+    step: int
+    seeds: Any
+    key: Any
+    flags: Any    # device bool[2] from the step metrics
+
+
+class GuardRail:
+    """Host-side poller for the device guard flags.
+
+    Mirrors the :class:`~repro.data.gnn_loader.OverflowLedger` protocol:
+    ``record`` a batch's flags at dispatch (or retirement, on the
+    pipelined path — retirement is FIFO so the lag discipline is
+    identical), and the oldest batch is polled only once a newer one
+    sits on top of it — by then its program has retired and reading the
+    2-element flag array costs nothing. A clean run therefore never
+    blocks the host. ``flush`` drains the window (end of run, or before
+    a checkpoint is persisted so a flagged batch is healed before its
+    params are saved).
+
+    The rail only *detects*; recovery (re-draw / rollback) is executed
+    by the owner of the training loop, which has the checkpoint dir and
+    the batch schedule. See ``runtime.trainer.train_gnn``.
+    """
+
+    def __init__(self, cfg: GuardConfig, stats: Optional[GuardStats] = None,
+                 depth: int = 1):
+        if depth < 1:
+            raise ValueError(f"guard window depth must be >= 1, got {depth}")
+        self.cfg = cfg
+        self.stats = stats or GuardStats()
+        self.depth = depth
+        self._window: Deque[_Watched] = deque()
+
+    def record(self, step: int, seeds, key, flags) -> Optional[_Watched]:
+        """Register a dispatched batch. Returns the oldest batch that
+        fell out of the window if it was flagged (the caller recovers
+        it), else None."""
+        self._window.append(_Watched(step, seeds, key, flags))
+        if len(self._window) > self.depth:
+            return self._polled(self._window.popleft())
+        return None
+
+    def flush(self) -> Optional[_Watched]:
+        """Poll every still-pending batch, oldest first; returns the
+        first flagged one (callers re-invoke until None)."""
+        while self._window:
+            due = self._polled(self._window.popleft())
+            if due is not None:
+                return due
+        return None
+
+    def reset(self) -> None:
+        """Drop the window without polling — after a rollback the
+        pending entries describe a discarded trajectory."""
+        self._window.clear()
+
+    def _polled(self, w: _Watched) -> Optional[_Watched]:
+        flags = np.asarray(w.flags)
+        if not flags.any():
+            return None
+        if flags[0]:
+            self.stats.nonfinite_batches += 1
+        if flags[-1]:
+            self.stats.spike_batches += 1
+        return w
+
+
+def quarantine_key(key, attempt: int):
+    """The fresh-salt schedule for a quarantined batch: deterministic in
+    (original key, attempt), disjoint from the trainer's per-step keys
+    (which are ``fold_in(base, step)`` of the *base* key, never of a
+    step key)."""
+    return jax.random.fold_in(key, 0x51A7 + attempt)

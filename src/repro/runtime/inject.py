@@ -1,0 +1,213 @@
+"""Deterministic, seedable fault injection at every trust boundary.
+
+The point of the guardrail runtime (docs/robustness.md) is that every
+recovery path is CI-provable, not hoped-for. This module is the proving
+harness: a registry of named injectors, each wired into exactly one
+trust boundary of the runtime, firing at a declared step index and
+consuming a declared count — a pure function of the call sequence, so a
+faulted run is replayable bit-for-bit and a *recovered* run can be
+compared against an unfaulted one.
+
+Spec grammar (``--inject`` on the launchers, or ``REPRO_INJECT``)::
+
+    spec      := site [ "@" at ] [ ":" count ] [ "=" param ]
+    plan      := spec ("," spec)*
+
+    nan_grad@5            NaN-poison batch 5's features (NaN loss+grads)
+    corrupt_feats@4=1e8   scale batch 4's features (loss spike)
+    overflow_storm@3:2    force overflow flags TRUE for 2 polls from batch 3
+    torn_ckpt@1           truncate arrays.npz of the 2nd checkpoint write
+    stall_stage@2=0.25    sleep 0.25s in the firing stage dispatch
+
+``at`` is a site-local index — the trainer's global step for the batch
+injectors, the save ordinal for the checkpoint injectors, the batch
+ordinal for the serving injectors. A spec fires when the site is
+queried with ``index >= at`` and consumes one count per firing query.
+
+Registered sites (each names the trust boundary it perturbs):
+
+==================  ===================================================
+``nan_grad``        train dispatch: batch features x NaN -> nonfinite
+                    loss AND gradients (guard flag [nonfinite])
+``corrupt_feats``   train dispatch: batch features x ``param``
+                    (default 1e8) -> loss spike (guard flag [spike])
+``corrupt_labels``  train dispatch: batch labels rotated one class —
+                    silent-corruption probe; the spike flag catches it
+                    once trained loss sits below corrupted-label loss
+``overflow_storm``  overflow-flag read: force the stacked flags TRUE
+                    for ``count`` consecutive polls — drives the
+                    grow/replay retry surface to (and past) exhaustion
+``torn_ckpt``       checkpoint publish: truncate ``arrays.npz`` after
+                    the write, before the atomic rename — a published
+                    but corrupt step the CRC verifier must skip
+``ckpt_error``      async save thread: raise OSError inside the daemon
+                    writer — must surface on ``wait()``/next ``save()``
+``stall_stage``     stage dispatch (pipeline sample / serving infer):
+                    sleep ``param`` seconds — exercises deadline
+                    load-shedding and proves a stall corrupts nothing
+``cache_corrupt``   serving cache state: NaN-poison the feature-cache
+                    value table before the firing batch — the driver
+                    must detect nonfinite logits, retry cache-off, and
+                    fall back to cache-off mode on repeated faults
+``pump_death``      serving background loop: kill the pump thread with
+                    a non-Exception — the watchdog must restart it
+==================  ===================================================
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+from typing import Dict, List, Optional, Tuple
+
+ENV_VAR = "REPRO_INJECT"
+
+# site -> (trust boundary, default param) — the registry the parser
+# validates against; tests iterate it so an injector added here without
+# matrix coverage fails the fault-matrix completeness check
+SITES: Dict[str, Tuple[str, float]] = {
+    "nan_grad": ("train dispatch: NaN batch features", float("nan")),
+    "corrupt_feats": ("train dispatch: scaled batch features", 1e8),
+    "corrupt_labels": ("train dispatch: rotated batch labels", 1.0),
+    "overflow_storm": ("overflow-flag read: forced TRUE", 1.0),
+    "torn_ckpt": ("checkpoint publish: truncated arrays.npz", 0.5),
+    "ckpt_error": ("async checkpoint writer: raised OSError", 1.0),
+    "stall_stage": ("stage dispatch: injected sleep", 0.05),
+    "cache_corrupt": ("serving cache state: NaN value table", float("nan")),
+    "pump_death": ("serving pump thread: killed", 1.0),
+}
+
+
+class InjectedThreadDeath(BaseException):
+    """Raised by the ``pump_death`` injector. Deliberately NOT an
+    ``Exception``: it models a failure mode the pump loop's own handler
+    cannot see (segfaulting native code, an interpreter-level kill), so
+    it escapes the loop and the watchdog path is what must recover."""
+
+
+@dataclasses.dataclass
+class InjectorSpec:
+    """One armed injector: fires on queries with ``index >= at`` until
+    ``count`` firings are consumed."""
+    site: str
+    at: int = 2
+    count: int = 1
+    param: Optional[float] = None
+    fired: int = 0
+
+    @property
+    def effect(self) -> float:
+        return SITES[self.site][1] if self.param is None else self.param
+
+    @property
+    def exhausted(self) -> bool:
+        return self.fired >= self.count
+
+
+class FaultPlan:
+    """A parsed set of armed injectors, threaded explicitly into each
+    runtime surface (trainer, engine, pipeline driver, checkpoint
+    writer, serving driver). ``fires(site, index)`` is the single query
+    point: it returns the spec (consuming one count) when an armed
+    injector matches, else None. ``log`` records every firing as
+    ``(site, index)`` so tests assert the fault actually happened —
+    a recovery test whose injector never fired proves nothing."""
+
+    def __init__(self, specs: List[InjectorSpec]):
+        self.specs = specs
+        self.log: List[Tuple[str, int]] = []
+
+    def __bool__(self) -> bool:
+        return bool(self.specs)
+
+    def fires(self, site: str, index: int) -> Optional[InjectorSpec]:
+        for s in self.specs:
+            if s.site == site and not s.exhausted and index >= s.at:
+                s.fired += 1
+                self.log.append((site, index))
+                return s
+        return None
+
+    def armed(self, site: str) -> bool:
+        """Whether any non-exhausted injector targets ``site`` (lets
+        hot paths skip poisoning work entirely when nothing is armed)."""
+        return any(s.site == site and not s.exhausted for s in self.specs)
+
+    def all_fired(self) -> bool:
+        return all(s.exhausted for s in self.specs)
+
+    def describe(self) -> List[str]:
+        return [f"{s.site}@{s.at}:{s.count}"
+                + ("" if s.param is None else f"={s.param:g}")
+                + f" [{s.fired}/{s.count} fired]" for s in self.specs]
+
+
+def parse(text: Optional[str]) -> Optional[FaultPlan]:
+    """Parse a plan spec string (see module docstring). Returns None
+    for empty/None input; raises ValueError on an unknown site or a
+    malformed spec so a typo'd ``--inject`` fails loudly at launch."""
+    if not text or not text.strip():
+        return None
+    specs = []
+    for raw in text.split(","):
+        raw = raw.strip()
+        if not raw:
+            continue
+        body, param = raw.split("=", 1) if "=" in raw else (raw, None)
+        body, count = body.split(":", 1) if ":" in body else (body, None)
+        site, at = body.split("@", 1) if "@" in body else (body, None)
+        site = site.strip()
+        if site not in SITES:
+            raise ValueError(
+                f"unknown injector {site!r}; registered sites: "
+                f"{', '.join(sorted(SITES))}")
+        try:
+            spec = InjectorSpec(
+                site=site,
+                at=int(at) if at is not None else 2,
+                count=int(count) if count is not None else 1,
+                param=float(param) if param is not None else None)
+        except ValueError as e:
+            raise ValueError(f"malformed injector spec {raw!r}: {e}") from e
+        if spec.at < 0 or spec.count < 1:
+            raise ValueError(f"injector spec {raw!r}: at must be >= 0 "
+                             "and count >= 1")
+        specs.append(spec)
+    return FaultPlan(specs) if specs else None
+
+
+def plan_from_env() -> Optional[FaultPlan]:
+    """The launcher-facing entry point: parse ``$REPRO_INJECT``."""
+    return parse(os.environ.get(ENV_VAR))
+
+
+# ----------------------------------------------------------------------
+# batch poisoning (the train-dispatch trust boundary)
+# ----------------------------------------------------------------------
+
+def poison_batch(plan: Optional[FaultPlan], step: int, data):
+    """Apply any armed train-dispatch injector to this step's engine
+    inputs, returning a (possibly poisoned) ``EngineData``. Poisoning
+    replaces the features/labels array for ONE dispatch only — the
+    canonical arrays in ``data`` are never mutated. Sharding is
+    preserved (elementwise ops on the staged arrays), so the poisoned
+    dispatch reuses the compiled program on every topology."""
+    if plan is None:
+        return data
+    import dataclasses as _dc
+
+    import jax.numpy as jnp
+
+    out = data
+    spec = plan.fires("nan_grad", step)
+    if spec is not None:
+        out = _dc.replace(out, features=out.features
+                          * jnp.float32(float("nan")))
+    spec = plan.fires("corrupt_feats", step)
+    if spec is not None:
+        out = _dc.replace(out, features=out.features
+                          * jnp.asarray(spec.effect, out.features.dtype))
+    spec = plan.fires("corrupt_labels", step)
+    if spec is not None:
+        n_cls = int(out.labels.max()) + 1 if out.labels.size else 1
+        out = _dc.replace(out, labels=(out.labels + 1) % max(n_cls, 1))
+    return out

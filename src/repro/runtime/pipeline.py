@@ -105,6 +105,7 @@ class PipelinedEngine:
         # parity with the serial trace (see module docstring)
         self._ledger = OverflowLedger(engine.stats, depth=1)
         self._queue: deque = deque()
+        self._sample_dispatches = 0
 
     @property
     def in_flight(self) -> int:
@@ -114,6 +115,15 @@ class PipelinedEngine:
     # -- stage dispatch -------------------------------------------------
 
     def _sample(self, data: EngineData, seeds, key) -> Tuple[Any, Any]:
+        inj = self.engine.inject
+        if inj is not None and inj.armed("stall_stage"):
+            spec = inj.fires("stall_stage", self._sample_dispatches)
+            if spec is not None:
+                # a stalled sample stage: the pipeline must absorb the
+                # bubble without corrupting the FIFO retire order
+                import time
+                time.sleep(spec.effect)
+        self._sample_dispatches += 1
         st = self.engine.staged
         if self.engine.mesh is None:
             return st.sample(data.graph, seeds, key), None
@@ -130,27 +140,53 @@ class PipelinedEngine:
     def _compute(self, params, state: EngineState, data: EngineData,
                  ent: _InFlight):
         st = self.engine.staged
+        self.engine.dispatches += 1
+        guarded = self.engine.guard is not None
         if self.engine.mesh is None:
             if self.mode == "full":
                 feats, labels = ent.gathered
-                params, opt, m = st.compute(params, state.opt, ent.blocks,
-                                            feats, labels)
+                if guarded:
+                    params, opt, g, m = st.compute(params, state.opt,
+                                                   state.guard, ent.blocks,
+                                                   feats, labels)
+                else:
+                    params, opt, m = st.compute(params, state.opt,
+                                                ent.blocks, feats, labels)
+                    g = state.guard
             else:
-                params, opt, m = st.compute_gather(params, state.opt,
-                                                   data.features, data.labels,
-                                                   ent.blocks)
-            return params, EngineState(opt=opt, err=state.err), m
+                if guarded:
+                    params, opt, g, m = st.compute_gather(
+                        params, state.opt, state.guard, data.features,
+                        data.labels, ent.blocks)
+                else:
+                    params, opt, m = st.compute_gather(
+                        params, state.opt, data.features, data.labels,
+                        ent.blocks)
+                    g = state.guard
+            return params, EngineState(opt=opt, err=state.err, guard=g), m
         if self.mode == "full":
             feats_in, f_ovf = ent.gathered
-            params, opt, err, m = st.compute(params, state.opt, state.err,
-                                             data.labels, ent.blocks,
-                                             feats_in, f_ovf)
+            if guarded:
+                params, opt, err, g, m = st.compute(
+                    params, state.opt, state.err, state.guard, data.labels,
+                    ent.blocks, feats_in, f_ovf)
+            else:
+                params, opt, err, m = st.compute(params, state.opt,
+                                                 state.err, data.labels,
+                                                 ent.blocks, feats_in, f_ovf)
+                g = state.guard
         else:
-            params, opt, err, m = st.compute_gather(params, state.opt,
-                                                    state.err, data.features,
-                                                    data.labels, ent.blocks)
+            if guarded:
+                params, opt, err, g, m = st.compute_gather(
+                    params, state.opt, state.err, state.guard,
+                    data.features, data.labels, ent.blocks)
+            else:
+                params, opt, err, m = st.compute_gather(
+                    params, state.opt, state.err, data.features,
+                    data.labels, ent.blocks)
+                g = state.guard
         m["frontiers"] = ent.extras
-        return params, EngineState(opt=opt, err=err), m
+        return params, EngineState(opt=opt, err=err, guard=g), m
 
     # -- driver protocol ------------------------------------------------
 
@@ -171,7 +207,7 @@ class PipelinedEngine:
         params, state, m = self._compute(params, state, data, ent)
         done.append((ent.tag, m))
         due = self._ledger.record((ent.seeds, ent.key, ent.tag, ent.sampler),
-                                  m["overflow"])
+                                  self.engine._read_overflow(m))
         if due is not None:
             params, state, _ = self.engine._replay(params, state, data, *due)
             self._invalidate(data)
@@ -234,3 +270,12 @@ class PipelinedEngine:
                 break
             params, state, _ = self.engine._replay(params, state, data, *due)
         return params, state, done
+
+    def reset(self):
+        """Drop every in-flight batch and the ledger window without
+        retiring them (the guardrail's rollback path: the queued samples
+        belong to a discarded trajectory; the trainer re-feeds from the
+        restored step)."""
+        self._queue.clear()
+        self._ledger = OverflowLedger(self.engine.stats, depth=1)
+        self.engine.reset_protocol()

@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.runtime.engine import EngineData, TrainEngine
+from repro.runtime.guard import RetryPolicy
 from repro.serving.batcher import (AdmissionError, Batch, Ticket, coalesce,
                                    scatter_back)
 from repro.serving.cache import HiddenCache, VertexCache
@@ -83,6 +84,13 @@ class ServingDriver:
         :class:`SamplingOverflowError` propagates to every ticket in
         the batch.
       seed: base of the per-batch salt schedule.
+      inject: optional :class:`~repro.runtime.inject.FaultPlan` arming
+        the serving trust boundaries (cache_corrupt / pump_death /
+        stall_stage — docs/robustness.md).
+      cache_fault_limit: nonfinite-logit faults under an enabled cache
+        before the driver falls back to cache-off mode for good.
+      watchdog_interval_s: how often the watchdog thread checks that
+        the background pump is still alive.
     """
 
     def __init__(self, engine: TrainEngine, params, data: EngineData, *,
@@ -90,7 +98,9 @@ class ServingDriver:
                  feature_cache: Optional[VertexCache] = None,
                  hidden_cache: Optional[HiddenCache] = None,
                  deadline_ms: Optional[float] = None,
-                 max_queue: int = 1024, max_grows: int = 4, seed: int = 0):
+                 max_queue: int = 1024, max_grows: int = 4, seed: int = 0,
+                 inject=None, cache_fault_limit: int = 2,
+                 watchdog_interval_s: float = 0.05):
         if engine.mesh is not None:
             raise NotImplementedError(
                 "the serving driver is single-host; shard the graph "
@@ -104,6 +114,9 @@ class ServingDriver:
         self.deadline_ms = deadline_ms
         self.max_queue = int(max_queue)
         self.max_grows = int(max_grows)
+        self.inject = inject
+        self.cache_fault_limit = int(cache_fault_limit)
+        self.watchdog_interval_s = float(watchdog_interval_s)
         self.stats = ServingStats()
         self._key = jax.random.key(seed)
         self._batch_index = 0
@@ -113,8 +126,11 @@ class ServingDriver:
         self._fc_state = None
         self._hc_state = None
         self._cache_gen = engine.generation
+        self._cache_faults = 0
         self._compiled_gens: set = set()
         self._thread: Optional[threading.Thread] = None
+        self._watchdog: Optional[threading.Thread] = None
+        self._pump_iter = 0
         self._stop = threading.Event()
         self._work = threading.Event()
         self._init_cache_state()
@@ -170,6 +186,17 @@ class ServingDriver:
                 self.stats.rejected += 1
                 raise AdmissionError(
                     f"queue full ({self.max_queue} pending) — backpressure")
+            # graceful degradation: under real queue pressure (a full
+            # batch already ahead), shed a deadlined request the warm
+            # latency profile says cannot be served in time — rejecting
+            # now beats dispatching a batch that times out anyway
+            if dl is not None and len(self._pending) >= self.batch_size:
+                est = self._estimated_wait_ms(len(self._pending))
+                if est is not None and est > dl:
+                    self.stats.shed += 1
+                    raise AdmissionError(
+                        f"load shed: estimated wait {est:.1f}ms exceeds "
+                        f"the {dl:g}ms deadline")
             self._rid += 1
             t = Ticket(rid=self._rid, seeds=seeds,
                        deadline_s=None if dl is None else now + dl / 1e3,
@@ -183,19 +210,58 @@ class ServingDriver:
         with self._lock:
             return len(self._pending)
 
+    def _estimated_wait_ms(self, pending_n: int) -> Optional[float]:
+        """Queue-drain estimate from the warm latency profile: batches
+        ahead of a new request x the warm p50. None until the profile
+        has at least one warm sample (never shed blind)."""
+        p50 = self.stats.percentile_ms(50)
+        if p50 is None:
+            return None
+        batches_ahead = -(-(pending_n + 1) // self.batch_size)
+        return batches_ahead * p50
+
     # ------------------------------------------------------------------
     # serving side
     # ------------------------------------------------------------------
 
+    def _apply_injectors(self):
+        """Serving trust boundaries of the fault-injection registry:
+        ``stall_stage`` sleeps in the dispatch path (deadline pressure),
+        ``cache_corrupt`` NaN-poisons the cache value tables (the
+        nonfinite-logit fallback path must recover)."""
+        inj = self.inject
+        if inj is None:
+            return
+        if inj.armed("stall_stage"):
+            spec = inj.fires("stall_stage", self._batch_index)
+            if spec is not None:
+                time.sleep(spec.effect)
+        if inj.armed("cache_corrupt") and (self._fc_state is not None
+                                           or self._hc_state is not None):
+            spec = inj.fires("cache_corrupt", self._batch_index)
+            if spec is not None:
+                def nan_poison(tree):
+                    return jax.tree.map(
+                        lambda x: (x * jnp.asarray(float("nan"), x.dtype)
+                                   if jnp.issubdtype(x.dtype, jnp.floating)
+                                   else x), tree)
+                if self._fc_state is not None:
+                    self._fc_state = nan_poison(self._fc_state)
+                if self._hc_state is not None:
+                    self._hc_state = nan_poison(self._hc_state)
+
     def _infer_batch(self, seeds_np: np.ndarray):
         """One dispatch of the (cache-aware) infer program, with the
-        grow-retry overflow protocol. Returns (logits np, compile_event,
-        cache_metrics)."""
+        grow-retry overflow protocol on the shared
+        :class:`~repro.runtime.guard.RetryPolicy`. Returns (logits np,
+        compile_event, cache_metrics)."""
         eng = self.engine
         seeds = jnp.asarray(seeds_np)
         self._batch_index += 1
         key = jax.random.fold_in(self._key, self._batch_index)
-        for attempt in range(self.max_grows + 1):
+        self._apply_injectors()
+
+        def attempt(_i):
             if eng.generation != self._cache_gen:
                 self._invalidate_caches()
                 self._cache_gen = eng.generation
@@ -203,25 +269,51 @@ class ServingDriver:
             cm = {}
             if self.feature_cache is None and self.hidden_cache is None:
                 logits, ovf = eng.infer(self.params, self.data, seeds, key)
+                fc2 = hc2 = None
             else:
                 fn = eng.cached_infer_fn(self.feature_cache,
                                          self.hidden_cache)
                 logits, ovf, fc2, hc2, cm = fn(
                     self.params, self.data.graph, self.data.features,
                     self._fc_state, self._hc_state, seeds, key)
-            if not bool(jnp.any(ovf)):
-                # commit cache state only for a clean (served) dispatch
-                if self.feature_cache is not None:
-                    self._fc_state = fc2
-                if self.hidden_cache is not None:
-                    self._hc_state = hc2
-                self._compiled_gens.add(eng.generation)
-                return np.asarray(logits), compile_event, cm
+            if bool(jnp.any(ovf)):
+                return None
+            # commit cache state only for a clean (served) dispatch
+            if self.feature_cache is not None:
+                self._fc_state = fc2
+            if self.hidden_cache is not None:
+                self._hc_state = hc2
+            self._compiled_gens.add(eng.generation)
+            return np.asarray(logits), compile_event, cm
+
+        def grow(_i):
             eng.grow()
             eng.stats.overflow_retries += 1
             self.stats.grow_events += 1
-        raise SamplingOverflowError(
-            "sampling overflow persisted after cap doubling while serving")
+
+        return RetryPolicy(self.max_grows).run(
+            attempt, grow=grow, error=SamplingOverflowError,
+            describe="sampling overflow persisted after cap doubling "
+                     "while serving")
+
+    def _recover_cache_fault(self, seeds_np: np.ndarray) -> np.ndarray:
+        """Nonfinite logits under an enabled cache: the device-resident
+        cache state is the prime suspect (bit-rot, a poisoned table).
+        Cold-restart the caches, re-serve THIS batch cache-off under the
+        same salt, and after ``cache_fault_limit`` faults disable the
+        caches for good — correct-but-slower beats fast-but-NaN."""
+        self.stats.nonfinite_batches += 1
+        self._invalidate_caches()
+        self._cache_faults += 1
+        if self._cache_faults >= self.cache_fault_limit:
+            self.feature_cache = None
+            self.hidden_cache = None
+            self._fc_state = self._hc_state = None
+            self.stats.cache_fallbacks += 1
+        key = jax.random.fold_in(self._key, self._batch_index)
+        logits, _ = self.engine.infer(self.params, self.data,
+                                      jnp.asarray(seeds_np), key)
+        return np.asarray(logits)
 
     def pump(self) -> int:
         """Serve at most one coalesced batch from the queue. Returns
@@ -239,13 +331,26 @@ class ServingDriver:
         t0 = time.perf_counter()
         try:
             logits, compile_event, cm = self._infer_batch(batch.seeds)
-        except SamplingOverflowError:
-            # resolve the batch's tickets before propagating, so no
-            # caller is left waiting on a request that cannot be served
+            if (not np.isfinite(logits).all()
+                    and (self.feature_cache is not None
+                         or self.hidden_cache is not None)):
+                logits = self._recover_cache_fault(batch.seeds)
+                compile_event = True  # the retry's timing is tainted
+        except Exception as e:
+            # no ticket is ever stranded: whatever the dispatch raised,
+            # every caller in the batch gets an "error" resolution and
+            # the cause lands in the stats before the loop continues
             now = time.monotonic()
             for t, _, _ in batch.parts:
                 t.resolve("error", now=now)
-            raise
+            self.stats.pump_errors += 1
+            self.stats.last_error = f"{type(e).__name__}: {e}"
+            if isinstance(e, SamplingOverflowError):
+                # cap exhaustion keeps its historical contract: the
+                # caller (or the watchdog, on the background loop)
+                # decides whether to continue
+                raise
+            return len(timed_out) + len(batch.parts)
         dt = time.perf_counter() - t0
         self.stats.record_batch(dt, batch.n_seeds, len(batch.parts),
                                 compile_event=compile_event)
@@ -274,19 +379,46 @@ class ServingDriver:
     def start(self) -> None:
         """Run the serving loop on a background thread until
         :meth:`stop` (a live endpoint; tests and the benchmark's
-        deterministic mode use :meth:`pump`/:meth:`drain` inline)."""
+        deterministic mode use :meth:`pump`/:meth:`drain` inline).
+        A watchdog thread restarts the pump if it dies — including
+        deaths the pump loop's own handler cannot catch (the
+        ``pump_death`` injector raises a BaseException to model a
+        native-code crash)."""
         if self._thread is not None:
             raise RuntimeError("driver already started")
         self._stop.clear()
 
         def loop():
             while not self._stop.is_set():
-                if self.pump() == 0:
+                inj = self.inject
+                if inj is not None and inj.armed("pump_death"):
+                    spec = inj.fires("pump_death", self._pump_iter)
+                    if spec is not None:
+                        from repro.runtime.inject import InjectedThreadDeath
+                        raise InjectedThreadDeath(
+                            f"pump killed at iteration {self._pump_iter}")
+                self._pump_iter += 1
+                try:
+                    served = self.pump()
+                except SamplingOverflowError:
+                    # tickets were already resolved as errors by pump();
+                    # the background loop keeps serving what it can
+                    continue
+                if served == 0:
                     self._work.clear()
                     self._work.wait(timeout=0.05)
 
+        def watchdog():
+            while not self._stop.wait(timeout=self.watchdog_interval_s):
+                if self._thread is not None and not self._thread.is_alive():
+                    self.stats.pump_restarts += 1
+                    self._thread = threading.Thread(target=loop, daemon=True)
+                    self._thread.start()
+
         self._thread = threading.Thread(target=loop, daemon=True)
         self._thread.start()
+        self._watchdog = threading.Thread(target=watchdog, daemon=True)
+        self._watchdog.start()
 
     def stop(self, drain: bool = True) -> None:
         if self._thread is None:
@@ -297,4 +429,6 @@ class ServingDriver:
         self._stop.set()
         self._work.set()
         self._thread.join()
+        self._watchdog.join()
         self._thread = None
+        self._watchdog = None

@@ -40,6 +40,17 @@ class ServingStats:
     seeds_served: int = 0       # valid seeds in warm (timed) batches
     grow_events: int = 0
     cache_invalidations: int = 0
+    # degradation accounting (docs/robustness.md): batch dispatches that
+    # raised (tickets resolved "error"), the last cause, watchdog pump
+    # restarts, deadlined requests shed at admission under queue
+    # pressure, nonfinite-logit batches under an enabled cache, and
+    # permanent cache-off fallbacks after repeated cache faults
+    pump_errors: int = 0
+    last_error: Optional[str] = None
+    pump_restarts: int = 0
+    shed: int = 0
+    nonfinite_batches: int = 0
+    cache_fallbacks: int = 0
     feat_hits: int = 0
     feat_misses: int = 0
     hidden_hits: int = 0
@@ -117,4 +128,15 @@ class ServingStats:
             out["max_served_age"] = self.max_served_age
         if self.cache_invalidations:
             out["cache_invalidations"] = self.cache_invalidations
+        if self.pump_errors:
+            out["pump_errors"] = self.pump_errors
+            out["last_error"] = self.last_error
+        if self.pump_restarts:
+            out["pump_restarts"] = self.pump_restarts
+        if self.shed:
+            out["shed"] = self.shed
+        if self.nonfinite_batches:
+            out["nonfinite_batches"] = self.nonfinite_batches
+        if self.cache_fallbacks:
+            out["cache_fallbacks"] = self.cache_fallbacks
         return out

@@ -67,3 +67,101 @@ def test_restore_corrupt_tmp_ignored(tmp_path):
     ck.save(str(tmp_path), 3, _tree())
     os.makedirs(os.path.join(tmp_path, "step_0000000009.tmp"))
     assert ck.latest_step(str(tmp_path)) == 3
+
+
+# ---------------------------------------------------------------------------
+# integrity: per-array CRC32 manifest (docs/robustness.md)
+# ---------------------------------------------------------------------------
+
+
+def test_integrity_manifest_written_and_verifies(tmp_path):
+    ck.save(str(tmp_path), 4, _tree())
+    m = ck.read_meta(str(tmp_path), 4)
+    assert set(m["integrity"]) == {"params///layers///0///w",
+                                   "params///layers///0///b@bf16",
+                                   "opt///step"}
+    ck.verify(str(tmp_path), 4)  # no raise
+
+
+def test_truncated_npz_detected_and_skipped(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 5, t)
+    ck.save(str(tmp_path), 10, t)
+    npz = os.path.join(tmp_path, "step_0000000010", "arrays.npz")
+    size = os.path.getsize(npz)
+    with open(npz, "r+b") as f:
+        f.truncate(size // 2)
+    with pytest.raises(ck.CheckpointCorruptError):
+        ck.verify(str(tmp_path), 10)
+    with pytest.raises(ck.CheckpointCorruptError):
+        ck.restore(str(tmp_path), 10, jax.tree.map(jnp.zeros_like, t))
+    # resume paths transparently skip the torn step to the previous good
+    assert ck.latest_good_step(str(tmp_path)) == 5
+    assert ck.latest_step(str(tmp_path)) == 5
+
+
+def test_bitflip_detected(tmp_path):
+    t = _tree()
+    ck.save(str(tmp_path), 7, t)
+    path = os.path.join(tmp_path, "step_0000000007", "arrays.npz")
+    with np.load(path) as z:
+        arrays = {k: z[k].copy() for k in z.files}
+    arr = arrays["params///layers///0///w"]
+    arr[0, 0] += 1.0
+    np.savez(path, **arrays)
+    with pytest.raises(ck.CheckpointCorruptError, match="CRC mismatch"):
+        ck.verify(str(tmp_path), 7)
+
+
+def test_pre_integrity_checkpoint_passes(tmp_path):
+    import json
+    ck.save(str(tmp_path), 3, _tree())
+    mp = os.path.join(tmp_path, "step_0000000003", "meta.json")
+    with open(mp) as f:
+        m = json.load(f)
+    del m["integrity"]
+    with open(mp, "w") as f:
+        json.dump(m, f)
+    ck.verify(str(tmp_path), 3)  # readability-only, no raise
+    assert ck.latest_good_step(str(tmp_path)) == 3
+
+
+def test_torn_ckpt_injector_skipped_on_resume(tmp_path):
+    from repro.runtime import inject as inject_lib
+
+    plan = inject_lib.parse("torn_ckpt@1")  # tear the SECOND save
+    t = _tree()
+    ck.save(str(tmp_path), 5, t, inject=plan)
+    ck.save(str(tmp_path), 10, t, inject=plan)
+    assert plan.all_fired()
+    assert ck.latest_steps(str(tmp_path)) == [5, 10]  # published...
+    assert ck.latest_step(str(tmp_path)) == 5         # ...but skipped
+
+
+# ---------------------------------------------------------------------------
+# AsyncSaver: daemon-thread failures surface on the training thread
+# ---------------------------------------------------------------------------
+
+
+def test_async_saver_error_surfaces_on_wait(tmp_path):
+    from repro.runtime import inject as inject_lib
+
+    saver = ck.AsyncSaver(str(tmp_path),
+                          inject=inject_lib.parse("ckpt_error@0"))
+    saver.save(10, _tree())
+    with pytest.raises(OSError, match="injected checkpoint write"):
+        saver.wait()
+    # the error is cleared once raised; the saver remains usable
+    saver.save(20, _tree())
+    saver.wait()
+    assert ck.latest_step(str(tmp_path)) == 20
+
+
+def test_async_saver_error_surfaces_on_next_save(tmp_path):
+    from repro.runtime import inject as inject_lib
+
+    saver = ck.AsyncSaver(str(tmp_path),
+                          inject=inject_lib.parse("ckpt_error@0"))
+    saver.save(10, _tree())
+    with pytest.raises(OSError, match="injected checkpoint write"):
+        saver.save(20, _tree())
